@@ -1,0 +1,60 @@
+"""Live-training micro-benchmarks on this host (real JAX steps, reduced
+configs): probe curve (paper's tuning phase on real hardware) and the
+masked-retune cost (beyond-paper: retune without recompile).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch, reduced_config
+from repro.core.allocator import solve
+from repro.core.speed_model import SpeedModel
+from repro.launch.train import HeteroTrainer, TrainerConfig
+
+
+def _trainer(steps=8, seq=32):
+    sm = SpeedModel(np.array([1.0, 2, 4, 8]), np.array([10.0, 18, 28, 30]))
+    plan = solve({"a": (1, sm), "b": (1, sm)}, 4096)
+    cfg = TrainerConfig(seq_len=seq, steps=steps, log_every=0,
+                        dataset_size=4096)
+    return HeteroTrainer(reduced_config(get_arch("deepseek-7b")), plan, cfg)
+
+
+def probe_curve() -> Tuple[List[Dict], float]:
+    """Real batchsize->speed probe of this CPU node (paper Fig. 1 procedure
+    on live hardware)."""
+    t = _trainer()
+    sm = t.probe_speed_model(batch_ladder=(1, 2, 4, 8), iters=2)
+    rows = [{"batch_size": int(b), "samples_per_s": round(float(s), 2)}
+            for b, s in zip(sm.batch_sizes, sm.speeds)]
+    return rows, float(sm.knee())
+
+
+def retune_cost() -> Tuple[List[Dict], float]:
+    """Wall-clock cost of a HyperTune retune under the masked-capacity
+    scheme: must be ~one step (no recompile, no epoch restart)."""
+    t = _trainer(steps=16)
+    t.run(4)                                   # compile + warm
+    healthy = [r.step_time for r in t.records[1:]]
+    from repro.launch.train import interference_report_fn
+    fn = interference_report_fn({"b": [(4, 10 ** 9, 0.4)]})
+    t.run(12, report_fn=fn)
+    retune_steps = [r for r in t.records if r.retune]
+    after = [r.step_time for r in t.records if r.step > 10]
+    compiles = t.step_fn._cache_size()
+    rows = [
+        {"metric": "mean_step_s_healthy", "value": round(np.mean(healthy), 4)},
+        {"metric": "mean_step_s_after_retune", "value": round(np.mean(after), 4)},
+        {"metric": "n_retunes", "value": len(retune_steps)},
+        {"metric": "n_compiles", "value": compiles},
+    ]
+    # derived: retune overhead ratio (≈1.0 == free retune)
+    ratio = float(np.mean(after) / np.mean(healthy))
+    return rows, round(ratio, 3)
+
+
+ALL = {"probe_curve": probe_curve, "retune_cost": retune_cost}

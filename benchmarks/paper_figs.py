@@ -1,0 +1,146 @@
+"""Paper-table reproductions (one function per table/figure of the paper).
+
+Each returns (rows, derived) where rows are printable dicts and derived is
+the figure's headline number. ``benchmarks/run.py`` drives all of them.
+
+  fig1   — batchsize -> speed curve + knee (paper Fig. 1)
+  fig6   — 3 Xeon nodes, interference ± HyperTune (paper Fig. 6)
+  fig7a  — host + N CSDs scaling + interference, MobileNetV2 (Fig. 7a)
+  fig7b  — same for ShuffleNet (Fig. 7b)
+  energy — J/img host-only vs host+36 CSDs (paper §V-B)
+
+The cluster is the calibrated simulator (core/simulator.py); the paper's
+own numbers are attached to every row for side-by-side comparison. Where
+the printed paper value is infeasible under its own synchronous model
+(fig6 6/8 recovery: 83.7 > 79.6 bound), the bound is reported too — see
+EXPERIMENTS.md §Faithfulness.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.controller import HyperTuneConfig, HyperTuneController
+from repro.core.simulator import (
+    ClusterSim, Interference, XEON_CAP_4OF8, XEON_CAP_6OF8,
+    HOST_CAP_MOBILENET, HOST_CAP_SHUFFLENET, XEON_MOBILENET,
+    csd_plan, saturating_table, stannis_3node_plan)
+
+
+def _plateau(res, k=5) -> float:
+    return float(np.mean(res.speeds[-k:]))
+
+
+def _run(plan, cap=None, group="xeon0", controller=False, use_eq3=False,
+         steps=60):
+    ivs = [Interference(group, 5, 10 ** 9, cap)] if cap else []
+    ctrl = (HyperTuneController(plan, HyperTuneConfig(use_eq3_table=use_eq3))
+            if controller else None)
+    return ClusterSim(plan, ivs, controller=ctrl).run(steps)
+
+
+# ---------------------------------------------------------------------------
+
+
+def fig1() -> Tuple[List[Dict], float]:
+    """Fig. 1: processing speed vs batch size (Xeon/MobileNetV2 class)."""
+    sm = saturating_table(**XEON_MOBILENET)
+    rows = [{"batch_size": int(b), "img_per_s": round(float(s), 2)}
+            for b, s in zip(sm.batch_sizes, sm.speeds)]
+    knee = sm.knee()
+    for r in rows:
+        r["is_knee"] = r["batch_size"] == knee
+    return rows, float(knee)
+
+
+def fig6() -> Tuple[List[Dict], float]:
+    paper = {
+        "baseline": 93.4, "interf_4of8": 75.6, "interf_6of8": 53.3,
+        "hypertune_4of8": 85.8, "hypertune_6of8": 83.7,
+    }
+    sim = {
+        "baseline": _plateau(_run(stannis_3node_plan())),
+        "interf_4of8": _plateau(_run(stannis_3node_plan(),
+                                     cap=XEON_CAP_4OF8)),
+        "interf_6of8": _plateau(_run(stannis_3node_plan(),
+                                     cap=XEON_CAP_6OF8)),
+        "hypertune_4of8": _plateau(_run(stannis_3node_plan(),
+                                        cap=XEON_CAP_4OF8, controller=True)),
+        "hypertune_6of8": _plateau(_run(stannis_3node_plan(),
+                                        cap=XEON_CAP_6OF8, controller=True)),
+    }
+    # synchronous feasibility bound for the 6/8 recovery given the paper's
+    # own baseline: two free nodes pinned at 180/5.782s
+    bound_6of8 = 2 * 180 / 5.782 + 17.77
+    rows = []
+    for k, p in paper.items():
+        feasible = min(p, bound_6of8) if k == "hypertune_6of8" else p
+        rows.append({
+            "scenario": k, "paper_img_s": p,
+            "feasible_img_s": round(feasible, 1),
+            "sim_img_s": round(sim[k], 1),
+            "err_vs_feasible_pct": round(100 * (sim[k] - feasible)
+                                         / feasible, 1),
+        })
+    recovery = sim["hypertune_6of8"] / sim["interf_6of8"]
+    return rows, round(recovery, 3)          # paper: "57% faster" -> 1.57x
+
+
+def _fig7(net: str, paper_scale: float, paper_points: Dict[str, float],
+          cap: float) -> Tuple[List[Dict], float]:
+    rows = []
+    host_only = _plateau(_run(csd_plan(0, net), group="host"))
+    for n in (0, 6, 12, 18, 24, 30, 36):
+        rows.append({"n_csd": n, "mode": "default",
+                     "sim_img_s": round(_plateau(_run(csd_plan(n, net),
+                                                      group="host")), 2)})
+    full = csd_plan(36, net)
+    interf = _plateau(_run(full, cap=cap, group="host"))
+    rec_eq3 = _plateau(_run(csd_plan(36, net), cap=cap, group="host",
+                            controller=True, use_eq3=True))
+    rec_inv = _plateau(_run(csd_plan(36, net), cap=cap, group="host",
+                            controller=True, use_eq3=False))
+    scale = rows[-1]["sim_img_s"] / host_only
+    rows += [
+        {"n_csd": 36, "mode": "interfered_6of8",
+         "sim_img_s": round(interf, 2),
+         "paper_img_s": paper_points.get("interfered")},
+        {"n_csd": 36, "mode": "hypertune_eq3(paper)",
+         "sim_img_s": round(rec_eq3, 2),
+         "paper_img_s": paper_points.get("recovered")},
+        {"n_csd": 36, "mode": "hypertune_inversion(beyond-paper)",
+         "sim_img_s": round(rec_inv, 2)},
+        {"n_csd": 36, "mode": "scaling_vs_host_only",
+         "sim_img_s": round(scale, 2), "paper_img_s": paper_scale},
+    ]
+    return rows, round(scale, 3)
+
+
+def fig7a() -> Tuple[List[Dict], float]:
+    return _fig7("mobilenet", 3.1,
+                 {"interfered": 49.26, "recovered": 74.89},
+                 HOST_CAP_MOBILENET)
+
+
+def fig7b() -> Tuple[List[Dict], float]:
+    return _fig7("shufflenet", 2.82, {}, HOST_CAP_SHUFFLENET)
+
+
+def energy() -> Tuple[List[Dict], float]:
+    host = _run(csd_plan(0), group="host")
+    full = _run(csd_plan(36), group="host")
+    rows = [
+        {"setup": "host_only", "sim_j_per_img": round(host.j_per_img, 3),
+         "paper_j_per_img": 1.32},
+        {"setup": "host_plus_36csd", "sim_j_per_img": round(full.j_per_img, 3),
+         "paper_j_per_img": 0.54},
+    ]
+    ratio = host.j_per_img / full.j_per_img
+    rows.append({"setup": "reduction", "sim_j_per_img": round(ratio, 2),
+                 "paper_j_per_img": 2.45})
+    return rows, round(ratio, 3)
+
+
+ALL = {"fig1": fig1, "fig6": fig6, "fig7a": fig7a, "fig7b": fig7b,
+       "energy": energy}

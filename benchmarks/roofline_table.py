@@ -1,0 +1,87 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table.
+
+Reads every dry-run record (written by launch/dryrun.py), renders the
+per-(arch × shape × mesh) roofline terms, dominant bottleneck, useful-FLOP
+fraction and roofline fraction, and emits the markdown table that
+EXPERIMENTS.md §Roofline embeds.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+COLS = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+        "bottleneck", "hbm_gb", "useful", "roofline")
+
+
+def load(out_dir: str = "experiments/dryrun",
+         mesh: Optional[str] = None,
+         include_tagged: bool = False) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        tag = base.replace(
+            f"{r['arch']}_{r['shape']}_{r['mesh']}", "")
+        if tag and not include_tagged:
+            continue                        # hillclimb variants
+        if mesh and r["mesh"] != mesh:
+            continue
+        r["tag"] = tag
+        rows.append(r)
+    return rows
+
+
+def row_fmt(r: Dict) -> Dict:
+    return {
+        "arch": r["arch"] + r.get("tag", ""),
+        "shape": r["shape"],
+        "mesh": r["mesh"],
+        "compute_s": f"{r['compute_s']:.3f}",
+        "memory_s": f"{r['memory_s']:.3f}",
+        "collective_s": f"{r['collective_s']:.3f}",
+        "bottleneck": r["bottleneck"],
+        "hbm_gb": f"{r['per_device_hbm'] / 1e9:.1f}",
+        "useful": f"{r['useful_flops_frac']:.2f}",
+        "roofline": f"{r['roofline_frac']:.2%}",
+    }
+
+
+def markdown(rows: List[Dict]) -> str:
+    out = ["| " + " | ".join(COLS) + " |",
+           "|" + "---|" * len(COLS)]
+    for r in rows:
+        f = row_fmt(r)
+        out.append("| " + " | ".join(str(f[c]) for c in COLS) + " |")
+    return "\n".join(out)
+
+
+def summary(rows: List[Dict]) -> Dict:
+    if not rows:
+        return {"cells": 0}
+    worst = min(rows, key=lambda r: r["roofline_frac"])
+    coll = [r for r in rows if r["bottleneck"] == "collective"]
+    return {
+        "cells": len(rows),
+        "bottlenecks": {b: sum(1 for r in rows if r["bottleneck"] == b)
+                        for b in ("compute", "memory", "collective")},
+        "worst_roofline": (worst["arch"], worst["shape"],
+                           round(worst["roofline_frac"], 4)),
+        "collective_bound": [(r["arch"], r["shape"]) for r in coll],
+    }
+
+
+def main() -> None:
+    rows = load()
+    print(markdown(rows))
+    print()
+    print(json.dumps(summary(rows), indent=1))
+
+
+if __name__ == "__main__":
+    main()

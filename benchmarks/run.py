@@ -1,0 +1,52 @@
+"""Benchmark driver: one entry per paper table/figure + live micro-benches
++ the roofline aggregation. Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def main() -> None:
+    from benchmarks import live_train, paper_figs, roofline_table
+
+    print("name,us_per_call,derived")
+    failures = 0
+
+    for name, fn in paper_figs.ALL.items():
+        try:
+            us, (rows, derived) = _timed(fn)
+            print(f"{name},{us:.0f},{derived}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},nan,ERROR:{e}", file=sys.stderr)
+
+    for name, fn in live_train.ALL.items():
+        try:
+            us, (rows, derived) = _timed(fn)
+            print(f"{name},{us:.0f},{derived}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},nan,ERROR:{e}", file=sys.stderr)
+
+    try:
+        us, rows = _timed(roofline_table.load)
+        n = len(rows)
+        worst = (min((r["roofline_frac"] for r in rows), default=float("nan")))
+        print(f"roofline_table,{us:.0f},cells={n};worst={worst:.4f}")
+    except Exception as e:  # pragma: no cover
+        failures += 1
+        print(f"roofline_table,nan,ERROR:{e}", file=sys.stderr)
+
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

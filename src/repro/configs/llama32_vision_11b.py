@@ -1,0 +1,21 @@
+"""llama-3.2-vision-11b — text backbone + cross-attn image layers.
+
+Vision frontend is a STUB: ``input_specs()`` supplies precomputed patch
+embeddings (num_image_tokens, d_model). [hf:meta-llama/Llama-3.2-11B-Vision]
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+LLAMA32_VISION_11B = register_arch(ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    cross_attn_every=5,       # 8 cross-attention layers in 40
+    num_image_tokens=1600,    # precomputed patch-embedding stub
+    source="hf:meta-llama/Llama-3.2-11B-Vision; unverified",
+))

@@ -1,0 +1,16 @@
+"""mamba2-1.3b — attention-free SSD (state-space duality) [arXiv:2405.21060]."""
+from repro.configs.base import ArchConfig, SSMConfig, register_arch
+
+MAMBA2_1P3B = register_arch(ArchConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=0,              # attention-free
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm=SSMConfig(state_dim=128, head_dim=64, chunk_size=256, expand=2),
+    tie_embeddings=True,
+    source="arXiv:2405.21060; unverified",
+))

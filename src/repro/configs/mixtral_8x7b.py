@@ -1,0 +1,21 @@
+"""mixtral-8x7b — 8-expert top-2 MoE with sliding-window attention.
+
+SWA (W=4096) makes it sub-quadratic: long_500k decode runs with a windowed
+KV cache. [arXiv:2401.04088]
+"""
+from repro.configs.base import ArchConfig, MoEConfig, register_arch
+
+MIXTRAL_8X7B = register_arch(ArchConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    sliding_window=4096,
+    rope_theta=1_000_000.0,
+    moe=MoEConfig(num_experts=8, top_k=2, expert_d_ff=14336),
+    source="arXiv:2401.04088; hf",
+))

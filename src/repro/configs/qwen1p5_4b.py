@@ -1,0 +1,15 @@
+"""qwen1.5-4b — dense LM with QKV bias, large vocab [hf:Qwen/Qwen1.5-4B]."""
+from repro.configs.base import ArchConfig, register_arch
+
+QWEN1P5_4B = register_arch(ArchConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    num_layers=40,
+    d_model=2560,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=6912,
+    vocab_size=151936,
+    qkv_bias=True,
+    source="hf:Qwen/Qwen1.5-0.5B; hf",
+))

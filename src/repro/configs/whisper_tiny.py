@@ -1,0 +1,23 @@
+"""whisper-tiny — enc-dec audio backbone; conv frontend is a STUB.
+
+``input_specs()`` supplies precomputed frame embeddings (enc_len, d_model).
+Shapes are interpreted on the decoder side (see DESIGN.md §5).
+[arXiv:2212.04356]
+"""
+from repro.configs.base import ArchConfig, register_arch
+
+WHISPER_TINY = register_arch(ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    num_layers=4,             # decoder layers
+    encoder_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    activation="gelu",
+    is_encoder_decoder=True,
+    max_encoder_len=1500,
+    source="arXiv:2212.04356; unverified",
+))

@@ -1,0 +1,14 @@
+"""yi-9b — llama-arch dense LM with aggressive GQA (kv=4) [arXiv:2403.04652]."""
+from repro.configs.base import ArchConfig, register_arch
+
+YI_9B = register_arch(ArchConfig(
+    name="yi-9b",
+    family="dense",
+    num_layers=48,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    source="arXiv:2403.04652; hf",
+))

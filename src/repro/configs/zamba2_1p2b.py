@@ -1,0 +1,18 @@
+"""zamba2-1.2b — Mamba2 backbone + shared attention blocks [arXiv:2411.15242]."""
+from repro.configs.base import ArchConfig, SSMConfig, register_arch
+
+ZAMBA2_1P2B = register_arch(ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    head_dim=64,                    # 2048 / 32
+    ssm=SSMConfig(state_dim=64, head_dim=64, chunk_size=256, expand=2),
+    hybrid_attn_every=6,            # shared attn+MLP block applied every 6th layer
+    tie_embeddings=True,
+    source="arXiv:2411.15242; hf",
+))

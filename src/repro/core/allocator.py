@@ -1,0 +1,180 @@
+"""Batch-size and dataset allocation (paper §III-A, Eq. 1).
+
+Given a SpeedModel per node group:
+  1. pick the most influential group  (speed-at-knee × group count),
+  2. set its batch size at the knee   (max single-node throughput),
+  3. give every other group the largest batch whose step time matches —
+     all groups finish each synchronous step together (no rank stall),
+  4. split the dataset proportionally (Eq. 1) with private items pinned
+     to their home group (federated-placement property).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.speed_model import SpeedModel
+
+
+@dataclasses.dataclass
+class GroupState:
+    name: str
+    count: int                      # number of identical nodes in the group
+    speed_model: SpeedModel
+    batch_size: int = 0             # per-node batch size (b_g)
+    capacity: int = 0               # per-node capacity (max rows reserved)
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    groups: List[GroupState]
+    step_time: float                # target synchronous step time (s)
+    steps_per_epoch: int
+    dataset_size: int
+    # dataset index ranges per group: {group: (start, stop)} over public data
+    ranges: Dict[str, Tuple[int, int]]
+
+    @property
+    def global_batch(self) -> int:
+        return sum(g.batch_size * g.count for g in self.groups)
+
+    @property
+    def global_capacity(self) -> int:
+        return sum(g.capacity * g.count for g in self.groups)
+
+    def throughput(self) -> float:
+        return self.global_batch / self.step_time
+
+    def batch_sizes(self) -> Dict[str, int]:
+        return {g.name: g.batch_size for g in self.groups}
+
+
+def solve(groups: Dict[str, Tuple], dataset_size: int,
+          *, knee_tol: float = 0.03, min_batch: int = 1,
+          capacity_slack: float = 1.0,
+          round_to: int = 1) -> BatchPlan:
+    """Initial allocation (paper §III-A).
+
+    groups: {name: (count, SpeedModel[, max_batch])}. max_batch is the
+    paper's convergence guard ("we change the batch size in a limited
+    range") — also the capacity the masked-batch layout reserves.
+    """
+    gs, caps = [], {}
+    for name, spec in groups.items():
+        count, sm = spec[0], spec[1]
+        caps[name] = spec[2] if len(spec) > 2 else None
+        gs.append(GroupState(name, count, sm))
+    # 1-2. most influential group at its knee
+    influence = [g.speed_model.speed(g.speed_model.knee(knee_tol)) * g.count
+                 for g in gs]
+    lead = gs[int(np.argmax(influence))]
+    lead_bs = lead.speed_model.knee(knee_tol)
+    if caps[lead.name]:
+        lead_bs = min(lead_bs, caps[lead.name])
+    step_time = lead.speed_model.step_time(lead_bs)
+    # 3. equal step time for everyone else
+    for g in gs:
+        if g is lead:
+            g.batch_size = int(lead_bs)
+        elif g.speed_model is lead.speed_model:
+            g.batch_size = int(lead_bs)      # identical node class
+        else:
+            bs = g.speed_model.batchsize_for_step_time(step_time)
+            g.batch_size = max(int(round(bs / round_to) * round_to), min_batch)
+        if caps[g.name]:
+            g.batch_size = min(g.batch_size, caps[g.name])
+        g.capacity = max(int(np.ceil(g.batch_size * capacity_slack)),
+                         g.batch_size)
+    # the true synchronous step time after caps
+    step_time = max(g.speed_model.step_time(g.batch_size) for g in gs)
+    plan = BatchPlan(gs, step_time, 0, dataset_size, {})
+    _finalize(plan)
+    return plan
+
+
+def retune(plan: BatchPlan, new_batch_sizes: Dict[str, int],
+           *, min_batch: int = 0) -> BatchPlan:
+    """Re-plan with updated per-node batch sizes (HyperTune trigger).
+
+    Capacities (and thus SPMD shapes) NEVER change — only b_g within
+    [min_batch, capacity]. A failed/pre-empted group may go to 0.
+    """
+    gs = []
+    for g in plan.groups:
+        nb = int(new_batch_sizes.get(g.name, g.batch_size))
+        nb = int(np.clip(nb, min_batch, g.capacity))
+        gs.append(GroupState(g.name, g.count, g.speed_model, nb, g.capacity))
+    live = [g for g in gs if g.batch_size > 0]
+    step_time = max((g.speed_model.step_time(g.batch_size) for g in live),
+                    default=plan.step_time)
+    new = BatchPlan(gs, step_time, 0, plan.dataset_size, {})
+    _finalize(new)
+    return new
+
+
+def _finalize(plan: BatchPlan) -> None:
+    """Eq. 1: Dataset_i = BS_i/ΣBS × Dataset; N_steps = Dataset/ΣBS."""
+    total_bs = max(plan.global_batch, 1)
+    plan.steps_per_epoch = max(plan.dataset_size // total_bs, 1)
+    ranges = {}
+    start = 0
+    for g in plan.groups:
+        share = g.batch_size * g.count / total_bs
+        n = int(round(share * plan.dataset_size))
+        ranges[g.name] = (start, min(start + n, plan.dataset_size))
+        start += n
+    # last group absorbs rounding remainder
+    if plan.groups:
+        last = plan.groups[-1].name
+        ranges[last] = (ranges[last][0], plan.dataset_size)
+    plan.ranges = ranges
+
+
+def assign_private(plan: BatchPlan, owners: np.ndarray,
+                   private: np.ndarray) -> Dict[str, np.ndarray]:
+    """Privacy-aware assignment: private items stay on their home group,
+    public items are split per Eq. 1 proportions.
+
+    owners:  (N,) group index per item (into plan.groups order)
+    private: (N,) bool
+    Returns {group: item indices}.
+    """
+    n = len(owners)
+    idx = np.arange(n)
+    pub = idx[~private]
+    out: Dict[str, np.ndarray] = {}
+    total_bs = max(plan.global_batch, 1)
+    # public split proportional to batch shares
+    shares = np.array([g.batch_size * g.count / total_bs for g in plan.groups])
+    cuts = np.floor(np.cumsum(shares) * len(pub)).astype(int)
+    prev = 0
+    for g, cut in zip(plan.groups, cuts):
+        out[g.name] = pub[prev:cut]
+        prev = cut
+    if plan.groups:
+        out[plan.groups[-1].name] = np.concatenate(
+            [out[plan.groups[-1].name], pub[cuts[-1]:]]) \
+            if cuts[-1] < len(pub) else out[plan.groups[-1].name]
+    # private items pinned home
+    for gi, g in enumerate(plan.groups):
+        mine = idx[private & (owners == gi)]
+        out[g.name] = np.concatenate([out[g.name], mine])
+    return out
+
+
+def row_mask(plan: BatchPlan) -> np.ndarray:
+    """Global-batch sample mask over the capacity layout.
+
+    The global (capacity-padded) batch is laid out as contiguous blocks of
+    ``capacity`` rows per node; within each node block the first
+    ``batch_size`` rows are live. Changing b_g flips mask bits only — the
+    array shapes (and the compiled step) are untouched.
+    """
+    mask = []
+    for g in plan.groups:
+        node = np.zeros(g.capacity, np.float32)
+        node[:g.batch_size] = 1.0
+        mask.append(np.tile(node, g.count))
+    return np.concatenate(mask) if mask else np.zeros(0, np.float32)

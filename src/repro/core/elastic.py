@@ -1,0 +1,55 @@
+"""Elastic scaling & fault tolerance glue (DESIGN.md §4).
+
+Node-group failures in the masked-capacity scheme are a degenerate retune:
+b_g -> 0 masks the group's rows, training continues the SAME compiled step
+at reduced throughput, and the data pipeline re-splits ranges (Eq. 1) so
+no samples are starved. Rejoin restores b_g at the benchmark knee.
+
+A heartbeat monitor turns missed reports into failures; stragglers (alive
+but slow) stay on the normal HyperTune decline path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.controller import HyperTuneController, RetuneEvent
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    """Declare a group failed after `timeout_steps` silent steps."""
+    timeout_steps: int = 3
+    _last_seen: Dict[str, int] = dataclasses.field(default_factory=dict)
+    _failed: Dict[str, bool] = dataclasses.field(default_factory=dict)
+
+    def beat(self, step: int, group: str) -> None:
+        self._last_seen[group] = step
+        self._failed[group] = False
+
+    def check(self, step: int, controller: HyperTuneController
+              ) -> Optional[RetuneEvent]:
+        for g in controller.plan.groups:
+            if g.batch_size == 0:
+                continue
+            last = self._last_seen.get(g.name, step)
+            if step - last >= self.timeout_steps and not self._failed.get(g.name):
+                self._failed[g.name] = True
+                return controller.mark_failed(step, g.name)
+        return None
+
+    def rejoin(self, step: int, group: str,
+               controller: HyperTuneController) -> RetuneEvent:
+        self._failed[group] = False
+        self._last_seen[group] = step
+        return controller.mark_rejoined(step, group)
+
+    def maybe_rejoin(self, step: int, reports,
+                     controller: HyperTuneController
+                     ) -> Optional[RetuneEvent]:
+        """A previously-failed group is reporting again -> bring it back
+        at its benchmark knee (paper's recovery semantics)."""
+        for g in reports:
+            if self._failed.get(g):
+                return self.rejoin(step, g, controller)
+        return None

@@ -1,0 +1,182 @@
+"""Cluster simulator calibrated to the paper's measurements (§V).
+
+Reproduces the paper's evaluation environments:
+  * 3× AIC 2U servers (Xeon Silver 4108) training MobileNetV2 — Fig. 6;
+  * FlacheSAN1N36M host + up to 36 Laguna CSDs — Fig. 7a/b + energy table;
+with interference events (the paper's Gzip core-stealing) and a power
+model for J/img energy accounting.
+
+Synchronous semantics: a step processes Σ b_g·count_g samples in
+max_g(step_time_g); an interfered node's speed is capacity-scaled. This
+is the baseline ("HyperTune off") behaviour; with the controller engaged
+the per-step reports flow through HyperTuneController and the plan is
+retuned mid-epoch exactly as on the real cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.allocator import BatchPlan, GroupState, solve
+from repro.core.controller import HyperTuneController, HyperTuneConfig
+from repro.core.speed_model import SpeedModel
+
+
+# ---------------------------------------------------------------------------
+# node classes (paper-calibrated)
+# ---------------------------------------------------------------------------
+
+
+def saturating_table(vmax: float, b_half: float, batch_sizes) -> SpeedModel:
+    b = np.asarray(batch_sizes, float)
+    return SpeedModel(b, vmax * b / (b + b_half))
+
+
+# Fig. 6 setup: Xeon 4108, MobileNetV2: knee at bs=180 (the paper's initial
+# tuning), 31.13 img/s/node there (93.4 img/s over 3 nodes).
+XEON_MOBILENET = dict(vmax=34.2, b_half=18.0,
+                      batch_sizes=(10, 20, 40, 60, 90, 120, 140, 160, 180,
+                                   200, 220, 256))
+# Interference capacity multipliers back-solved from Fig. 6's baseline
+# plateaus (75.6 and 53.3 img/s over 3 nodes).
+XEON_CAP_4OF8 = 75.6 / 93.4      # 0.809
+XEON_CAP_6OF8 = 53.3 / 93.4      # 0.571
+
+# Fig. 7a: host 33.4 img/s @ knee bs 180; 36 CSDs are the most influential
+# group (knee bs 15); combined 99.83 img/s => step time 7.21 s (CSD-bound),
+# CSD speed 2.08 img/s each. Host interference 6/8 cores: 49.26 img/s
+# baseline => host capacity 0.368.
+HOST_MOBILENET = dict(vmax=36.7, b_half=18.0,
+                      batch_sizes=(10, 20, 40, 90, 140, 180, 220, 256))
+CSD_MOBILENET = dict(vmax=2.19, b_half=0.8,
+                     batch_sizes=(2, 4, 8, 15, 20, 30))
+HOST_CAP_MOBILENET = 0.368
+HOST_MAX_BATCH = {"mobilenet": 180, "shufflenet": 300}
+
+# Fig. 7b: ShuffleNet — host knee bs 300 at 20 img/s; 2.82x over 36 CSDs
+# => CSD 1.175 img/s @ knee 25; interference capacity 0.44 gives the 1.45x
+# HyperTune recovery.
+HOST_SHUFFLENET = dict(vmax=22.0, b_half=30.0,
+                       batch_sizes=(20, 40, 80, 150, 220, 300, 360, 420))
+CSD_SHUFFLENET = dict(vmax=1.24, b_half=1.4,
+                      batch_sizes=(3, 6, 12, 25, 35, 50))
+HOST_CAP_SHUFFLENET = 0.44
+
+# Energy model calibrated to the paper's J/img table: host-only MobileNetV2
+# 33.4 img/s @ 1.32 J/img -> 44.1 W attributable; host+36 CSDs 99.83 img/s
+# @ 0.54 J/img -> 53.9 W total -> ~0.27 W marginal per active CSD.
+POWER_W = {"host": 44.1, "csd": 0.272, "xeon": 44.1}
+
+
+@dataclasses.dataclass
+class Interference:
+    group: str
+    start_step: int
+    end_step: int
+    capacity: float                  # remaining speed fraction (0..1]
+
+
+@dataclasses.dataclass
+class SimResult:
+    steps: int
+    images: float
+    wall_time: float
+    energy_j: float
+    speeds: List[float]              # overall img/s per step
+    events: list
+
+    @property
+    def throughput(self) -> float:
+        return self.images / max(self.wall_time, 1e-9)
+
+    @property
+    def j_per_img(self) -> float:
+        return self.energy_j / max(self.images, 1e-9)
+
+
+class ClusterSim:
+    """Discrete-step simulator of synchronous heterogeneous training."""
+
+    def __init__(self, plan: BatchPlan,
+                 interferences: Optional[List[Interference]] = None,
+                 power_w: Optional[Dict[str, float]] = None,
+                 controller: Optional[HyperTuneController] = None,
+                 speed_noise: float = 0.0, seed: int = 0):
+        self.plan = plan
+        self.interferences = interferences or []
+        self.power_w = power_w or POWER_W
+        self.controller = controller
+        self.rng = np.random.default_rng(seed)
+        self.speed_noise = speed_noise
+
+    def _capacity(self, group: str, step: int) -> float:
+        cap = 1.0
+        for iv in self.interferences:
+            if iv.group == group and iv.start_step <= step < iv.end_step:
+                cap = min(cap, iv.capacity)
+        return cap
+
+    def run(self, steps: int) -> SimResult:
+        images = 0.0
+        wall = 0.0
+        energy = 0.0
+        speeds = []
+        for step in range(steps):
+            plan = self.controller.plan if self.controller else self.plan
+            live = [g for g in plan.groups if g.batch_size > 0]
+            if not live:
+                break
+            # per-group actual speeds under current interference
+            g_speed = {}
+            for g in live:
+                cap = self._capacity(g.name, step)
+                sp = g.speed_model.speed(g.batch_size) * cap
+                if self.speed_noise:
+                    sp *= 1.0 + self.rng.normal(0, self.speed_noise)
+                g_speed[g.name] = max(sp, 1e-9)
+            step_time = max(g.batch_size / g_speed[g.name] for g in live)
+            batch = sum(g.batch_size * g.count for g in live)
+            images += batch
+            wall += step_time
+            # power: active node classes draw their attributable power
+            p = sum(self.power_w.get(g.name, self.power_w.get("host", 40.0))
+                    * g.count for g in live)
+            energy += p * step_time
+            speeds.append(batch / step_time)
+            if self.controller is not None:
+                reports = {g.name: {"speed": g_speed[g.name],
+                                    "cpu_util": self._capacity(g.name, step)}
+                           for g in live}
+                self.controller.observe(step, reports)
+        events = self.controller.events if self.controller else []
+        return SimResult(steps, images, wall, energy, speeds, events)
+
+
+# ---------------------------------------------------------------------------
+# canned paper scenarios
+# ---------------------------------------------------------------------------
+
+
+def stannis_3node_plan(dataset: int = 300_000) -> BatchPlan:
+    """Fig. 6: three identical Xeon nodes, each its own group."""
+    sm = saturating_table(**XEON_MOBILENET)
+    return solve({f"xeon{i}": (1, sm) for i in range(3)}, dataset)
+
+
+def csd_plan(n_csd: int, net: str = "mobilenet",
+             dataset: int = 300_000) -> BatchPlan:
+    """Fig. 7: FlacheSAN host + n Laguna CSDs (host batch capped — the
+    paper's bounded-range convergence guard keeps it at its benchmark 180
+    / 300 rather than letting it absorb the CSD-bound step time)."""
+    if net == "mobilenet":
+        host = saturating_table(**HOST_MOBILENET)
+        csd = saturating_table(**CSD_MOBILENET)
+    else:
+        host = saturating_table(**HOST_SHUFFLENET)
+        csd = saturating_table(**CSD_SHUFFLENET)
+    groups = {"host": (1, host, HOST_MAX_BATCH[net])}
+    if n_csd:
+        groups["csd"] = (n_csd, csd)
+    return solve(groups, dataset)

@@ -1,0 +1,128 @@
+"""Speed benchmarking + the batchsize_to_speed() function (paper §III-A).
+
+Stannis starts by benchmarking every node class at a ladder of batch sizes
+(Fig. 1). We keep BOTH representations the paper uses:
+  * the raw (batch_size, speed) table — Eq. 3 retunes by interpolating
+    between the two bracketing measurements;
+  * a fitted saturating curve speed(b) = vmax * b / (b + b_half)
+    (Michaelis-Menten; linear LS on the reciprocal form) — used for the
+    knee and for equal-step-time solving between measurements.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SpeedModel:
+    """batchsize -> images(tokens)/sec for one node class."""
+
+    batch_sizes: np.ndarray            # sorted ascending
+    speeds: np.ndarray                 # measured img/s at each batch size
+    vmax: float = 0.0
+    b_half: float = 0.0
+
+    def __post_init__(self):
+        order = np.argsort(self.batch_sizes)
+        self.batch_sizes = np.asarray(self.batch_sizes, float)[order]
+        self.speeds = np.asarray(self.speeds, float)[order]
+        self._fit()
+
+    def _fit(self) -> None:
+        b = self.batch_sizes
+        s = np.maximum(self.speeds, 1e-9)
+        # 1/s = 1/vmax + (b_half/vmax) * (1/b)  -> linear in 1/b
+        A = np.stack([np.ones_like(b), 1.0 / b], axis=1)
+        coef, *_ = np.linalg.lstsq(A, 1.0 / s, rcond=None)
+        inv_vmax, slope = coef
+        inv_vmax = max(inv_vmax, 1e-12)
+        self.vmax = 1.0 / inv_vmax
+        self.b_half = max(slope * self.vmax, 1e-9)
+
+    # -- the paper's batchsize_to_speed() --------------------------------
+    def speed(self, batch_size: float) -> float:
+        b = float(batch_size)
+        lo, hi = self.batch_sizes[0], self.batch_sizes[-1]
+        if lo <= b <= hi:
+            return float(np.interp(b, self.batch_sizes, self.speeds))
+        return self.vmax * b / (b + self.b_half)
+
+    def step_time(self, batch_size: float) -> float:
+        return batch_size / max(self.speed(batch_size), 1e-9)
+
+    def knee(self, tol: float = 0.03) -> int:
+        """Smallest measured batch size reaching (1-tol) of the max speed."""
+        smax = self.speeds.max()
+        for b, s in zip(self.batch_sizes, self.speeds):
+            if s >= (1.0 - tol) * smax:
+                return int(b)
+        return int(self.batch_sizes[-1])
+
+    # -- Eq. 3: bracketing interpolation, speed -> batch size -------------
+    def batchsize_for_speed(self, sp: float) -> float:
+        """BS_i = BS_n*(SP_i-SP_n)/(SP_n+1-SP_n) + BS_n+1*(SP_n+1-SP_i)/(...).
+
+        NOTE: we implement the paper's Eq. 3 exactly as printed. As printed
+        it swaps the usual interpolation weights (BS_n is multiplied by the
+        weight of SP_i-SP_n); with a monotone table this *extrapolates*
+        mirrored around the bracket midpoint, which matches the paper's own
+        worked example direction (slower node -> smaller batch).
+        """
+        b = self.batch_sizes
+        s = self.speeds
+        sp = float(np.clip(sp, s.min(), s.max()))
+        n = int(np.searchsorted(s, sp, side="right") - 1)
+        n = int(np.clip(n, 0, len(s) - 2))
+        sp_n, sp_n1 = s[n], s[n + 1]
+        bs_n, bs_n1 = b[n], b[n + 1]
+        if sp_n1 == sp_n:
+            return float(bs_n)
+        w_hi = (sp - sp_n) / (sp_n1 - sp_n)
+        w_lo = (sp_n1 - sp) / (sp_n1 - sp_n)
+        return float(bs_n * w_hi + bs_n1 * w_lo)
+
+    def batchsize_for_speed_std(self, sp: float) -> float:
+        """Standard linear interpolation (the 'fixed' Eq. 3); kept for
+        comparison benchmarks."""
+        s = self.speeds
+        sp = float(np.clip(sp, s.min(), s.max()))
+        return float(np.interp(sp, s, self.batch_sizes))
+
+    def batchsize_for_step_time(self, t: float,
+                                bs_max: Optional[float] = None) -> float:
+        """Largest batch with step_time <= t (monotone bisection on fit)."""
+        lo = 1.0
+        hi = float(bs_max or self.batch_sizes[-1] * 4)
+        if self.step_time(hi) <= t:
+            return hi
+        for _ in range(64):
+            mid = 0.5 * (lo + hi)
+            if self.step_time(mid) <= t:
+                lo = mid
+            else:
+                hi = mid
+        return lo
+
+
+def probe(step_fn: Callable[[int], None], batch_sizes: Sequence[int],
+          *, warmup: int = 1, iters: int = 3,
+          timer: Callable[[], float] = time.perf_counter) -> SpeedModel:
+    """Benchmark a real (jitted) step at each batch size (paper's tuning run).
+
+    ``step_fn(bs)`` must run one synchronous training step at that batch
+    size (caller handles compilation caching / donation).
+    """
+    speeds = []
+    for bs in batch_sizes:
+        for _ in range(warmup):
+            step_fn(bs)
+        t0 = timer()
+        for _ in range(iters):
+            step_fn(bs)
+        dt = max(timer() - t0, 1e-9)
+        speeds.append(bs * iters / dt)
+    return SpeedModel(np.asarray(batch_sizes, float), np.asarray(speeds))

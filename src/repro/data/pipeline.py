@@ -1,0 +1,122 @@
+"""Deterministic, sharded, privacy-aware data pipeline (paper §III-A/B).
+
+The corpus is synthetic-but-stateless: token row i is a pure function of
+(seed, i), so any node can materialize exactly its Eq. 1 range with zero
+coordination — the in-storage-processing analogue (data stays "home").
+
+Features mapped from the paper:
+  * Eq. 1 proportional range assignment, re-applied on every retune;
+  * private items pinned to their owner group (federated placement);
+  * per-epoch reshuffle so early-terminated/dropped rows statistically
+    cycle back in (paper's shuffle argument);
+  * capacity-padded batches: each group block yields `capacity` rows with
+    the first b_g live (mask from the plan) — retunes never lose samples
+    because group cursors only advance over LIVE rows;
+  * checkpointable/resumable iterator state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.core.allocator import BatchPlan
+
+
+def synth_tokens(seed: int, index: int, seq_len: int, vocab: int
+                 ) -> np.ndarray:
+    """Stateless row generator: row = f(seed, index)."""
+    rng = np.random.default_rng(np.uint64(seed * 0x9E3779B9 + index))
+    return rng.integers(0, vocab, size=seq_len + 1, dtype=np.int64)
+
+
+@dataclasses.dataclass
+class PipelineState:
+    epoch: int
+    cursors: Dict[str, int]          # per-group offset into its range
+    perm_seed: int
+
+
+class HeteroPipeline:
+    """Yields capacity-layout batches for the current BatchPlan."""
+
+    def __init__(self, plan: BatchPlan, seq_len: int, vocab: int,
+                 seed: int = 0, private_frac: float = 0.0):
+        self.seq_len = seq_len
+        self.vocab = vocab
+        self.seed = seed
+        self.private_frac = private_frac
+        self.state = PipelineState(0, {g.name: 0 for g in plan.groups}, seed)
+        self.set_plan(plan)
+
+    # ------------------------------------------------------------------
+    def set_plan(self, plan: BatchPlan) -> None:
+        """(Re)apply Eq. 1 ranges — called at start and on every retune."""
+        self.plan = plan
+        n = plan.dataset_size
+        rng = np.random.default_rng(self.state.perm_seed + self.state.epoch)
+        self._perm = rng.permutation(n)
+        # privacy tags: item i is private with prob private_frac, owned by
+        # the group whose Eq. 1 range contains it at epoch 0 (stable).
+        tag_rng = np.random.default_rng(self.seed + 1)
+        self._private = tag_rng.random(n) < self.private_frac
+        self._ranges = dict(plan.ranges)
+        for g in plan.groups:
+            self.state.cursors.setdefault(g.name, 0)
+
+    # ------------------------------------------------------------------
+    def _group_indices(self, name: str, count: int) -> np.ndarray:
+        """Next `count` dataset indices for a group (wraps into new epoch)."""
+        lo, hi = self._ranges[name]
+        span = max(hi - lo, 1)
+        cur = self.state.cursors[name]
+        idx = (lo + (cur + np.arange(count)) % span)
+        self.state.cursors[name] = (cur + count) % span
+        return self._perm[idx % len(self._perm)]
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        """Capacity-layout batch: blocks of `capacity` rows per node."""
+        plan = self.plan
+        rows, mask, owners, private = [], [], [], []
+        for gi, g in enumerate(plan.groups):
+            for _ in range(g.count):
+                live = self._group_indices(g.name, g.batch_size) \
+                    if g.batch_size else np.zeros(0, np.int64)
+                pad = g.capacity - len(live)
+                block_idx = np.concatenate([live, np.zeros(pad, np.int64)])
+                block_mask = np.concatenate(
+                    [np.ones(len(live), np.float32), np.zeros(pad, np.float32)])
+                for i, m in zip(block_idx, block_mask):
+                    row = synth_tokens(self.seed, int(i), self.seq_len,
+                                       self.vocab)
+                    rows.append(row)
+                    mask.append(m)
+                    owners.append(gi)
+                    private.append(bool(self._private[int(i)]) and m > 0)
+        arr = np.stack(rows)
+        return {
+            "tokens": arr[:, :-1].astype(np.int32),
+            "targets": arr[:, 1:].astype(np.int32),
+            "sample_mask": np.asarray(mask, np.float32),
+            "owners": np.asarray(owners, np.int32),
+            "private": np.asarray(private, bool),
+        }
+
+    # ------------------------------------------------------------------
+    def end_epoch(self) -> None:
+        self.state.epoch += 1
+        rng = np.random.default_rng(self.state.perm_seed + self.state.epoch)
+        self._perm = rng.permutation(self.plan.dataset_size)
+        self.state.cursors = {k: 0 for k in self.state.cursors}
+
+    # -- checkpointing --------------------------------------------------
+    def snapshot(self) -> Dict:
+        return {"epoch": self.state.epoch,
+                "cursors": dict(self.state.cursors),
+                "perm_seed": self.state.perm_seed}
+
+    def restore(self, snap: Dict) -> None:
+        self.state = PipelineState(snap["epoch"], dict(snap["cursors"]),
+                                   snap["perm_seed"])
+        self.set_plan(self.plan)

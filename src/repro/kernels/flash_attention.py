@@ -1,0 +1,142 @@
+"""Pallas TPU flash attention (online softmax, VMEM-tiled).
+
+Grid ``(B, Hq, Sq/bq, Sk/bk)`` — the last axis iterates sequentially on TPU,
+so the (m, l, acc) running statistics live in VMEM scratch across KV blocks.
+GQA is handled in the K/V index_map (query head -> kv head); causal and
+sliding-window masking skip fully-masked KV blocks via ``pl.when``.
+
+Layout contract (ops.py adapts): q (B, Hq, Sq, D), k/v (B, Hkv, Sk, D),
+out (B, Hq, Sq, D). D is kept whole (64/128 both MXU-aligned);
+bq/bk default to 128/512 so a block set {q, k, v, acc} of
+(128+2*512)*128*4B ~ 0.6 MB sits comfortably in the ~16 MB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, sliding_window: int,
+                 block_q: int, block_k: int, num_kv_blocks: int,
+                 seq_k: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = kj * block_k
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        allow = k_pos < seq_k                           # tail padding
+        if causal:
+            allow &= q_pos >= k_pos
+        if sliding_window:
+            allow &= (q_pos - k_pos) < sliding_window
+        s = jnp.where(allow, s, NEG_INF)
+        m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+        acc_ref[...] = acc_prev * corr[:, None] + pv
+
+    if causal or sliding_window:
+        # Skip KV blocks that are entirely masked out.
+        q_last = q_start + block_q - 1
+        k_first = k_start
+        live = q_last >= k_first if causal else True
+        if sliding_window:
+            k_last = k_start + block_k - 1
+            live &= (q_start - k_last) < sliding_window
+        pl.when(live)(_compute)
+    else:
+        _compute()
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,                 # (B, Hq, Sq, D)
+    k: jnp.ndarray,                 # (B, Hkv, Sk, D)
+    v: jnp.ndarray,                 # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    block_q: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    # pad seqs to block multiples (masked out inside the kernel)
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    nq = (sq + pq) // block_q
+    nk = (sk + pk) // block_k
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal,
+        sliding_window=sliding_window, block_q=block_q, block_k=block_k,
+        num_kv_blocks=nk, seq_k=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, i, j, group=group: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, i, j, group=group: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq + pq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m
+            pltpu.VMEM((block_q,), jnp.float32),      # l
+            pltpu.VMEM((block_q, d), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :sq]

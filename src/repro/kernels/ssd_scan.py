@@ -1,0 +1,104 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid ``(B, H, S/Q)`` — the chunk axis iterates sequentially on TPU, so the
+inter-chunk SSM state (N, P) lives in VMEM scratch. Per chunk the kernel
+does the SSD blocked algorithm (arXiv:2405.21060):
+
+  intra:  y_d = ((C B^T) ⊙ L ⊙ dt) x           (Q,Q)x(Q,P) matmuls — MXU
+  carry:  state' = exp(a_tot) state + (decay_to_end ⊙ dt ⊙ B)^T x
+  inter:  y_o = (C ⊙ decay_from_start) state
+
+Layouts (ops.py adapts): x (B, H, S, P), dt (B, H, S), B/C (B, S, N),
+A (1, H), D (1, H). Q=chunk (default 256), N≤256, P=64 keep the working
+set (Q*Q + 2*Q*N + Q*P + N*P floats ≈ 0.5 MB) well inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref,
+                y_ref, state_ref, *, chunk: int):
+    h = pl.program_id(1)
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q,)
+    B = b_ref[0].astype(jnp.float32)             # (Q, N)
+    C = c_ref[0].astype(jnp.float32)             # (Q, N)
+    A = a_ref[0, 0].astype(jnp.float32)          # scalar for this head
+    D = d_ref[0, 0].astype(jnp.float32)
+
+    a = dt * A                                   # (Q,) log-decays
+    cum = jnp.cumsum(a)                          # inclusive
+    a_tot = cum[-1]
+
+    # intra-chunk
+    seg = cum[:, None] - cum[None, :]            # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q,Q)
+    w = cb * L * dt[None, :]
+    y_d = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (Q,P)
+
+    # inter-chunk (uses state BEFORE this chunk)
+    st = state_ref[...]                          # (N, P)
+    dfs = jnp.exp(cum)                           # (Q,)
+    y_o = jax.lax.dot_general(C * dfs[:, None], st, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (Q,P)
+
+    # state update
+    dte = jnp.exp(a_tot - cum) * dt              # (Q,)
+    st_c = jax.lax.dot_general(B * dte[:, None], x, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (N,P)
+    state_ref[...] = st * jnp.exp(a_tot) + st_c
+
+    y_ref[0, 0] = (y_d + y_o + x * D).astype(y_ref.dtype)
+
+
+def ssd_scan(
+    x: jnp.ndarray,       # (B, H, S, P)
+    dt: jnp.ndarray,      # (B, H, S)
+    A: jnp.ndarray,       # (H,)
+    B_mat: jnp.ndarray,   # (B, S, N)
+    C_mat: jnp.ndarray,   # (B, S, N)
+    D: jnp.ndarray,       # (H,)
+    *,
+    chunk: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, h, s, p = x.shape
+    n = B_mat.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, c: (b_, h_, c)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c: (b_, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, c: (b_, c, 0)),
+            pl.BlockSpec((1, 1), lambda b_, h_, c: (0, h_)),
+            pl.BlockSpec((1, 1), lambda b_, h_, c: (0, h_)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p), lambda b_, h_, c: (b_, h_, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, B_mat, C_mat, A.reshape(1, h), D.reshape(1, h))
+    return y

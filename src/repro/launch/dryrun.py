@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run (deliverable e) + roofline extraction (deliverable g).
+#
+# Two compile passes per (arch × shape × mesh) cell:
+#   1. FULL model, scan-over-layers  -> proves compilability on the
+#      production mesh; memory_analysis (true per-device HBM); collective
+#      schedule of the deployed program.
+#   2. COST pass: XLA's HloCostAnalysis visits `while` bodies once, so
+#      scanned-layer FLOPs are invisible. We therefore compile the model at
+#      1x and 2x its layer "period" (cross/hybrid interval) with every scan
+#      fully unrolled (REPRO_SCAN_UNROLL=full) and extrapolate
+#      metric(L) = m1 + (L/p - 1) * (m2 - m1) — exact for homogeneous
+#      stacks, <=1 block error for zamba2's 38 = 6*6+2 remainder.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+#   ... --arch yi-9b --shape train_4k --multi-pod | --both-meshes
+#   ... --moe-ep / --no-remat: hillclimb levers (§Perf)
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig, get_arch, list_archs
+from repro.core import hetero_dp
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline as rl
+from repro.launch import specs as sp
+from repro.models import shardings as sh
+from repro.models.model_factory import build_model
+from repro.optim.optimizer import AdamW, OptConfig
+
+
+def _period(cfg: ArchConfig) -> int:
+    if cfg.cross_attn_every:
+        return cfg.cross_attn_every
+    if cfg.hybrid_attn_every:
+        return cfg.hybrid_attn_every
+    return 1
+
+
+def _depth_cfg(cfg: ArchConfig, layers: int) -> ArchConfig:
+    kw = {"num_layers": layers}
+    if cfg.is_encoder_decoder:
+        kw["encoder_layers"] = layers
+    return dataclasses.replace(cfg, **kw)
+
+
+def _lower_compile(cfg: ArchConfig, shape, mesh, *, moe_ep: bool,
+                   remat, ce_chunk: int = 0, micro_batches: int = 1,
+                   grad_bf16: bool = False, zero1: bool = False):
+    """Build + lower + compile one step program for (cfg, shape, mesh)."""
+    model = build_model(cfg)
+    sh.set_mesh(mesh)
+    try:
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pshard = sp.param_shardings(params_shape, cfg, mesh,
+                                    moe_expert_parallel=moe_ep)
+        if shape.kind == "train":
+            opt = AdamW(OptConfig())
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            oshard = sp.opt_shardings(opt_shape, pshard, mesh, zero1=zero1)
+            batch = sp.batch_specs(cfg, shape)
+            bshard = sp.batch_shardings(batch, mesh)
+            step = hetero_dp.make_train_step(
+                model, opt, remat=remat, ce_chunk=ce_chunk,
+                micro_batches=micro_batches,
+                grad_dtype=jnp.bfloat16 if grad_bf16 else None)
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, oshard, bshard),
+                             out_shardings=(pshard, oshard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_shape, opt_shape, batch)
+        elif shape.kind == "prefill":
+            batch = sp.batch_specs(cfg, shape)
+            bshard = sp.batch_shardings(batch, mesh)
+            step = hetero_dp.make_prefill_step(model)
+            jitted = jax.jit(step, in_shardings=(pshard, bshard))
+            lowered = jitted.lower(params_shape, batch)
+        else:  # decode
+            cache_shape, tok, aux = sp.decode_specs(model, shape)
+            cshard = sp.cache_shardings(cache_shape, cfg, mesh)
+            tshard = sp.batch_shardings(tok, mesh)
+            ashard = sp.batch_shardings(aux, mesh) if aux else None
+            step = hetero_dp.make_serve_step(model)
+            in_sh = (pshard, cshard, tshard) + ((ashard,) if aux else ())
+            jitted = jax.jit(step, in_shardings=in_sh,
+                             out_shardings=(None, cshard),
+                             donate_argnums=(1,))
+            args = (params_shape, cache_shape, tok) + ((aux,) if aux else ())
+            lowered = jitted.lower(*args)
+        return lowered.compile()
+    finally:
+        sh.set_mesh(None)
+
+
+def _cost_extrapolate(cfg: ArchConfig, shape, mesh, *, moe_ep: bool,
+                      remat, ce_chunk: int = 0, micro_batches: int = 1,
+                      grad_bf16: bool = False, zero1: bool = False
+                      ) -> Tuple[float, float, float, Dict]:
+    """(flops, bytes, collective_bytes) extrapolated to full depth."""
+    p = _period(cfg)
+    os.environ["REPRO_SCAN_UNROLL"] = "full"
+    try:
+        m = {}
+        for mult in (1, 2):
+            c = _lower_compile(_depth_cfg(cfg, p * mult), shape, mesh,
+                               moe_ep=moe_ep, remat=remat,
+                               ce_chunk=ce_chunk,
+                               micro_batches=micro_batches,
+                               grad_bf16=grad_bf16, zero1=zero1)
+            cost = c.cost_analysis()
+            coll, per_kind = rl.collective_bytes(c.as_text())
+            m[mult] = (float(cost.get("flops", 0.0)),
+                       float(cost.get("bytes accessed", 0.0)),
+                       float(coll), per_kind)
+    finally:
+        os.environ.pop("REPRO_SCAN_UNROLL", None)
+    units = cfg.num_layers / p
+    out = []
+    for i in range(3):
+        m1, m2 = m[1][i], m[2][i]
+        out.append(m1 + (units - 1.0) * (m2 - m1))
+    return out[0], out[1], out[2], m[2][3]
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             moe_ep: bool = False, moe_a2a: bool = False,
+             moe_fs: bool = False, remat=True,
+             ce_chunk: int = 0,
+             micro_batches: int = 1, sharding_mode: str = "tp_sp",
+             grad_bf16: bool = False, zero1: bool = False,
+             cost_pass: bool = True, skip_existing: bool = False,
+             out_dir: str = "experiments/dryrun", tag_extra: str = "",
+             verbose: bool = True) -> Optional[Dict]:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if shape_name not in cfg.applicable_shapes():
+        if verbose:
+            print(f"[skip] {arch} × {shape_name}: not applicable "
+                  f"(see DESIGN.md §5)", flush=True)
+        return None
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    sh.set_mode(sharding_mode)
+    sh.set_moe_impl("ep_a2a" if moe_a2a else ("fs" if moe_fs else "dense"))
+    t0 = time.time()
+    tag = f"{arch}_{shape_name}_{mesh_name}{tag_extra}"
+    if moe_ep:
+        tag += "_ep"
+    if moe_a2a:
+        tag += "_a2a"
+    if moe_fs:
+        tag += "_fs"
+    if remat in (False, "none"):
+        tag += "_noremat"
+    elif isinstance(remat, str) and remat != "full":
+        tag += f"_remat-{remat}"
+    if ce_chunk:
+        tag += f"_cechunk{ce_chunk}"
+    if micro_batches > 1:
+        tag += f"_mb{micro_batches}"
+    if sharding_mode != "tp_sp":
+        tag += f"_{sharding_mode}"
+    if grad_bf16:
+        tag += "_gbf16"
+    if zero1:
+        tag += "_z1"
+    out_path = os.path.join(out_dir, tag + ".json") if out_dir else None
+    if skip_existing and out_path and os.path.exists(out_path):
+        with open(out_path) as f:
+            old = json.load(f)
+        if old.get("status") == "ok":
+            if verbose:
+                print(f"[cached] {tag}", flush=True)
+            return old
+    ep = moe_ep or moe_a2a        # a2a requires expert-sharded weights
+    try:
+        # pass 1: full model (scan) — compilability + memory + schedule
+        compiled = _lower_compile(cfg, shape, mesh, moe_ep=ep,
+                                  remat=remat, ce_chunk=ce_chunk,
+                                  micro_batches=micro_batches,
+                                  grad_bf16=grad_bf16, zero1=zero1)
+        mem = compiled.memory_analysis()
+        coll_full, per_kind_full = rl.collective_bytes(compiled.as_text())
+        t1 = time.time()
+        if cost_pass:
+            # pass 2: unrolled reduced-depth cost extrapolation
+            flops, bytes_acc, coll, per_kind = _cost_extrapolate(
+                cfg, shape, mesh, moe_ep=ep, remat=remat,
+                ce_chunk=ce_chunk, micro_batches=micro_batches,
+                grad_bf16=grad_bf16, zero1=zero1)
+        else:
+            # compile-proof only (multi-pod sweep): collective schedule
+            # from the full program; FLOPs/bytes are scan-hidden.
+            flops, bytes_acc, coll, per_kind = 0.0, 0.0, coll_full, \
+                per_kind_full
+    except Exception as e:
+        print(f"[FAIL] {arch} × {shape_name} × {mesh_name}: {e}", flush=True)
+        traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "fail", "error": str(e)[:800]}
+
+    chips = mesh.devices.size
+    per_dev = (getattr(mem, "temp_size_in_bytes", 0)
+               + getattr(mem, "argument_size_in_bytes", 0)
+               + getattr(mem, "output_size_in_bytes", 0)
+               - getattr(mem, "alias_size_in_bytes", 0))
+    # NOTE: cost_analysis numbers are per-device module costs on SPMD.
+    roof = rl.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops=flops * chips, bytes_accessed=bytes_acc * chips,
+        coll_bytes=coll * chips, per_device_hbm=float(per_dev),
+        model_flops=rl.model_flops(cfg, shape, shape.kind))
+    rec = roof.to_dict()
+    rec.update(status="ok",
+               compile_full_s=round(t1 - t0, 1),
+               compile_total_s=round(time.time() - t0, 1),
+               collectives=per_kind,
+               collectives_full_program=per_kind_full,
+               memory_analysis=str(mem)[:2000],
+               options={"moe_ep": moe_ep, "moe_a2a": moe_a2a,
+                        "cost_pass": cost_pass,
+                        "remat": str(remat),
+                        "ce_chunk": ce_chunk,
+                        "micro_batches": micro_batches,
+                        "sharding_mode": sharding_mode})
+    if verbose:
+        print(f"[ok] {arch} × {shape_name} × {mesh_name}: "
+              f"compute {roof.compute_s*1e3:.2f} ms | "
+              f"memory {roof.memory_s*1e3:.2f} ms | "
+              f"collective {roof.collective_s*1e3:.2f} ms "
+              f"-> {roof.bottleneck}-bound | "
+              f"HBM/dev {per_dev/1e9:.2f} GB | "
+              f"useful/HLO {roof.useful_flops_frac:.2f} | "
+              f"roofline {roof.roofline_frac:.1%} | "
+              f"compile {rec['compile_full_s']}+{rec['compile_total_s']}s",
+              flush=True)
+    if out_path:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moe-ep", action="store_true")
+    ap.add_argument("--moe-a2a", action="store_true")
+    ap.add_argument("--moe-fs", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["full", "hot", "dots", "none"])
+    ap.add_argument("--ce-chunk", type=int, default=0)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--mode", default="tp_sp",
+                    choices=["tp_sp", "tp", "fsdp"])
+    ap.add_argument("--grad-bf16", action="store_true")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="skip the unrolled cost pass (compile-proof only)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(list_archs())
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    remat = (args.remat_policy if args.remat_policy
+             else (not args.no_remat))
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               moe_ep=args.moe_ep, moe_a2a=args.moe_a2a,
+                               moe_fs=args.moe_fs,
+                               remat=remat,
+                               ce_chunk=args.ce_chunk,
+                               micro_batches=args.microbatch,
+                               sharding_mode=args.mode,
+                               grad_bf16=args.grad_bf16, zero1=args.zero1,
+                               cost_pass=not args.no_cost,
+                               skip_existing=args.skip_existing,
+                               out_dir=args.out)
+                if rec is None:
+                    n_skip += 1
+                elif rec.get("status") == "ok":
+                    n_ok += 1
+                else:
+                    n_fail += 1
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Per-opcode FLOP/byte breakdown of a dry-run cell (§Perf diagnostics).
+
+The three-term roofline says WHICH term dominates; this says WHY: it
+re-lowers one cell at reduced unrolled depth and aggregates operand+output
+bytes and dot FLOPs per HLO opcode (and per largest single ops), printing
+the top contributors. This is the "profile" the hypothesis loop reads on
+a CPU-only container.
+
+  PYTHONPATH=src python -m repro.launch.hlo_profile --arch deepseek-7b \
+      --shape train_4k [--ce-chunk 512] [--remat-policy dots]
+"""
+import argparse
+import collections
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([^=]+?)\s*([a-z][\w\-]*)\(", re.M)
+
+
+def shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def profile_text(hlo: str, top: int = 25):
+    by_op: Dict[str, int] = collections.defaultdict(int)
+    biggest: List[Tuple[int, str]] = []
+    for m in _INSTR_RE.finditer(hlo):
+        name, out_shape, opcode = m.groups()
+        line = hlo[m.start():hlo.index("\n", m.start())]
+        b = shape_bytes(line)              # output + operand shapes in line
+        by_op[opcode] += b
+        biggest.append((b, f"{opcode:24s} {out_shape.strip()[:60]}"))
+    biggest.sort(reverse=True)
+    return by_op, biggest[:top]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--ce-chunk", type=int, default=0)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--remat-policy", default="full")
+    ap.add_argument("--moe-a2a", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+
+    from repro.configs.base import SHAPES, get_arch
+    from repro.launch import dryrun, mesh as mesh_lib
+    from repro.models import shardings as sh
+
+    cfg = dryrun._depth_cfg(get_arch(args.arch), args.layers)
+    mesh = mesh_lib.make_production_mesh(multi_pod=args.multi_pod)
+    sh.set_moe_impl("ep_a2a" if args.moe_a2a else "dense")
+    os.environ["REPRO_SCAN_UNROLL"] = "full"
+    compiled = dryrun._lower_compile(
+        cfg, SHAPES[args.shape], mesh, moe_ep=args.moe_a2a,
+        remat=args.remat_policy, ce_chunk=args.ce_chunk,
+        micro_batches=args.microbatch)
+    by_op, biggest = profile_text(compiled.as_text(), args.top)
+
+    total = sum(by_op.values())
+    print(f"== {args.arch} × {args.shape} @ {args.layers}L unrolled "
+          f"(bytes incl. operands; total {total/1e9:.1f} GB/device-step)")
+    for op, b in sorted(by_op.items(), key=lambda kv: -kv[1])[:args.top]:
+        print(f"  {op:28s} {b/1e9:9.2f} GB  {100*b/total:5.1f}%")
+    print("\n== largest single instructions")
+    for b, desc in biggest:
+        print(f"  {b/1e9:9.2f} GB  {desc}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Production meshes and heterogeneous node-group maps.
+
+Target hardware: TPU v5e pods — 256 chips per pod in a 16x16 ICI torus;
+multi-pod joins 2 pods over DCN. The ``data`` axis carries batch rows;
+``model`` carries tensor parallelism; ``pod`` (multi-pod) is pure
+data-parallel over DCN and is the gradient-compression target.
+
+IMPORTANT: functions only — importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+# v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for {shape}; got {len(devices)} — the dry-run "
+            "must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import (see launch/dryrun.py)")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_local_mesh() -> Mesh:
+    """Single-device mesh for CPU smoke/integration runs."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_parallel_rows(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def hetero_group_map(mesh: Mesh, groups: List[Tuple[str, int]]
+                     ) -> Dict[str, List[int]]:
+    """Assign contiguous blocks of the data axis to node groups.
+
+    groups: [(name, n_rows)] summing to the data-axis extent. On a real
+    fleet each block is one pod / host class; HyperTune's b_g masks rows
+    within the block's share of the global batch.
+    """
+    rows = data_parallel_rows(mesh)
+    total = sum(n for _, n in groups)
+    assert total == rows, f"group rows {total} != data rows {rows}"
+    out, start = {}, 0
+    for name, n in groups:
+        out[name] = list(range(start, start + n))
+        start += n
+    return out

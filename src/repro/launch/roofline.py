@@ -1,0 +1,133 @@
+"""Roofline-term extraction from compiled dry-run artifacts (deliverable g).
+
+  compute    = HLO_FLOPs / (chips × 197 TFLOP/s)
+  memory     = HLO bytes accessed / (chips × 819 GB/s)
+  collective = Σ collective operand bytes / (chips × 50 GB/s)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed from the optimized HLO text (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute operand sizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch import mesh as mesh_lib
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, Dict[str, float]]]:
+    """Sum output-shape bytes of every collective op (done-halves skipped)."""
+    total = 0
+    per_kind: Dict[str, Dict[str, float]] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done" in m.group(0):
+            continue  # counted at -start
+        b = _shape_bytes(shape_str)
+        total += b
+        k = per_kind.setdefault(kind, {"count": 0, "bytes": 0})
+        k["count"] += 1
+        k["bytes"] += b
+    return total, per_kind
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    per_device_hbm: float            # peak bytes/device from memory_analysis
+    model_flops: float               # 6*N_active*D (train) / 2*N_active*D
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = self.flops / (self.chips * mesh_lib.PEAK_FLOPS_BF16)
+        self.memory_s = self.bytes_accessed / (self.chips * mesh_lib.HBM_BW)
+        self.collective_s = self.coll_bytes / (self.chips * mesh_lib.ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Optimistic no-overlap-needed step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / max(self.flops, 1.0)
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the compute roofline achieved if the step ran at the
+        dominant term: MODEL_FLOPS / (chips*peak*step_s)."""
+        return self.model_flops / (self.chips * mesh_lib.PEAK_FLOPS_BF16
+                                   * max(self.step_s, 1e-12))
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes,
+            "per_device_hbm": self.per_device_hbm,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck, "step_s": self.step_s,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+        }
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6·N_active·D for training, 2·N_active·D for single-token decode,
+    2·N_active·D for prefill (forward only)."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch  # one token per row
+    return 2.0 * n * d

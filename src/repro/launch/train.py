@@ -1,0 +1,360 @@
+"""End-to-end heterogeneous training driver (deliverable b).
+
+Wires the whole stack together the way a fleet deployment would:
+
+  probe -> allocate (equal step time, Eq. 1) -> pjit train loop
+        -> per-step speed reports -> HyperTuneController (Eq. 2/3)
+        -> retune = new row mask + Eq. 1 re-split (no recompile)
+        -> checkpoint/auto-resume; heartbeat -> elastic mask-out.
+
+On this CPU container the "cluster" is simulated at the REPORT level only:
+the jitted step is real JAX training; interference hooks scale the
+reported per-group speeds exactly as a busy node would. On a fleet the
+reports come from per-host step timers (multihost_utils) instead — the
+controller, plan and data paths are identical.
+
+CLI:
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+      --steps 50 --groups host:1,csd:4 --interfere csd@20x0.5
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ArchConfig, get_arch, reduced_config
+from repro.core import allocator, hetero_dp
+from repro.core.allocator import BatchPlan
+from repro.core.controller import HyperTuneConfig, HyperTuneController
+from repro.core.elastic import HeartbeatMonitor
+from repro.core.speed_model import SpeedModel, probe
+from repro.data.pipeline import HeteroPipeline
+from repro.models.model_factory import aux_inputs, build_model
+from repro.optim.optimizer import AdamW, OptConfig
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    seq_len: int = 64
+    dataset_size: int = 100_000
+    steps: int = 50
+    seed: int = 0
+    private_frac: float = 0.0
+    remat: bool = True
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0                  # 0 = only explicit saves
+    keep_ckpts: int = 3
+    log_every: int = 10
+    opt: OptConfig = dataclasses.field(default_factory=OptConfig)
+    hypertune: HyperTuneConfig = dataclasses.field(
+        default_factory=HyperTuneConfig)
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    loss: float
+    global_batch: int
+    step_time: float
+    throughput: float
+    retune: Optional[str] = None
+
+
+class HeteroTrainer:
+    """The paper's Stannis loop over a real JAX model."""
+
+    def __init__(self, arch_cfg: ArchConfig, plan: BatchPlan,
+                 cfg: Optional[TrainerConfig] = None):
+        self.cfg = cfg or TrainerConfig()
+        self.arch_cfg = arch_cfg
+        self.plan = plan
+        self.model = build_model(arch_cfg)
+        self.controller = HyperTuneController(plan, self.cfg.hypertune)
+        self.heartbeat = HeartbeatMonitor()
+        self.pipeline = HeteroPipeline(
+            plan, self.cfg.seq_len, arch_cfg.vocab_size,
+            seed=self.cfg.seed, private_frac=self.cfg.private_frac)
+        self.opt = AdamW(self.cfg.opt)
+        self.params = self.model.init(jax.random.PRNGKey(self.cfg.seed))
+        self.opt_state = self.opt.init(self.params)
+        self.step_fn = jax.jit(hetero_dp.make_train_step(
+            self.model, self.opt, remat=self.cfg.remat))
+        self.ckpt = (Checkpointer(self.cfg.ckpt_dir, keep=self.cfg.keep_ckpts)
+                     if self.cfg.ckpt_dir else None)
+        self.step = 0
+        self.records: List[StepRecord] = []
+        self._aux = aux_inputs(arch_cfg, plan.global_capacity,
+                               self.cfg.seq_len, jnp.float32, concrete=True)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_probe(cls, arch_cfg: ArchConfig,
+                   groups: Dict[str, Tuple[int, SpeedModel]],
+                   cfg: Optional[TrainerConfig] = None) -> "HeteroTrainer":
+        cfg = cfg or TrainerConfig()
+        plan = allocator.solve(groups, cfg.dataset_size)
+        return cls(arch_cfg, plan, cfg)
+
+    def probe_speed_model(self, batch_ladder=(1, 2, 4, 8),
+                          iters: int = 2) -> SpeedModel:
+        """Benchmark THIS node (paper §III-A): time real jitted steps at a
+        ladder of batch sizes. On a fleet every node class runs this."""
+        model, opt = self.model, self.opt
+        step = jax.jit(hetero_dp.make_train_step(model, opt,
+                                                 remat=self.cfg.remat))
+
+        def one(bs):
+            batch = self._synthetic_batch(bs)
+            out = step(self.params, self.opt_state, batch)
+            jax.block_until_ready(out[2]["loss"])
+
+        return probe(one, batch_ladder, warmup=1, iters=iters)
+
+    def _synthetic_batch(self, rows: int):
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, self.arch_cfg.vocab_size,
+                            (rows, self.cfg.seq_len + 1))
+        batch = {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "targets": jnp.asarray(toks[:, 1:], jnp.int32),
+            "sample_mask": jnp.ones((rows,), jnp.float32),
+        }
+        batch.update(aux_inputs(self.arch_cfg, rows, self.cfg.seq_len,
+                                jnp.float32, concrete=True))
+        return batch
+
+    # ------------------------------------------------------------------
+    # checkpoint / restore
+    # ------------------------------------------------------------------
+    def save(self) -> None:
+        if not self.ckpt:
+            return
+        extras = {
+            "pipeline": self.pipeline.snapshot(),
+            "batch_sizes": self.controller.plan.batch_sizes(),
+            "trainer_step": self.step,
+        }
+        self.ckpt.save(self.step, {"params": self.params,
+                                   "opt": self.opt_state}, extras)
+
+    def resume(self) -> bool:
+        """Auto-resume from the newest valid checkpoint. Returns True if
+        state was restored."""
+        if not self.ckpt:
+            return False
+        out = self.ckpt.restore_latest({"params": self.params,
+                                        "opt": self.opt_state})
+        if out is None:
+            return False
+        step, tree, extras = out
+        self.params = jax.tree.map(jnp.asarray, tree["params"])
+        self.opt_state = jax.tree.map(jnp.asarray, tree["opt"])
+        self.step = int(extras.get("trainer_step", step))
+        if "pipeline" in extras:
+            self.pipeline.restore(extras["pipeline"])
+        if "batch_sizes" in extras:
+            new = allocator.retune(self.controller.plan,
+                                   {k: int(v) for k, v in
+                                    extras["batch_sizes"].items()})
+            self.controller.plan = new
+            self.pipeline.set_plan(new)
+        return True
+
+    # ------------------------------------------------------------------
+    # the loop
+    # ------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None,
+            report_fn: Optional[Callable[[int, BatchPlan, float],
+                                         Dict[str, Dict[str, float]]]] = None,
+            on_retune: Optional[Callable] = None) -> List[StepRecord]:
+        """report_fn(step, plan, measured_step_time) -> per-group reports.
+        Defaults to healthy reports derived from the plan (each group at
+        its required speed); tests/examples wrap it to inject interference
+        or dropouts (returning no entry for a dead group)."""
+        steps = steps if steps is not None else self.cfg.steps
+        target = self.step + steps
+        while self.step < target:
+            plan = self.controller.plan
+            np_batch = self.pipeline.next_batch()
+            batch = {
+                "tokens": jnp.asarray(np_batch["tokens"]),
+                "targets": jnp.asarray(np_batch["targets"]),
+                "sample_mask": jnp.asarray(np_batch["sample_mask"]),
+            }
+            batch.update(self._aux)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])          # blocks
+            dt = max(time.perf_counter() - t0, 1e-9)
+
+            reports = (report_fn(self.step, plan, dt) if report_fn
+                       else self._healthy_reports(plan))
+            event = self.heartbeat.maybe_rejoin(self.step, reports,
+                                                self.controller)
+            for g in reports:
+                self.heartbeat.beat(self.step, g)
+            event = event or self.controller.observe(self.step, reports)
+            event = event or self.heartbeat.check(self.step, self.controller)
+            if event is not None:
+                self.pipeline.set_plan(self.controller.plan)
+                if on_retune:
+                    on_retune(event)
+
+            rec = StepRecord(
+                self.step, loss, plan.global_batch, dt,
+                plan.global_batch / dt,
+                retune=None if event is None else
+                f"{event.group}:{event.old_batch}->{event.new_batch}")
+            self.records.append(rec)
+            self.step += 1
+            if self.cfg.ckpt_every and self.step % self.cfg.ckpt_every == 0:
+                self.save()
+            if self.cfg.log_every and self.step % self.cfg.log_every == 0:
+                print(f"step {self.step:5d} loss {loss:.4f} "
+                      f"gb {plan.global_batch} "
+                      f"({rec.throughput:.1f} samp/s)", flush=True)
+        if self.ckpt:
+            self.save()
+            self.ckpt.wait()
+        return self.records
+
+    @staticmethod
+    def _healthy_reports(plan: BatchPlan) -> Dict[str, Dict[str, float]]:
+        """Every live node reports each step — including idle (b_g = 0)
+        ones, which advertise their probe speed so the rejoin path can
+        bring them back."""
+        out = {}
+        for g in plan.groups:
+            if g.batch_size == 0:
+                out[g.name] = {"speed": g.speed_model.speed(
+                    g.speed_model.knee()), "cpu_util": 0.0}
+            else:
+                out[g.name] = {
+                    "speed": g.batch_size / max(plan.step_time, 1e-9),
+                    "cpu_util": 1.0,
+                }
+        return out
+
+
+# ---------------------------------------------------------------------------
+# interference helpers (shared by examples/tests)
+# ---------------------------------------------------------------------------
+
+
+def interference_report_fn(schedule: Dict[str, List[Tuple[int, int, float]]]
+                           ) -> Callable:
+    """schedule: {group: [(start, end, capacity)]} -> report_fn where an
+    interfered group's speed is capacity × its benchmark curve at its
+    CURRENT batch (the Gzip stand-in, same model as core/simulator.py) —
+    so a correct retune restores the plan step time and the controller
+    converges instead of chasing itself down."""
+
+    def fn(step, plan, dt):
+        reports = HeteroTrainer._healthy_reports(plan)
+        for gname, windows in schedule.items():
+            if gname not in reports:
+                continue
+            g = next(g for g in plan.groups if g.name == gname)
+            for s, e, cap in windows:
+                if s <= step < e and g.batch_size > 0:
+                    sp = cap * g.speed_model.speed(g.batch_size)
+                    reports[gname]["speed"] = min(reports[gname]["speed"],
+                                                  sp)
+                    reports[gname]["cpu_util"] = cap
+        return reports
+
+    return fn
+
+
+def dropout_report_fn(dead: Dict[str, Tuple[int, int]]) -> Callable:
+    """dead: {group: (fail_step, rejoin_step)} -> silent groups (heartbeat
+    path)."""
+
+    def fn(step, plan, dt):
+        reports = HeteroTrainer._healthy_reports(plan)
+        for gname, (s, e) in dead.items():
+            if s <= step < e:
+                reports.pop(gname, None)
+        return reports
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _parse_groups(text: str, sm: SpeedModel) -> Dict[str, Tuple]:
+    out = {}
+    for part in text.split(","):
+        name, count = part.split(":")
+        out[name] = (int(count), sm)
+    return out
+
+
+def _parse_interfere(text: Optional[str]):
+    # "csd@20x0.5" -> {"csd": [(20, 10**9, 0.5)]}
+    if not text:
+        return None
+    out: Dict[str, List[Tuple[int, int, float]]] = {}
+    for part in text.split(","):
+        name, rest = part.split("@")
+        start, cap = rest.split("x")
+        out.setdefault(name, []).append((int(start), 10 ** 9, float(cap)))
+    return interference_report_fn(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (default: reduced, CPU-safe)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--groups", default="host:1,worker:2")
+    ap.add_argument("--interfere", default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    arch = get_arch(args.arch)
+    if not args.full_size:
+        arch = reduced_config(arch)
+    cfg = TrainerConfig(steps=args.steps, seq_len=args.seq_len,
+                        ckpt_dir=args.ckpt_dir,
+                        ckpt_every=10 if args.ckpt_dir else 0)
+
+    # probe this node once, reuse the curve for every group (single-host
+    # stand-in; a fleet probes per node class)
+    boot_plan = allocator.solve(
+        {"probe": (1, SpeedModel(np.array([1.0, 2, 4]),
+                                 np.array([1.0, 2, 4])))}, 64)
+    bootstrap = HeteroTrainer(arch, boot_plan, cfg)
+    sm = bootstrap.probe_speed_model()
+    print(f"probe: knee={sm.knee()} vmax={sm.vmax:.2f} samp/s")
+
+    trainer = HeteroTrainer.from_probe(arch, _parse_groups(args.groups, sm),
+                                       cfg)
+    trainer.params = bootstrap.params        # reuse init
+    if args.resume:
+        if trainer.resume():
+            print(f"resumed at step {trainer.step}")
+    recs = trainer.run(report_fn=_parse_interfere(args.interfere))
+    retunes = [r for r in recs if r.retune]
+    print(f"done: {len(recs)} steps, {len(retunes)} retunes, "
+          f"final loss {recs[-1].loss:.4f}")
+    for r in retunes:
+        print(f"  retune @ step {r.step}: {r.retune}")
+
+
+if __name__ == "__main__":
+    main()

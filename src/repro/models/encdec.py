@@ -1,0 +1,141 @@
+"""whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings ``batch["enc_frames"]`` of shape
+(B, T_enc, d_model). Positions use RoPE on both sides (TPU-native
+adaptation of whisper's absolute embeddings; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.scan_util import layer_scan
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    out_scale = 1.0 / (2 * (cfg.num_layers + cfg.encoder_layers)) ** 0.5
+
+    def enc_one(k):
+        k1, k2 = jax.random.split(k)
+        return {"norm1": L.init_norm(cfg.d_model),
+                "attn": L.init_attention(k1, cfg, out_scale),
+                "norm2": L.init_norm(cfg.d_model),
+                "mlp": L.init_mlp(k2, cfg, out_scale=out_scale)}
+
+    def dec_one(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"norm1": L.init_norm(cfg.d_model),
+                "attn": L.init_attention(k1, cfg, out_scale),
+                "normc": L.init_norm(cfg.d_model),
+                "cross": L.init_attention(k2, cfg, out_scale),
+                "norm2": L.init_norm(cfg.d_model),
+                "mlp": L.init_mlp(k3, cfg, out_scale=out_scale)}
+
+    return {
+        "embed": L.init_embedding(ks[0], cfg),
+        "enc_layers": _stack([enc_one(k) for k in
+                              jax.random.split(ks[1], cfg.encoder_layers)]),
+        "enc_norm": L.init_norm(cfg.d_model),
+        "dec_layers": _stack([dec_one(k) for k in
+                              jax.random.split(ks[2], cfg.num_layers)]),
+        "final_norm": L.init_norm(cfg.d_model),
+    }
+
+
+def encode(params: Params, cfg: ArchConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    x = frames.astype(L.compute_dtype(cfg))
+    positions = jnp.arange(frames.shape[1])
+
+    def body(x, lp):
+        h = L.attention_block(lp["attn"], cfg,
+                              L.rmsnorm(x, lp["norm1"]["scale"], cfg.norm_eps),
+                              positions=positions, causal=False)
+        x = x + h
+        h2 = L.mlp_block(lp["mlp"], cfg,
+                         L.rmsnorm(x, lp["norm2"]["scale"], cfg.norm_eps))
+        return x + h2, None
+
+    x, _ = layer_scan(body, x, params["enc_layers"])
+    return L.rmsnorm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
+            remat: bool = True, return_hidden: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    enc = encode(params, cfg, batch["enc_frames"])
+    x = L.embed(params["embed"], cfg, batch["tokens"])
+    positions = jnp.arange(batch["tokens"].shape[1])
+
+    def body(x, lp):
+        h = L.attention_block(lp["attn"], cfg,
+                              L.rmsnorm(x, lp["norm1"]["scale"], cfg.norm_eps),
+                              positions=positions)
+        x = x + h
+        hc = L.attention_block(lp["cross"], cfg,
+                               L.rmsnorm(x, lp["normc"]["scale"], cfg.norm_eps),
+                               cross_x=enc, use_rope=False)
+        x = x + hc
+        h2 = L.mlp_block(lp["mlp"], cfg,
+                         L.rmsnorm(x, lp["norm2"]["scale"], cfg.norm_eps))
+        return x + h2, None
+
+    body = L.maybe_checkpoint(body, remat)
+    x, _ = layer_scan(body, x, params["dec_layers"])
+    x = L.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    return L.logits(params["embed"], cfg, x), jnp.zeros((), jnp.float32)
+
+
+def init_cache(params: Params, cfg: ArchConfig, batch: int, max_len: int,
+               dtype, aux: Optional[Dict] = None) -> Params:
+    enc = encode(params, cfg, aux["enc_frames"])
+    ck, cv = jax.vmap(lambda lp: L.cross_kv(lp["cross"], cfg, enc))(
+        params["dec_layers"])
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((cfg.num_layers, batch, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((cfg.num_layers, batch, max_len, hkv, hd), dtype),
+        "ck": ck.astype(dtype), "cv": cv.astype(dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                tokens: jnp.ndarray, aux: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Params]:
+    x = L.embed(params["embed"], cfg, tokens)
+    pos = cache["pos"]
+
+    def body(x, scan_in):
+        lp, kc, vc, ck, cv = scan_in
+        h, kc, vc = L.attention_decode(
+            lp["attn"], cfg,
+            L.rmsnorm(x, lp["norm1"]["scale"], cfg.norm_eps), kc, vc, pos)
+        x = x + h
+        hc = L.cross_attention_decode(
+            lp["cross"], cfg,
+            L.rmsnorm(x, lp["normc"]["scale"], cfg.norm_eps), ck, cv)
+        x = x + hc
+        h2 = L.mlp_block(lp["mlp"], cfg,
+                         L.rmsnorm(x, lp["norm2"]["scale"], cfg.norm_eps))
+        return x + h2, (kc, vc)
+
+    x, (new_k, new_v) = layer_scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["ck"], cache["cv"]))
+    x = L.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return (L.logits(params["embed"], cfg, x),
+            dict(cache, k=new_k, v=new_v, pos=pos + 1))

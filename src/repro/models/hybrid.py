@@ -1,0 +1,140 @@
+"""zamba2-style hybrid: Mamba2 backbone + one SHARED attention block.
+
+The shared attention+MLP block (single weight set) is applied after every
+``hybrid_attn_every`` mamba layers. Each invocation keeps its own KV cache
+at decode time (weights shared, state not).
+
+Adaptation note (DESIGN.md §2): zamba2 concatenates the original embedding
+into the shared block input; we use a standard pre-norm residual instead —
+the scheduling-level technique under study is unaffected.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.scan_util import layer_scan
+from repro.models import layers as L
+from repro.models import mamba2 as MB
+
+Params = Dict[str, Any]
+
+
+def _segments(cfg: ArchConfig):
+    seg = cfg.hybrid_attn_every
+    n_full = cfg.num_layers // seg
+    rem = cfg.num_layers - n_full * seg
+    return seg, n_full, rem
+
+
+def init(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    out_scale = 1.0 / (2 * cfg.num_layers) ** 0.5
+    lkeys = jax.random.split(ks[1], cfg.num_layers)
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs), *[
+        {"norm1": L.init_norm(cfg.d_model), "mamba": MB.init_mamba(k, cfg, out_scale)}
+        for k in lkeys])
+    k1, k2 = jax.random.split(ks[2])
+    shared = {"norm1": L.init_norm(cfg.d_model),
+              "attn": L.init_attention(k1, cfg, out_scale),
+              "norm2": L.init_norm(cfg.d_model),
+              "mlp": L.init_mlp(k2, cfg, out_scale=out_scale)}
+    return {"embed": L.init_embedding(ks[0], cfg), "layers": layers,
+            "shared": shared, "final_norm": L.init_norm(cfg.d_model)}
+
+
+def _shared_block(sp: Params, cfg: ArchConfig, x, positions):
+    h = L.attention_block(sp["attn"], cfg,
+                          L.rmsnorm(x, sp["norm1"]["scale"], cfg.norm_eps),
+                          positions=positions)
+    x = x + h
+    h2 = L.mlp_block(sp["mlp"], cfg,
+                     L.rmsnorm(x, sp["norm2"]["scale"], cfg.norm_eps))
+    return x + h2
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
+            remat: bool = True, return_hidden: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], cfg, tokens)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        h, _ = MB.mamba_block(lp["mamba"], cfg,
+                              L.rmsnorm(x, lp["norm1"]["scale"], cfg.norm_eps))
+        return x + h, None
+
+    body = L.maybe_checkpoint(body, remat)
+    seg, n_full, rem = _segments(cfg)
+    for i in range(n_full):
+        part = jax.tree.map(lambda a: a[i * seg:(i + 1) * seg], params["layers"])
+        x, _ = layer_scan(body, x, part)
+        x = _shared_block(params["shared"], cfg, x, positions)
+    if rem:
+        part = jax.tree.map(lambda a: a[n_full * seg:], params["layers"])
+        x, _ = layer_scan(body, x, part)
+    x = L.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    return L.logits(params["embed"], cfg, x), jnp.zeros((), jnp.float32)
+
+
+def init_cache(params: Params, cfg: ArchConfig, batch: int, max_len: int,
+               dtype, aux: Optional[Dict] = None) -> Params:
+    _, n_full, _ = _segments(cfg)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    mcaches = [MB.init_mamba_cache(cfg, batch, dtype)
+               for _ in range(cfg.num_layers)]
+    return {
+        "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *mcaches),
+        "k": jnp.zeros((n_full, batch, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((n_full, batch, max_len, hkv, hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                tokens: jnp.ndarray, aux: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Params]:
+    x = L.embed(params["embed"], cfg, tokens)
+    pos = cache["pos"]
+
+    def body(x, scan_in):
+        lp, lc = scan_in
+        h, nc = MB.mamba_block(lp["mamba"], cfg,
+                               L.rmsnorm(x, lp["norm1"]["scale"], cfg.norm_eps),
+                               cache=lc)
+        return x + h, nc
+
+    seg, n_full, rem = _segments(cfg)
+    sp = params["shared"]
+    new_m, new_k, new_v = [], [], []
+    for i in range(n_full):
+        part = jax.tree.map(lambda a: a[i * seg:(i + 1) * seg], params["layers"])
+        mpart = jax.tree.map(lambda a: a[i * seg:(i + 1) * seg], cache["mamba"])
+        x, nm = layer_scan(body, x, (part, mpart))
+        new_m.append(nm)
+        h, kc, vc = L.attention_decode(
+            sp["attn"], cfg,
+            L.rmsnorm(x, sp["norm1"]["scale"], cfg.norm_eps),
+            cache["k"][i], cache["v"][i], pos)
+        x = x + h
+        x = x + L.mlp_block(sp["mlp"], cfg,
+                            L.rmsnorm(x, sp["norm2"]["scale"], cfg.norm_eps))
+        new_k.append(kc)
+        new_v.append(vc)
+    if rem:
+        part = jax.tree.map(lambda a: a[n_full * seg:], params["layers"])
+        mpart = jax.tree.map(lambda a: a[n_full * seg:], cache["mamba"])
+        x, nm = layer_scan(body, x, (part, mpart))
+        new_m.append(nm)
+    x = L.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    new_cache = {
+        "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_m),
+        "k": jnp.stack(new_k), "v": jnp.stack(new_v), "pos": pos + 1,
+    }
+    return L.logits(params["embed"], cfg, x), new_cache

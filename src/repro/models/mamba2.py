@@ -1,0 +1,196 @@
+"""Mamba2 (SSD) block and attention-free LM.
+
+Projections are split per role (w_z/w_x/w_b/w_c/w_dt) so the inner channels
+shard cleanly on the model axis (heads sharded; B/C are ngroups=1 and stay
+replicated — they are tiny).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.scan_util import layer_scan
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models import shardings as sh
+
+Params = Dict[str, Any]
+
+
+def dims(cfg: ArchConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nheads = di // s.head_dim
+    return di, nheads, s.state_dim, s.head_dim, s.conv_width
+
+
+def init_mamba(key, cfg: ArchConfig, out_scale: float = 1.0) -> Params:
+    E = cfg.d_model
+    di, H, N, P, W = dims(cfg)
+    ks = jax.random.split(key, 8)
+    dt_min, dt_max = 1e-3, 1e-1
+    dt = jnp.exp(jax.random.uniform(ks[6], (H,)) *
+                 (math.log(dt_max) - math.log(dt_min)) + math.log(dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))      # inverse softplus
+    return {
+        "w_z": L._dense_init(ks[0], E, (E, di)),
+        "w_x": L._dense_init(ks[1], E, (E, di)),
+        "w_b": L._dense_init(ks[2], E, (E, N)),
+        "w_c": L._dense_init(ks[3], E, (E, N)),
+        "w_dt": L._dense_init(ks[4], E, (E, H)),
+        "conv_wx": jax.random.normal(ks[5], (W, di), jnp.float32) / (W ** 0.5),
+        "conv_wb": jax.random.normal(ks[5], (W, N), jnp.float32) / (W ** 0.5),
+        "conv_wc": jax.random.normal(ks[5], (W, N), jnp.float32) / (W ** 0.5),
+        "conv_bx": jnp.zeros((di,), jnp.float32),
+        "conv_bb": jnp.zeros((N,), jnp.float32),
+        "conv_bc": jnp.zeros((N,), jnp.float32),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "gnorm_scale": jnp.ones((di,), jnp.float32),
+        "w_out": L._dense_init(ks[7], di, (di, E), scale=out_scale),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: x (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    S = x.shape[1]
+    for i in range(W):
+        out = out + xp[:, i:i + S] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def mamba_block(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                cache: Optional[Params] = None,
+                pos: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x (B,S,E) -> (y (B,S,E), updated cache for decode).
+
+    cache = {"conv": (B, W-1, di+2N), "ssm": (B, H, N, P)}; decode is S==1.
+    """
+    E = cfg.d_model
+    di, H, N, P, W = dims(cfg)
+    b, s, _ = x.shape
+    dt_ = x.dtype
+    z = x @ p["w_z"].astype(dt_)
+    xin = x @ p["w_x"].astype(dt_)
+    Bm = x @ p["w_b"].astype(dt_)
+    Cm = x @ p["w_c"].astype(dt_)
+    dt_raw = x @ p["w_dt"].astype(dt_)
+    xin = sh.constrain(xin, sh.batch_spec(), None, "model")
+    z = sh.constrain(z, sh.batch_spec(), None, "model")
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)           # (B,S,di+2N)
+    conv_w = jnp.concatenate([p["conv_wx"], p["conv_wb"], p["conv_wc"]], -1)
+    conv_b = jnp.concatenate([p["conv_bx"], p["conv_bb"], p["conv_bc"]], -1)
+
+    new_cache = None
+    if cache is None:
+        conv_out = _causal_conv(conv_in, conv_w, conv_b)
+    else:
+        hist = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,W,ch)
+        conv_out = (hist * conv_w[None].astype(dt_)).sum(axis=1, keepdims=True) \
+            + conv_b.astype(dt_)
+        new_conv = hist[:, 1:]
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(b, s, H, P)
+    if cache is None:
+        y, _ = ops.ssd(xh, dt, A, Bm, Cm, p["D_skip"], chunk=cfg.ssm.chunk_size)
+        y = y.reshape(b, s, di)
+    else:
+        y1, new_ssm = ops.ssd_decode_step(
+            xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], p["D_skip"],
+            cache["ssm"])
+        y = y1.reshape(b, 1, di)
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+
+    y = L.rmsnorm(y * jax.nn.silu(z), p["gnorm_scale"], cfg.norm_eps)
+    out = y @ p["w_out"].astype(dt_)
+    out = sh.constrain_act(out, "res")
+    if cache is None:
+        out = L.named(out, "ssm_out")
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    di, H, N, P, W = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, W - 1, di + 2 * N), dtype),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# attention-free LM (mamba2-1.3b)
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    out_scale = 1.0 / (2 * cfg.num_layers) ** 0.5
+    lkeys = jax.random.split(ks[1], cfg.num_layers)
+
+    def one(k):
+        return {"norm1": L.init_norm(cfg.d_model),
+                "mamba": init_mamba(k, cfg, out_scale)}
+
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs), *[one(k) for k in lkeys])
+    return {"embed": L.init_embedding(ks[0], cfg),
+            "layers": layers,
+            "final_norm": L.init_norm(cfg.d_model)}
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
+            remat: bool = True, return_hidden: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = L.embed(params["embed"], cfg, batch["tokens"])
+
+    def body(x, lp):
+        h, _ = mamba_block(lp["mamba"], cfg,
+                           L.rmsnorm(x, lp["norm1"]["scale"], cfg.norm_eps))
+        return x + h, None
+
+    body = L.maybe_checkpoint(body, remat)
+    x, _ = layer_scan(body, x, params["layers"])
+    x = L.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    return L.logits(params["embed"], cfg, x), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> Params:
+    caches = [init_mamba_cache(cfg, batch, dtype)
+              for _ in range(cfg.num_layers)]
+    return {"layers": jax.tree.map(lambda *xs: jnp.stack(xs), *caches),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                tokens: jnp.ndarray, aux: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Params]:
+    """tokens (B, 1) -> logits (B, 1, V); cache advances one step."""
+    x = L.embed(params["embed"], cfg, tokens)
+
+    def body(x, scan_in):
+        lp, lc = scan_in
+        h, nc = mamba_block(lp["mamba"], cfg,
+                            L.rmsnorm(x, lp["norm1"]["scale"], cfg.norm_eps),
+                            cache=lc)
+        return x + h, nc
+
+    x, new_layer_caches = layer_scan(
+        body, x, (params["layers"], cache["layers"]))
+    x = L.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return (L.logits(params["embed"], cfg, x),
+            {"layers": new_layer_caches, "pos": cache["pos"] + 1})

@@ -1,0 +1,116 @@
+"""Top-k MoE layer with capacity-based scatter dispatch.
+
+Dispatch is grouped **per batch row** for S>1 (each row dispatches its own S
+tokens — fully local under batch sharding, zero cross-shard traffic), and as
+a single global group for decode (S==1), where the scatter/gather across the
+data axis is the all-to-all analogue.
+
+Expert weights are tensor-sharded on their FF dim by default (works for any
+expert count); expert-parallel placement (experts on the model axis) is a
+config/hillclimb option handled in shardings.py.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import shardings as sh
+
+Params = dict
+
+
+def init_moe(key, cfg: ArchConfig, out_scale: float = 1.0) -> Params:
+    m = cfg.moe
+    E, F, X = cfg.d_model, m.expert_d_ff, m.num_experts
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / (E ** 0.5)
+    s_out = out_scale / (F ** 0.5)
+    return {
+        "router": jax.random.normal(ks[0], (E, X), jnp.float32) * s_in,
+        "moe_gate": jax.random.normal(ks[1], (X, E, F), jnp.float32) * s_in,
+        "moe_up": jax.random.normal(ks[2], (X, E, F), jnp.float32) * s_in,
+        "moe_down": jax.random.normal(ks[3], (X, F, E), jnp.float32) * s_out,
+    }
+
+
+def _capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    c = int(-(-tokens_per_group * m.top_k * m.capacity_factor // m.num_experts))
+    return max(c, 1)
+
+
+def moe_block(p: Params, cfg: ArchConfig, x: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, E) -> (y (B, S, E), aux_loss scalar)."""
+    m = cfg.moe
+    X, k = m.num_experts, m.top_k
+    b, s, e = x.shape
+    dt = x.dtype
+    if s > 1:
+        x = sh.constrain(x, sh.batch_spec(), None, None)  # gather seq shards
+    if s > 1:
+        g, t = b, s                    # per-row groups (local dispatch)
+    else:
+        g, t = 1, b                    # decode: one global group
+    xg = x.reshape(g, t, e)
+    cap = _capacity(t, cfg)
+
+    # --- routing (f32) ---
+    logits = (xg.astype(jnp.float32) @ p["router"])             # (G,T,X)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                      # (G,T,k)
+    gates = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (switch-style), computed over all groups
+    me = probs.mean(axis=(0, 1))                                # (X,)
+    assign = jax.nn.one_hot(top_i[..., 0], X, dtype=jnp.float32).mean(axis=(0, 1))
+    aux = X * jnp.sum(me * assign) * m.aux_loss_weight
+
+    # --- position-in-expert via per-slot cumsum ---
+    gidx = jnp.arange(g)[:, None]
+    counts = jnp.zeros((g, X), jnp.int32)
+    disp = jnp.zeros((g, X, cap, e), dt)
+    combined = jnp.zeros((g, t, e), jnp.float32)
+    slot_data = []
+    for slot in range(k):
+        ei = top_i[..., slot]                                   # (G,T)
+        onehot = jax.nn.one_hot(ei, X, dtype=jnp.int32)         # (G,T,X)
+        pos_all = jnp.cumsum(onehot, axis=1) - 1 + counts[:, None, :]
+        pos = jnp.take_along_axis(pos_all, ei[..., None], -1)[..., 0]
+        counts = counts + onehot.sum(axis=1)
+        keep = (pos < cap)
+        pos_c = jnp.minimum(pos, cap - 1)
+        disp = disp.at[gidx, ei, pos_c].add(
+            xg * keep[..., None].astype(dt), mode="drop")
+        slot_data.append((ei, pos_c, keep))
+
+    disp = sh.constrain(disp, sh.batch_spec() if g > 1 else None,
+                        None, None, None)
+
+    # --- expert FFN (SwiGLU) ---
+    w_g = p["moe_gate"].astype(dt)
+    w_u = p["moe_up"].astype(dt)
+    w_d = p["moe_down"].astype(dt)
+    h = jax.nn.silu(jnp.einsum("gxce,xef->gxcf", disp, w_g))
+    h = h * jnp.einsum("gxce,xef->gxcf", disp, w_u)
+    h = sh.constrain(h, sh.batch_spec() if g > 1 else None, None, None, "model")
+    out = jnp.einsum("gxcf,xfe->gxce", h, w_d)                  # (G,X,C,E)
+    out = sh.constrain(out, sh.batch_spec() if g > 1 else None, None, None, None)
+    # (combine-before-psum via implicit constraints was tried and made the
+    # schedule WORSE — XLA inserted collective-permutes; the explicit
+    # shard_map version lives in moe_ep.moe_block_fs. EXPERIMENTS.md §Perf.)
+
+    # --- combine ---
+    out32 = out.astype(jnp.float32)
+    for slot, (ei, pos_c, keep) in enumerate(slot_data):
+        gathered = out32[gidx[..., None], ei[..., None],
+                         pos_c[..., None]][..., 0, :]           # (G,T,E)
+        w = gates[..., slot] * keep.astype(jnp.float32)
+        combined = combined + gathered * w[..., None]
+
+    y = combined.reshape(b, s, e).astype(dt)
+    from repro.models.layers import named
+    return named(sh.constrain_act(y, "res"), "ffn_out"), aux

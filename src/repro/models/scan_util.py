@@ -1,0 +1,21 @@
+"""Layer-stacking scan with controllable unroll.
+
+``REPRO_SCAN_UNROLL=full`` unrolls every layer scan into straight-line HLO.
+Used by the dry-run's cost pass: XLA's HloCostAnalysis visits a ``while``
+body ONCE regardless of trip count, so FLOPs/bytes of scanned layers are
+invisible unless unrolled (see launch/dryrun.py cost extrapolation).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def layer_scan(body, carry, xs, **kw):
+    unroll = os.environ.get("REPRO_SCAN_UNROLL", "")
+    if unroll == "full":
+        kw["unroll"] = True
+    elif unroll:
+        kw["unroll"] = int(unroll)
+    return jax.lax.scan(body, carry, xs, **kw)

@@ -1,0 +1,220 @@
+"""Sharding rules: logical-name → PartitionSpec, divisibility-adaptive.
+
+The mesh always has a trailing tensor axis ``model``; the batch maps to
+``("pod", "data")`` when a pod axis exists. Parameter specs are derived
+from leaf names (naming contract in models/layers.py), so one rule table
+covers every architecture. Any dim that the mesh axis does not divide is
+replicated (e.g. yi-9b's 4 KV heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+# Sharding modes (DESIGN.md §6 / EXPERIMENTS.md §Perf):
+#   tp_sp — Megatron tensor parallel + sequence-parallel residual stream
+#           (default; residuals sharded over `model` on the seq dim).
+#   tp    — tensor parallel, replicated residuals (memory-hungry baseline).
+#   fsdp  — ZeRO-3 weight sharding over `model` (per-layer all-gather),
+#           token-parallel MLP, heads-sharded attention, seq-sharded
+#           residuals.
+MODES = ("tp_sp", "tp", "fsdp")
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _STATE.mesh = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+def set_mode(mode: str) -> None:
+    assert mode in MODES, mode
+    _STATE.mode = mode
+
+
+def get_mode() -> str:
+    return getattr(_STATE, "mode", "tp_sp")
+
+
+def set_moe_impl(impl: str) -> None:
+    """"dense" (default capacity-dispatch) | "ep_a2a" (shard_map expert
+    parallel with explicit all_to_all) | "fs" (shard_map F-sharded with
+    combine-before-psum); §Perf levers."""
+    assert impl in ("dense", "ep_a2a", "fs"), impl
+    _STATE.moe_impl = impl
+
+
+def get_moe_impl() -> str:
+    return getattr(_STATE, "moe_impl", "dense")
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh: Mesh) -> str:
+    return "model"
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def adapt_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the corresponding dim."""
+    out = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            out.append(None)
+            continue
+        if dim % axis_size(mesh, axes) == 0:
+            out.append(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def constrain(x: jnp.ndarray, *spec) -> jnp.ndarray:
+    """with_sharding_constraint if a mesh is active; no-op otherwise."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    s = adapt_spec(P(*spec), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))
+
+
+def batch_spec() -> object:
+    """Logical batch axes for the active mesh ('data' or ('pod','data'))."""
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    ax = batch_axes(mesh)
+    return ax if len(ax) > 1 else (ax[0] if ax else None)
+
+
+def constrain_act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """Activation constraint by logical kind, resolved per sharding mode.
+
+    kinds: res (residual stream, (B,S,E)), heads ((B,S,H,D)),
+           ff ((B,S,F)), logits ((B,S,V)).
+    """
+    mode = get_mode()
+    b = batch_spec()
+    if kind == "res":
+        seq = "model" if mode in ("tp_sp", "fsdp") else None
+        return constrain(x, b, seq, None)
+    if kind == "heads":
+        return constrain(x, b, None, "model", None)
+    if kind == "ff":
+        ff = None if mode == "fsdp" else "model"
+        seq = "model" if mode == "fsdp" else None
+        return constrain(x, b, seq, ff)
+    if kind == "logits":
+        return constrain(x, b, None, "model")
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs by leaf name
+# ---------------------------------------------------------------------------
+
+# name -> spec builder(cfg, kv_ok, moe_expert_parallel)
+def _param_rule(name: str, cfg, kv_ok: bool, moe_ep: bool) -> P:
+    tp = "model"
+    kv = tp if kv_ok else None
+    table = {
+        # embeddings
+        "embedding": P(tp, None),
+        "lm_head": P(None, tp),
+        "frontend_proj": P(None, None),
+        # attention
+        "wq": P(None, tp), "wk": P(None, kv), "wv": P(None, kv),
+        "wo": P(tp, None),
+        "bq": P(tp), "bk": P(kv), "bv": P(kv),
+        "gate_attn": P(), "gate_mlp": P(),
+        # dense mlp
+        "w_gate": P(None, tp), "w_up": P(None, tp), "w_down": P(tp, None),
+        # moe (experts, in, out)
+        "router": P(None, None),
+        "moe_gate": P(tp, None, None) if moe_ep else P(None, None, tp),
+        "moe_up": P(tp, None, None) if moe_ep else P(None, None, tp),
+        "moe_down": P(tp, None, None) if moe_ep else P(None, tp, None),
+        # mamba2
+        "w_z": P(None, tp), "w_x": P(None, tp), "w_dt": P(None, tp),
+        "w_b": P(None, None), "w_c": P(None, None),
+        "conv_wx": P(None, tp), "conv_wb": P(None, None), "conv_wc": P(None, None),
+        "conv_bx": P(tp), "conv_bb": P(None), "conv_bc": P(None),
+        "A_log": P(tp), "dt_bias": P(tp), "D_skip": P(tp),
+        "gnorm_scale": P(tp),
+        "w_out": P(tp, None),
+        # norms
+        "scale": P(None), "bias": P(None),
+    }
+    return table.get(name, P())
+
+
+def _fsdp_rule(name: str, shape, stacked_dims: int, tp_size: int) -> P:
+    """ZeRO-3: shard the first non-stacked dim the model axis divides."""
+    if name in ("embedding", "lm_head"):     # keep vocab sharding (CE path)
+        return _fsdp_vocab(name)
+    spec = [None] * len(shape)
+    for i in range(stacked_dims, len(shape)):
+        if shape[i] % tp_size == 0 and shape[i] >= tp_size:
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def _fsdp_vocab(name: str) -> P:
+    return P("model", None) if name == "embedding" else P(None, "model")
+
+
+def param_specs(params, cfg, mesh: Mesh, *, moe_expert_parallel: bool = False):
+    """Mirror a param pytree with PartitionSpecs (stacked-layer aware)."""
+    tp_size = mesh.shape["model"]
+    kv_ok = cfg.num_kv_heads > 0 and cfg.num_kv_heads % tp_size == 0
+    if moe_expert_parallel and cfg.moe is not None:
+        moe_ep = cfg.moe.num_experts % tp_size == 0
+    else:
+        moe_ep = False
+    mode = get_mode()
+
+    def rule(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        ndim = jnp.ndim(leaf)
+        if mode == "fsdp":
+            base_rank = {"embedding": 2, "lm_head": 2}.get(name, None)
+            spec = _param_rule(name, cfg, kv_ok, moe_ep)
+            stacked = max(ndim - len(tuple(spec)), 0)
+            spec_t = tuple(_fsdp_rule(name, jnp.shape(leaf)[stacked:],
+                                      0, tp_size))
+            spec_t = (None,) * stacked + spec_t
+            return adapt_spec(P(*spec_t[:ndim]), jnp.shape(leaf), mesh)
+        spec = _param_rule(name, cfg, kv_ok, moe_ep)
+        # stacked layer leading dim (heuristic: ndim exceeds spec rank)
+        spec_t = tuple(spec)
+        while len(spec_t) < ndim:
+            spec_t = (None,) + spec_t
+        return adapt_spec(P(*spec_t[:ndim]), jnp.shape(leaf), mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def named(params_or_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), params_or_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,208 @@
+"""Decoder-only transformer family: dense, MoE, and VLM (cross-attn) LMs.
+
+Layers are weight-stacked and driven by ``lax.scan`` (small HLO, fast
+compiles at 30-48 layers). VLM cross-attention layers split the stack into
+segments: scan k dense layers, apply one cross block, repeat.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.scan_util import layer_scan
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import shardings as sh
+
+Params = Dict[str, Any]
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _slice(tree, a: int, b: int):
+    return jax.tree.map(lambda x: x[a:b], tree)
+
+
+def _ffn(lp: Params, cfg: ArchConfig, x):
+    if cfg.moe is not None:
+        impl = sh.get_moe_impl()
+        if x.shape[1] > 1 and impl != "dense":
+            from repro.models import moe_ep
+            if impl == "ep_a2a" and moe_ep.ep_applicable(cfg, sh.get_mesh()):
+                return moe_ep.moe_block_ep(lp["moe"], cfg, x)
+            if impl == "fs" and moe_ep.fs_applicable(cfg, sh.get_mesh()):
+                return moe_ep.moe_block_fs(lp["moe"], cfg, x)
+        return M.moe_block(lp["moe"], cfg, x)
+    return L.mlp_block(lp["mlp"], cfg, x), jnp.zeros((), jnp.float32)
+
+
+def init(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    out_scale = 1.0 / (2 * cfg.num_layers) ** 0.5
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        p = {"norm1": L.init_norm(cfg.d_model),
+             "attn": L.init_attention(k1, cfg, out_scale),
+             "norm2": L.init_norm(cfg.d_model)}
+        if cfg.moe is not None:
+            p["moe"] = M.init_moe(k2, cfg, out_scale)
+        else:
+            p["mlp"] = L.init_mlp(k2, cfg, out_scale=out_scale)
+        return p
+
+    layers = _stack([one(k) for k in jax.random.split(ks[1], cfg.num_layers)])
+    params = {"embed": L.init_embedding(ks[0], cfg), "layers": layers,
+              "final_norm": L.init_norm(cfg.d_model)}
+    if cfg.cross_attn_every:
+        n_cross = cfg.num_layers // cfg.cross_attn_every
+
+        def one_cross(k):
+            k1, k2 = jax.random.split(k)
+            return {"norm1": L.init_norm(cfg.d_model),
+                    "attn": L.init_attention(k1, cfg, out_scale),
+                    "gate_attn": jnp.zeros((), jnp.float32),
+                    "norm2": L.init_norm(cfg.d_model),
+                    "mlp": L.init_mlp(k2, cfg, out_scale=out_scale),
+                    "gate_mlp": jnp.zeros((), jnp.float32)}
+
+        params["cross"] = _stack(
+            [one_cross(k) for k in jax.random.split(ks[2], n_cross)])
+    return params
+
+
+def _layer_body(cfg: ArchConfig, positions):
+    def body(carry, lp):
+        x, aux = carry
+        h = L.attention_block(lp["attn"], cfg,
+                              L.rmsnorm(x, lp["norm1"]["scale"], cfg.norm_eps),
+                              positions=positions)
+        x = x + h
+        h2, a = _ffn(lp, cfg, L.rmsnorm(x, lp["norm2"]["scale"], cfg.norm_eps))
+        return (x + h2, aux + a), None
+    return body
+
+
+def _cross_block(cp: Params, cfg: ArchConfig, x, img, decode_cache=None):
+    """llama-3.2-vision style gated cross-attn block."""
+    if decode_cache is None:
+        h = L.attention_block(cp["attn"], cfg,
+                              L.rmsnorm(x, cp["norm1"]["scale"], cfg.norm_eps),
+                              cross_x=img, use_rope=False)
+    else:
+        ck, cv = decode_cache
+        h = L.cross_attention_decode(
+            cp["attn"], cfg,
+            L.rmsnorm(x, cp["norm1"]["scale"], cfg.norm_eps), ck, cv)
+    x = x + jnp.tanh(cp["gate_attn"]).astype(x.dtype) * h
+    h2 = L.mlp_block(cp["mlp"], cfg,
+                     L.rmsnorm(x, cp["norm2"]["scale"], cfg.norm_eps))
+    return x + jnp.tanh(cp["gate_mlp"]).astype(x.dtype) * h2
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
+            remat: bool = True, return_hidden: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], cfg, tokens)
+    positions = jnp.arange(tokens.shape[1])
+    body = L.maybe_checkpoint(_layer_body(cfg, positions), remat)
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.cross_attn_every:
+        img = batch["img_embeds"].astype(x.dtype)
+        seg = cfg.cross_attn_every
+        n_cross = cfg.num_layers // seg
+        carry = (x, aux0)
+        for i in range(n_cross):
+            carry, _ = layer_scan(body, carry,
+                                    _slice(params["layers"], i * seg, (i + 1) * seg))
+            x, aux = carry
+            cp = jax.tree.map(lambda a: a[i], params["cross"])
+            x = _cross_block(cp, cfg, x, img)
+            carry = (x, aux)
+        rem = cfg.num_layers - n_cross * seg
+        if rem:
+            carry, _ = layer_scan(body, carry,
+                                    _slice(params["layers"], n_cross * seg,
+                                           cfg.num_layers))
+        x, aux = carry
+    else:
+        (x, aux), _ = layer_scan(body, (x, aux0), params["layers"])
+    x = L.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    return L.logits(params["embed"], cfg, x), aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(params: Params, cfg: ArchConfig, batch: int, max_len: int,
+               dtype, aux: Optional[Dict[str, Any]] = None) -> Params:
+    smax = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    cache = {
+        "k": jnp.zeros((cfg.num_layers, batch, smax, hkv, hd), dtype),
+        "v": jnp.zeros((cfg.num_layers, batch, smax, hkv, hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.cross_attn_every:
+        img = aux["img_embeds"].astype(dtype)
+        ck, cv = jax.vmap(
+            lambda cp: L.cross_kv(cp["attn"], cfg, img))(params["cross"])
+        cache["ck"], cache["cv"] = ck, cv
+    return cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                tokens: jnp.ndarray, aux: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Params]:
+    """tokens (B,1) -> logits (B,1,V); advances the KV cache one position."""
+    x = L.embed(params["embed"], cfg, tokens)
+    pos = cache["pos"]
+
+    def body(x, scan_in):
+        lp, kc, vc = scan_in
+        h, kc, vc = L.attention_decode(
+            lp["attn"], cfg,
+            L.rmsnorm(x, lp["norm1"]["scale"], cfg.norm_eps), kc, vc, pos)
+        x = x + h
+        h2, _ = _ffn(lp, cfg, L.rmsnorm(x, lp["norm2"]["scale"], cfg.norm_eps))
+        return x + h2, (kc, vc)
+
+    if cfg.cross_attn_every:
+        seg = cfg.cross_attn_every
+        n_cross = cfg.num_layers // seg
+        ks, vs = [], []
+        for i in range(n_cross):
+            sl = slice(i * seg, (i + 1) * seg)
+            x, (kc, vc) = layer_scan(
+                body, x, (_slice(params["layers"], sl.start, sl.stop),
+                          cache["k"][sl], cache["v"][sl]))
+            ks.append(kc)
+            vs.append(vc)
+            cp = jax.tree.map(lambda a: a[i], params["cross"])
+            x = _cross_block(cp, cfg, x, None,
+                             decode_cache=(cache["ck"][i], cache["cv"][i]))
+        rem = cfg.num_layers - n_cross * seg
+        if rem:
+            x, (kc, vc) = layer_scan(
+                body, x, (_slice(params["layers"], n_cross * seg, cfg.num_layers),
+                          cache["k"][n_cross * seg:], cache["v"][n_cross * seg:]))
+            ks.append(kc)
+            vs.append(vc)
+        new_k = jnp.concatenate(ks, axis=0)
+        new_v = jnp.concatenate(vs, axis=0)
+    else:
+        x, (new_k, new_v) = layer_scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    out = dict(cache, k=new_k, v=new_v, pos=pos + 1)
+    return L.logits(params["embed"], cfg, x), out

