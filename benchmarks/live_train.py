@@ -36,14 +36,17 @@ def probe_curve() -> Tuple[List[Dict], float]:
 
 def retune_cost() -> Tuple[List[Dict], float]:
     """Wall-clock cost of a HyperTune retune under the masked-capacity
-    scheme: must be ~one step (no recompile, no epoch restart)."""
+    scheme: must be ~one step (no recompile, no epoch restart). The
+    retune flows through the ControlPlane (policy decision -> Eq. 1
+    re-split -> row mask) exactly as in production."""
     t = _trainer(steps=16)
     t.run(4)                                   # compile + warm
     healthy = [r.step_time for r in t.records[1:]]
     from repro.launch.train import interference_report_fn
     fn = interference_report_fn({"b": [(4, 10 ** 9, 0.4)]})
     t.run(12, report_fn=fn)
-    retune_steps = [r for r in t.records if r.retune]
+    retune_steps = [e for e in t.control_plane.events
+                    if e.reason == "decline"]
     after = [r.step_time for r in t.records if r.step > 10]
     compiles = t.step_fn._cache_size()
     rows = [
@@ -51,6 +54,7 @@ def retune_cost() -> Tuple[List[Dict], float]:
         {"metric": "mean_step_s_after_retune", "value": round(np.mean(after), 4)},
         {"metric": "n_retunes", "value": len(retune_steps)},
         {"metric": "n_compiles", "value": compiles},
+        {"metric": "policy", "value": t.control_plane.policies[0].name},
     ]
     # derived: retune overhead ratio (≈1.0 == free retune)
     ratio = float(np.mean(after) / np.mean(healthy))

@@ -5,15 +5,20 @@ the figure's headline number. ``benchmarks/run.py`` drives all of them.
 
   fig1   — batchsize -> speed curve + knee (paper Fig. 1)
   fig6   — 3 Xeon nodes, interference ± HyperTune (paper Fig. 6)
+  fig6_sequence — the worked example's 180 -> 140 -> 100 retune chain
   fig7a  — host + N CSDs scaling + interference, MobileNetV2 (Fig. 7a)
   fig7b  — same for ShuffleNet (Fig. 7b)
   energy — J/img host-only vs host+36 CSDs (paper §V-B)
+  energy_policy — EnergyAwarePolicy vs throughput-only under host
+                  interference (J/img, the paper's energy axis made
+                  active; EXPERIMENTS.md §Energy)
 
-The cluster is the calibrated simulator (core/simulator.py); the paper's
-own numbers are attached to every row for side-by-side comparison. Where
-the printed paper value is infeasible under its own synchronous model
-(fig6 6/8 recovery: 83.7 > 79.6 bound), the bound is reported too — see
-EXPERIMENTS.md §Faithfulness.
+The cluster is the calibrated simulator (core/simulator.py) driven by
+the control plane (core/control/); the paper's own numbers are attached
+to every row for side-by-side comparison. Where the printed paper value
+is infeasible under its own synchronous model (fig6 6/8 recovery:
+83.7 > 79.6 bound), the bound is reported too — see EXPERIMENTS.md
+§Faithfulness.
 """
 from __future__ import annotations
 
@@ -21,23 +26,25 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.controller import HyperTuneConfig, HyperTuneController
+from repro.core.control import (ControlPlane, EnergyAwarePolicy,
+                                Eq3TablePolicy, SpeedDeclinePolicy)
 from repro.core.simulator import (
     ClusterSim, Interference, XEON_CAP_4OF8, XEON_CAP_6OF8,
     HOST_CAP_MOBILENET, HOST_CAP_SHUFFLENET, XEON_MOBILENET,
-    csd_plan, saturating_table, stannis_3node_plan)
+    csd_plan, fig6_escalating_interference, saturating_table,
+    stannis_3node_plan)
 
 
 def _plateau(res, k=5) -> float:
     return float(np.mean(res.speeds[-k:]))
 
 
-def _run(plan, cap=None, group="xeon0", controller=False, use_eq3=False,
-         steps=60):
+def _run(plan, cap=None, group="xeon0", policy=None, steps=60):
+    """policy: a TuningPolicy instance, or None for the uncontrolled
+    baseline."""
     ivs = [Interference(group, 5, 10 ** 9, cap)] if cap else []
-    ctrl = (HyperTuneController(plan, HyperTuneConfig(use_eq3_table=use_eq3))
-            if controller else None)
-    return ClusterSim(plan, ivs, controller=ctrl).run(steps)
+    cp = ControlPlane(plan, [policy]) if policy is not None else None
+    return ClusterSim(plan, ivs, control_plane=cp).run(steps)
 
 
 # ---------------------------------------------------------------------------
@@ -66,9 +73,11 @@ def fig6() -> Tuple[List[Dict], float]:
         "interf_6of8": _plateau(_run(stannis_3node_plan(),
                                      cap=XEON_CAP_6OF8)),
         "hypertune_4of8": _plateau(_run(stannis_3node_plan(),
-                                        cap=XEON_CAP_4OF8, controller=True)),
+                                        cap=XEON_CAP_4OF8,
+                                        policy=SpeedDeclinePolicy())),
         "hypertune_6of8": _plateau(_run(stannis_3node_plan(),
-                                        cap=XEON_CAP_6OF8, controller=True)),
+                                        cap=XEON_CAP_6OF8,
+                                        policy=SpeedDeclinePolicy())),
     }
     # synchronous feasibility bound for the 6/8 recovery given the paper's
     # own baseline: two free nodes pinned at 180/5.782s
@@ -98,9 +107,9 @@ def _fig7(net: str, paper_scale: float, paper_points: Dict[str, float],
     full = csd_plan(36, net)
     interf = _plateau(_run(full, cap=cap, group="host"))
     rec_eq3 = _plateau(_run(csd_plan(36, net), cap=cap, group="host",
-                            controller=True, use_eq3=True))
+                            policy=Eq3TablePolicy()))
     rec_inv = _plateau(_run(csd_plan(36, net), cap=cap, group="host",
-                            controller=True, use_eq3=False))
+                            policy=SpeedDeclinePolicy()))
     scale = rows[-1]["sim_img_s"] / host_only
     rows += [
         {"n_csd": 36, "mode": "interfered_6of8",
@@ -127,6 +136,43 @@ def fig7b() -> Tuple[List[Dict], float]:
     return _fig7("shufflenet", 2.82, {}, HOST_CAP_SHUFFLENET)
 
 
+def fig6_sequence() -> Tuple[List[Dict], float]:
+    """The paper's worked example: Gzip escalates 4/8 -> 6/8 stolen
+    cores; HyperTune retunes 180 -> 140 -> 100 (§III-B). Derived value
+    is the final batch size."""
+    plan = stannis_3node_plan()
+    cp = ControlPlane(plan, [SpeedDeclinePolicy()])
+    ClusterSim(plan, fig6_escalating_interference(),
+               control_plane=cp).run(45)
+    rows = [{"step": e.step, "group": e.group, "old_batch": e.old_batch,
+             "new_batch": e.new_batch, "reason": e.reason}
+            for e in cp.events]
+    final = rows[-1]["new_batch"] if rows else 0
+    return rows, float(final)
+
+
+def energy_policy() -> Tuple[List[Dict], float]:
+    """EnergyAwarePolicy vs throughput-only SpeedDeclinePolicy on the
+    Fig. 7a cluster under 6/8-core host interference. The energy policy
+    masks the 44.1 W host out (its marginal J/img is ~10x the 0.27 W
+    CSDs') and cuts whole-run J/img ~2.4x (plateau ~4.7x) at a bounded
+    throughput cost; derived value is j_per_img(speed) /
+    j_per_img(energy) (>1 == the energy policy wins)."""
+    runs = {
+        "speed_decline": _run(csd_plan(36), cap=HOST_CAP_MOBILENET,
+                              group="host", policy=SpeedDeclinePolicy()),
+        "energy_aware": _run(csd_plan(36), cap=HOST_CAP_MOBILENET,
+                             group="host", policy=EnergyAwarePolicy()),
+    }
+    rows = [{"policy": name, "j_per_img": round(res.j_per_img, 3),
+             "img_s": round(_plateau(res), 2),
+             "wall_s": round(res.wall_time, 1)}
+            for name, res in runs.items()]
+    ratio = (runs["speed_decline"].j_per_img /
+             runs["energy_aware"].j_per_img)
+    return rows, round(ratio, 3)
+
+
 def energy() -> Tuple[List[Dict], float]:
     host = _run(csd_plan(0), group="host")
     full = _run(csd_plan(36), group="host")
@@ -142,5 +188,6 @@ def energy() -> Tuple[List[Dict], float]:
     return rows, round(ratio, 3)
 
 
-ALL = {"fig1": fig1, "fig6": fig6, "fig7a": fig7a, "fig7b": fig7b,
-       "energy": energy}
+ALL = {"fig1": fig1, "fig6": fig6, "fig6_sequence": fig6_sequence,
+       "fig7a": fig7a, "fig7b": fig7b, "energy": energy,
+       "energy_policy": energy_policy}

@@ -35,12 +35,14 @@ def main():
     print("plan:", plan.batch_sizes())
 
     # -- phases 1+2: group b silent in steps [6, 18) ---------------------
+    # (the control plane's liveness derives the failure from bus silence;
+    # no separate heartbeat protocol)
     recs = trainer.run(24, report_fn=dropout_report_fn({"b": (6, 18)}))
     events = [(e.step, e.group, e.old_batch, e.new_batch, e.reason)
-              for e in trainer.controller.events]
+              for e in trainer.control_plane.events]
     print("elastic events:", events)
     assert any(e[3] == 0 for e in events), "failure not detected"
-    assert trainer.controller.plan.batch_sizes()["b"] > 0, "rejoin failed"
+    assert trainer.control_plane.plan.batch_sizes()["b"] > 0, "rejoin failed"
 
     # -- phase 3: crash + auto-resume ------------------------------------
     print(f"\n'crash' at step {trainer.step}; starting a fresh trainer...")
@@ -48,7 +50,7 @@ def main():
         {"a": (1, sm), "b": (2, sm), "c": (1, sm)}, 8192), cfg)
     assert fresh.resume(), "no valid checkpoint found"
     print(f"auto-resumed at step {fresh.step} "
-          f"with plan {fresh.controller.plan.batch_sizes()}")
+          f"with plan {fresh.control_plane.plan.batch_sizes()}")
     more = fresh.run(8)
     print(f"post-resume losses: {[round(r.loss, 3) for r in more[:4]]}")
     print("OK")

@@ -29,6 +29,9 @@ def main():
 
     cfg = TrainerConfig(seq_len=32, steps=40, dataset_size=8192, log_every=10)
     trainer = HeteroTrainer(arch, plan, cfg)
+    policy = trainer.control_plane.policies[0]
+    print(f"control plane: policy={policy.name}, "
+          f"liveness_timeout={trainer.control_plane.liveness_timeout}")
 
     # node2 loses 55% of its speed from step 8 onward (external workload)
     schedule = {"node2": [(8, 10 ** 9, 0.45)]}
@@ -39,7 +42,7 @@ def main():
 
     retunes = [r for r in recs if r.retune]
     print(f"\nretunes fired: {[r.retune for r in retunes]}")
-    print(f"final plan: {trainer.controller.plan.batch_sizes()}")
+    print(f"final plan: {trainer.control_plane.plan.batch_sizes()}")
     print(f"compiled programs: {trainer.step_fn._cache_size()} "
           "(masked retune = zero recompiles)")
     print(f"loss: {recs[0].loss:.3f} -> {recs[-1].loss:.3f}")

@@ -1,3 +1,10 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+# The paper's primary contribution — the HyperTune SYSTEM:
+#   allocator.py     §III-A equal-step-time solve + Eq. 1 dataset split
+#   speed_model.py   benchmark tables, saturating fit, Eq. 3
+#   control/         policy-driven control plane (telemetry bus,
+#                    pluggable tuning policies, elastic liveness)
+#   controller.py    back-compat HyperTuneController shim
+#   simulator.py     paper-calibrated cluster simulator (§V)
+#   elastic.py       explicit-liveness HeartbeatMonitor shim
+#   hetero_dp.py     capacity-masked heterogeneous data parallelism
+# See DESIGN.md for the architecture map.

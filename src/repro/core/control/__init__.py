@@ -1,0 +1,24 @@
+"""Policy-driven control plane for HyperTune (DESIGN.md §7).
+
+Telemetry (one event stream for simulator, live trainer and liveness),
+pluggable tuning policies (speed decline / Eq. 3 table / cpu-util /
+energy-aware), and the ControlPlane that composes them with elastic
+failure & rejoin handling.
+"""
+from repro.core.control.control_plane import (ControlPlane, RetuneEvent,
+                                              policy_from_config)
+from repro.core.control.policies import (DEFAULT_POWER_W, CpuUtilPolicy,
+                                         Decision, EnergyAwarePolicy,
+                                         Eq2Trigger, Eq3TablePolicy,
+                                         HyperTuneConfig, SpeedDeclinePolicy,
+                                         TuningPolicy, attributable_power)
+from repro.core.control.telemetry import (StepReport, TelemetryBus,
+                                          normalize_reports)
+
+__all__ = [
+    "ControlPlane", "RetuneEvent", "policy_from_config",
+    "DEFAULT_POWER_W", "CpuUtilPolicy", "Decision", "EnergyAwarePolicy",
+    "Eq2Trigger", "Eq3TablePolicy", "HyperTuneConfig", "SpeedDeclinePolicy",
+    "TuningPolicy", "attributable_power",
+    "StepReport", "TelemetryBus", "normalize_reports",
+]

@@ -1,0 +1,178 @@
+"""The control plane: policies + elastic handling + plan application.
+
+One :class:`ControlPlane` instance lives on the coordinator. Per
+synchronous step it
+
+  1. drains the :class:`~repro.core.control.telemetry.TelemetryBus`
+     (or accepts reports directly),
+  2. rejoins any silence-failed group that is reporting again
+     (restored at its benchmark knee — the paper's recovery semantics),
+  3. polls its :class:`~repro.core.control.policies.TuningPolicy` list
+     in order and applies the first decision (new Eq. 1 ranges + row
+     mask, capacities and compiled shapes untouched),
+  4. derives liveness from the stream: a group with b_g > 0 that has
+     published nothing for ``liveness_timeout`` steps is masked out
+     (b_g -> 0) — a degenerate retune, training continues the SAME
+     compiled step (DESIGN.md §4/§7).
+
+``repro.core.controller.HyperTuneController`` survives as a thin shim
+over this class so historical call sites and tests keep working.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import allocator
+from repro.core.allocator import BatchPlan
+from repro.core.control.policies import (CpuUtilPolicy, Decision,
+                                         EnergyAwarePolicy, Eq3TablePolicy,
+                                         HyperTuneConfig, SpeedDeclinePolicy,
+                                         TuningPolicy)
+from repro.core.control.telemetry import (StepReport, TelemetryBus,
+                                          normalize_reports)
+
+
+@dataclasses.dataclass
+class RetuneEvent:
+    """One applied plan change. ``reason`` is "decline" | "recover" |
+    "energy" | "failure". Moved here from ``repro.core.controller``
+    (which re-exports it)."""
+
+    step: int
+    group: str
+    old_batch: int
+    new_batch: int
+    reason: str
+    plan: BatchPlan
+
+
+def policy_from_config(cfg: HyperTuneConfig) -> TuningPolicy:
+    """The historical string-flag dispatch, in one place: config ->
+    first-class policy object."""
+    if cfg.mode == "cpu_util":
+        return CpuUtilPolicy(cfg)
+    if cfg.mode == "energy":
+        return EnergyAwarePolicy(cfg)
+    if cfg.use_eq3_table:
+        return Eq3TablePolicy(cfg)
+    return SpeedDeclinePolicy(cfg)
+
+
+class ControlPlane:
+    """Composes tuning policies with elastic failure/rejoin handling."""
+
+    def __init__(self, plan: BatchPlan,
+                 policies: Optional[Sequence[TuningPolicy]] = None,
+                 cfg: Optional[HyperTuneConfig] = None,
+                 bus: Optional[TelemetryBus] = None,
+                 liveness_timeout: Optional[int] = None):
+        self.cfg = cfg or HyperTuneConfig()
+        self.plan = plan
+        self.policies: List[TuningPolicy] = (
+            list(policies) if policies else [policy_from_config(self.cfg)])
+        self.bus = bus or TelemetryBus()
+        self.liveness_timeout = liveness_timeout
+        self.events: List[RetuneEvent] = []
+        self.indices: List[Dict[str, float]] = []
+        self._silence_failed: Dict[str, bool] = {}
+
+    # ------------------------------------------------------------------
+    # per-step entry points
+    # ------------------------------------------------------------------
+    def poll(self, step: int) -> Optional[RetuneEvent]:
+        """Drain the bus and run one control round."""
+        return self.observe(step, self.bus.drain())
+
+    def observe(self, step: int, reports) -> Optional[RetuneEvent]:
+        """Run one control round on this step's reports.
+
+        ``reports`` may be ``{group: StepReport}`` or the legacy
+        ``{group: {"speed": ..., "cpu_util": ...}}`` dicts. Returns the
+        applied RetuneEvent (at most one per step; rejoin takes priority
+        over policy decisions, liveness runs last) or None.
+        """
+        reps = normalize_reports(step, reports)
+        for name in reps:
+            # single liveness clock: the bus, whichever path reports
+            # arrived by (publish/poll or direct observe)
+            self.bus.note_seen(name, step)
+
+        event = self._maybe_rejoin(step, reps)
+
+        polled = event is None
+        if polled:
+            for policy in self.policies:
+                decision = policy.decide(step, self.plan, reps)
+                if decision is not None:
+                    event = self._apply(step, decision.group,
+                                        decision.new_batch, decision.reason)
+                    break
+        # diagnostics: per-step Eq. 2 indices from the first policy
+        # exposing them (mirrors the historical controller.indices);
+        # on a rejoin step the policies never evaluated, so record {}
+        idxs: Dict[str, float] = {}
+        if polled:
+            for policy in self.policies:
+                idxs = policy.indices()
+                if idxs:
+                    break
+        self.indices.append(idxs)
+
+        if event is None:
+            event = self._check_liveness(step)
+        return event
+
+    # ------------------------------------------------------------------
+    # elastic path
+    # ------------------------------------------------------------------
+    def mark_failed(self, step: int, group: str) -> RetuneEvent:
+        """A group disappeared (pre-emption / crash): b_g -> 0 masks its
+        rows; Eq. 1 re-splits the dataset so no samples are starved."""
+        g = next(g for g in self.plan.groups if g.name == group)
+        return self._apply(step, g.name, 0, "failure")
+
+    def mark_rejoined(self, step: int, group: str) -> RetuneEvent:
+        g = next(g for g in self.plan.groups if g.name == group)
+        bs = int(g.speed_model.knee())
+        return self._apply(step, g.name, min(bs, g.capacity), "recover")
+
+    def _maybe_rejoin(self, step: int,
+                      reports: Dict[str, StepReport]
+                      ) -> Optional[RetuneEvent]:
+        """A silence-failed group is publishing again -> bring it back at
+        its benchmark knee. Only liveness-declared failures auto-rejoin;
+        explicit mark_failed() callers own their own recovery."""
+        for name in reports:
+            if self._silence_failed.get(name):
+                self._silence_failed[name] = False
+                return self.mark_rejoined(step, name)
+        return None
+
+    def _check_liveness(self, step: int) -> Optional[RetuneEvent]:
+        if self.liveness_timeout is None:
+            return None
+        for g in self.plan.groups:
+            if g.batch_size == 0:
+                continue
+            last = self.bus.last_seen(g.name)
+            if last is None:                     # never reported: grace
+                self.bus.note_seen(g.name, step)  # starts now
+                continue
+            if step - last >= self.liveness_timeout and \
+                    not self._silence_failed.get(g.name):
+                self._silence_failed[g.name] = True
+                return self.mark_failed(step, g.name)
+        return None
+
+    # ------------------------------------------------------------------
+    def _apply(self, step: int, group: str, new_bs: int,
+               reason: str) -> RetuneEvent:
+        g = next(g for g in self.plan.groups if g.name == group)
+        old = g.batch_size
+        self.plan = allocator.retune(self.plan, {group: new_bs}, min_batch=0)
+        ev = RetuneEvent(step, group, old, new_bs, reason, self.plan)
+        self.events.append(ev)
+        for policy in self.policies:
+            policy.plan_applied(self.plan, group, reason)
+        return ev

@@ -1,0 +1,384 @@
+"""Pluggable tuning policies (paper §III-B/C, + the energy axis of §V-B).
+
+The paper's coordinator monitors per-node speed and retunes batch sizes
+on the fly. Historically that logic was one monolith with three variants
+behind string flags; here every variant is a first-class
+:class:`TuningPolicy` the :class:`~repro.core.control.control_plane.
+ControlPlane` composes:
+
+  * :class:`SpeedDeclinePolicy` — Eq. 2 decline index + the step-time-
+    preserving inversion (reproduces the paper's 180 -> 140 -> 100
+    worked example; see DESIGN.md §7/§8);
+  * :class:`Eq3TablePolicy` — same trigger, retune via the paper's
+    printed Eq. 3 table interpolation;
+  * :class:`CpuUtilPolicy` — the paper's third method: sliding-window
+    CPU utilisation, able to both shrink AND grow the batch;
+  * :class:`EnergyAwarePolicy` — beyond the paper's passive J/img
+    measurement: fold the power model into the retune decision and pick
+    the feasible plan minimising J/img subject to a step-time bound.
+
+All share the Eq. 2 trigger machinery (:class:`Eq2Trigger`) so the
+20%/5-step hysteresis semantics are identical across policies.
+"""
+from __future__ import annotations
+
+import abc
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.allocator import BatchPlan, GroupState
+from repro.core.control.telemetry import StepReport
+
+
+# Energy model calibrated to the paper's J/img table (§V-B): host-only
+# MobileNetV2 33.4 img/s @ 1.32 J/img -> 44.1 W attributable; host+36
+# CSDs 99.83 img/s @ 0.54 J/img -> ~0.27 W marginal per active CSD.
+# core/simulator.py re-exports this as POWER_W.
+DEFAULT_POWER_W: Dict[str, float] = {"host": 44.1, "csd": 0.272,
+                                     "xeon": 44.1}
+
+
+def attributable_power(power_w: Dict[str, float], group: str) -> float:
+    """Per-node attributable draw for a group name; unknown classes fall
+    back to the host-class figure (same convention as the simulator)."""
+    return power_w.get(group, power_w.get("host", 40.0))
+
+
+@dataclasses.dataclass
+class HyperTuneConfig:
+    """Knobs shared by the Eq. 2-triggered policies. Retained under its
+    historical name — ``repro.core.controller`` re-exports it."""
+
+    threshold: float = 0.20          # decline-index trigger level
+    patience: int = 5                # consecutive flags before retune
+    w_speed: float = 0.7             # Eq. 2 weights
+    w_progress: float = 0.3
+    mode: str = "speed"              # "speed" | "cpu_util" | "energy"
+    window: int = 10                 # cpu-util sliding window
+    min_batch: int = 1
+    recover_margin: float = 0.10     # cpu_util headroom before growing
+    use_eq3_table: bool = False      # retune via Eq. 3 interpolation instead
+    step_time_slack: float = 0.10    # energy mode: step-time bound slack
+    power_w: Optional[Dict[str, float]] = None   # energy mode power model
+
+
+@dataclasses.dataclass
+class Decision:
+    """A policy's proposed retune for exactly one group."""
+
+    group: str
+    new_batch: int
+    reason: str                      # "decline" | "recover" | "energy"
+
+
+class Eq2Trigger:
+    """Eq. 2 decline index + the 20%/5-step hysteresis, shared by every
+    decline-triggered policy.
+
+        index_i = 0.7*(SP - SP_i)/SP + 0.3*(N_step - step_i)/N_step
+
+    SP is the plan-required speed b_g / T_step (not the benchmark max):
+    the index settles to ~0 after a successful retune — a node is
+    under-utilized iff it makes the synchronous step LATE. Eq. 2 as
+    printed lets the progress term alone cross 20% at the start of every
+    epoch; a real slowdown (beyond a 2% noise floor) is additionally
+    required — disambiguation noted in DESIGN.md §8.
+    """
+
+    def __init__(self, cfg: HyperTuneConfig):
+        self.cfg = cfg
+        self._flags: Dict[str, int] = {}
+
+    # -- Eq. 2 ----------------------------------------------------------
+    @staticmethod
+    def required_speed(plan: BatchPlan, group: str) -> float:
+        g = next(g for g in plan.groups if g.name == group)
+        return g.batch_size / max(plan.step_time, 1e-9)
+
+    def decline_index(self, plan: BatchPlan, group: str, speed: float,
+                      step_in_epoch: int) -> float:
+        sp_expected = self.required_speed(plan, group)
+        n = max(plan.steps_per_epoch, 1)
+        c = self.cfg
+        return (c.w_speed * (sp_expected - speed) / max(sp_expected, 1e-9)
+                + c.w_progress * (n - step_in_epoch) / n)
+
+    @staticmethod
+    def declined(plan: BatchPlan, group: str, speed: float) -> bool:
+        return speed < Eq2Trigger.required_speed(plan, group) * 0.98
+
+    # -- hysteresis -----------------------------------------------------
+    def update(self, step: int, plan: BatchPlan,
+               reports: Dict[str, StepReport]
+               ) -> Tuple[Dict[str, float], Optional[str]]:
+        """Ingest one step of reports; return (per-group Eq. 2 indices,
+        first group whose flag streak reached patience or None)."""
+        c = self.cfg
+        step_in_epoch = step % max(plan.steps_per_epoch, 1)
+        idxs: Dict[str, float] = {}
+        fired: Optional[str] = None
+        for g in plan.groups:
+            r = reports.get(g.name)
+            if r is None or g.batch_size == 0:
+                continue
+            idx = self.decline_index(plan, g.name, r.speed, step_in_epoch)
+            idxs[g.name] = idx
+            flagged = self.declined(plan, g.name, r.speed) and \
+                idx > c.threshold
+            self._flags[g.name] = (self._flags.get(g.name, 0) + 1
+                                   if flagged else 0)
+            if self._flags[g.name] >= c.patience and fired is None:
+                fired = g.name
+        return idxs, fired
+
+    def flagged(self, group: str) -> bool:
+        return self._flags.get(group, 0) > 0
+
+    def reset(self, group: str) -> None:
+        """A retune actually applied: restart the streak."""
+        self._flags[group] = 0
+
+    def hold(self, group: str) -> None:
+        """A proposal was suppressed (no-op hysteresis): KEEP the streak
+        at the patience level so the next observation can retry
+        immediately — resetting here silently disabled retuning for a
+        whole extra patience window (the historical observe() bug)."""
+        self._flags[group] = min(self._flags.get(group, 0),
+                                 self.cfg.patience)
+
+
+class TuningPolicy(abc.ABC):
+    """One scheduling objective. The control plane calls :meth:`decide`
+    once per step (after rejoin handling, before liveness) and applies at
+    most one decision; :meth:`plan_applied` tells the policy its (or
+    another policy's / the elastic path's) plan change took effect."""
+
+    name: str = "base"
+
+    @abc.abstractmethod
+    def decide(self, step: int, plan: BatchPlan,
+               reports: Dict[str, StepReport]) -> Optional[Decision]:
+        ...
+
+    def plan_applied(self, plan: BatchPlan, group: str, reason: str) -> None:
+        pass
+
+    def indices(self) -> Dict[str, float]:
+        """Most recent per-group Eq. 2 indices (diagnostics)."""
+        return {}
+
+
+class _Eq2Policy(TuningPolicy):
+    """Common shell for the decline-triggered policies."""
+
+    def __init__(self, cfg: Optional[HyperTuneConfig] = None):
+        self.cfg = cfg or HyperTuneConfig()
+        self.trigger = Eq2Trigger(self.cfg)
+        self._last_indices: Dict[str, float] = {}
+
+    def indices(self) -> Dict[str, float]:
+        return self._last_indices
+
+    def decide(self, step: int, plan: BatchPlan,
+               reports: Dict[str, StepReport]) -> Optional[Decision]:
+        self._last_indices, fired = self.trigger.update(step, plan, reports)
+        if fired is None:
+            return self._no_trigger(step, plan, reports)
+        g = next(g for g in plan.groups if g.name == fired)
+        new_bs = self._retuned_batch(plan, g, reports[fired])
+        if new_bs > 0 or not self._allow_maskout:
+            new_bs = max(new_bs, self.cfg.min_batch)
+        # no-op hysteresis: ignore retunes within 2% of the current batch,
+        # but HOLD the patience streak (see Eq2Trigger.hold)
+        if abs(new_bs - g.batch_size) <= max(1, int(0.02 * g.batch_size)):
+            self.trigger.hold(fired)
+            return None
+        self.trigger.reset(fired)
+        return Decision(fired, new_bs, self._reason)
+
+    _reason = "decline"
+    _allow_maskout = False           # may a decision drop a group to 0?
+
+    @abc.abstractmethod
+    def _retuned_batch(self, plan: BatchPlan, g: GroupState,
+                       report: StepReport) -> int:
+        ...
+
+    def _no_trigger(self, step: int, plan: BatchPlan,
+                    reports: Dict[str, StepReport]) -> Optional[Decision]:
+        return None
+
+
+class SpeedDeclinePolicy(_Eq2Policy):
+    """Eq. 2 trigger + step-time-preserving inversion:
+    b_new = measured_speed * T_step. This inversion reproduces the
+    paper's own worked example (180 -> 140 at 4/8 cores stolen, -> 100
+    at 6/8), which the printed Eq. 3 weights do not (EXPERIMENTS.md
+    §Retuning)."""
+
+    name = "speed_decline"
+
+    def _retuned_batch(self, plan, g, report):
+        return int(report.speed * plan.step_time)
+
+
+class Eq3TablePolicy(_Eq2Policy):
+    """Eq. 2 trigger + the paper's printed Eq. 3 retune: interpolate the
+    benchmark (batch size, speed) table at the measured speed."""
+
+    name = "eq3_table"
+
+    def _retuned_batch(self, plan, g, report):
+        return int(g.speed_model.batchsize_for_speed(report.speed))
+
+
+class CpuUtilPolicy(_Eq2Policy):
+    """The paper's third method (§III-C): a sliding window of the
+    training session's CPU share. Shrinks by (declined util / normal
+    util) on decline; unlike speed mode it can also GROW the batch when
+    capacity returns (util well below normal while speed is on plan).
+
+    The "normal" baseline seeds from the first UN-flagged report — the
+    first report ever may already be interfered, and scaling against a
+    degraded baseline makes every later retune too shallow (historical
+    bug; see DESIGN.md §7). Until a healthy report arrives the baseline
+    falls back to 1.0 (fully utilized).
+    """
+
+    name = "cpu_util"
+
+    def __init__(self, cfg: Optional[HyperTuneConfig] = None):
+        super().__init__(cfg)
+        self._util: Dict[str, Deque[float]] = {}
+        self._normal_util: Dict[str, float] = {}
+
+    def decide(self, step, plan, reports):
+        for g in plan.groups:
+            r = reports.get(g.name)
+            if r is None or r.cpu_util is None or g.batch_size == 0:
+                continue
+            self._util.setdefault(
+                g.name, collections.deque(maxlen=self.cfg.window)
+            ).append(r.cpu_util)
+            if g.name not in self._normal_util and \
+                    not Eq2Trigger.declined(plan, g.name, r.speed):
+                self._normal_util[g.name] = r.cpu_util
+        return super().decide(step, plan, reports)
+
+    def _retuned_batch(self, plan, g, report):
+        window = self._util.get(g.name)
+        if not window:
+            return int(report.speed * plan.step_time)
+        recent = list(window)[-self.cfg.patience:]
+        normal = self._normal_util.get(g.name, 1.0)
+        ratio = float(np.mean(recent)) / max(normal, 1e-9)
+        return int(g.batch_size * ratio)
+
+    def _no_trigger(self, step, plan, reports):
+        """Grow the batch when capacity frees up (recover path)."""
+        c = self.cfg
+        for g in plan.groups:
+            r = reports.get(g.name)
+            if r is None or g.batch_size == 0 or \
+                    self.trigger.flagged(g.name):
+                continue
+            window = self._util.get(g.name)
+            if g.batch_size >= g.capacity or not window or \
+                    len(window) < c.window:
+                continue
+            normal = self._normal_util.get(g.name, 1.0)
+            recent = float(np.mean(list(window)[-5:]))
+            if recent < normal * (1.0 - c.recover_margin):
+                new_bs = min(int(g.batch_size * normal / max(recent, 1e-9)),
+                             g.capacity)
+                if new_bs > g.batch_size:
+                    return Decision(g.name, new_bs, "recover")
+        return None
+
+
+class EnergyAwarePolicy(_Eq2Policy):
+    """Energy-aware retuning (the paper's §V-B axis, made active).
+
+    On an Eq. 2 trigger, instead of blindly preserving step time,
+    enumerate candidate batch sizes for the declined group — the
+    step-time-preserving inversion, scaled variants, the benchmark knee,
+    and full mask-out (b_g = 0) — project each candidate's synchronous
+    step time and J/img under the power model, and apply the feasible
+    candidate minimising J/img subject to
+
+        T_step(candidate) <= T_step(plan) * (1 + step_time_slack).
+
+    The declined group's speed curve is capacity-scaled by the measured
+    decline (measured / benchmark-at-current-batch), the same
+    interference model the simulator uses. With the paper's calibration
+    (host 44.1 W vs 0.27 W per CSD) this policy masks a heavily
+    interfered host out entirely: ~0.13 J/img vs ~0.62 J/img for the
+    throughput-only policy, at a bounded throughput cost
+    (EXPERIMENTS.md §Energy).
+    """
+
+    name = "energy_aware"
+    _reason = "energy"
+    _allow_maskout = True
+
+    def __init__(self, cfg: Optional[HyperTuneConfig] = None,
+                 power_w: Optional[Dict[str, float]] = None):
+        super().__init__(cfg)
+        self.power_w = dict(power_w or self.cfg.power_w or DEFAULT_POWER_W)
+
+    # -- projection helpers ---------------------------------------------
+    def _projected(self, plan: BatchPlan, g: GroupState, cand: int,
+                   cap_est: float) -> Optional[Tuple[float, float, float]]:
+        """(step_time, j_per_img, throughput) with group ``g`` at batch
+        ``cand``; None when the plan processes nothing."""
+        batches = {h.name: h.batch_size for h in plan.groups}
+        batches[g.name] = cand
+        global_batch = sum(batches[h.name] * h.count for h in plan.groups)
+        if global_batch <= 0:
+            return None
+        step_time = 0.0
+        power = 0.0
+        for h in plan.groups:
+            b = batches[h.name]
+            if b <= 0:
+                continue
+            sp = h.speed_model.speed(b)
+            if h.name == g.name:
+                sp *= cap_est
+            step_time = max(step_time, b / max(sp, 1e-9))
+            power += attributable_power(self.power_w, h.name) * h.count
+        j_per_img = power * step_time / global_batch
+        return step_time, j_per_img, global_batch / step_time
+
+    def _retuned_batch(self, plan, g, report):
+        cap_est = report.speed / max(g.speed_model.speed(g.batch_size), 1e-9)
+        cap_est = min(cap_est, 1.0)
+        inversion = int(report.speed * plan.step_time)
+        candidates = {
+            0,                                   # mask the group out
+            inversion,
+            int(inversion * 0.8),
+            min(int(inversion * 1.2), g.capacity),
+            min(int(g.speed_model.knee()), g.capacity),
+            g.batch_size,                        # staying put is an option
+        }
+        bound = plan.step_time * (1.0 + self.cfg.step_time_slack)
+        best: Optional[int] = None
+        best_key: Optional[Tuple[float, float]] = None
+        for cand in sorted(candidates):
+            cand = int(np.clip(cand, 0, g.capacity))
+            proj = self._projected(plan, g, cand, cap_est)
+            if proj is None:
+                continue
+            step_time, j_per_img, throughput = proj
+            if step_time > bound:
+                continue
+            key = (j_per_img, -throughput)       # min J/img, then max img/s
+            if best_key is None or key < best_key:
+                best, best_key = cand, key
+        if best is None:                         # nothing feasible: fall
+            return inversion                     # back to the inversion
+        return best

@@ -1,0 +1,116 @@
+"""Telemetry for the control plane: one event stream for every producer.
+
+Three producers previously hand-wired their own report plumbing:
+
+  * ``core/simulator.py`` synthesized ``{group: {"speed": ...}}`` dicts
+    and called the controller inline;
+  * ``launch/train.py`` derived reports from real step timers (optionally
+    interference-scaled) and threaded them through a separate
+    ``HeartbeatMonitor``;
+  * heartbeat liveness was a side channel that reached into the
+    controller to mask groups out.
+
+All three now speak :class:`StepReport` over a :class:`TelemetryBus`.
+The bus is a per-step buffer + pub/sub tap: producers ``publish()``
+reports as they measure them, the :class:`~repro.core.control.
+control_plane.ControlPlane` drains the buffer once per step and derives
+liveness (a group that stops publishing goes silent — no separate
+heartbeat protocol). Subscribers (loggers, benchmarks) can observe the
+raw stream without touching control flow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class StepReport:
+    """One group's measurement for one synchronous step.
+
+    ``speed`` is the measured processing speed (img or samples /s) —
+    Eq. 2's SP_i. ``cpu_util`` feeds the paper's third tuning method;
+    ``power_w`` optionally overrides the static power model for
+    energy-aware policies. An idle-but-alive group (b_g = 0) publishes
+    its benchmark speed so rejoin logic can restore it at the knee.
+    """
+
+    step: int
+    group: str
+    speed: float
+    cpu_util: Optional[float] = None
+    power_w: Optional[float] = None
+
+    @classmethod
+    def from_legacy(cls, step: int, group: str,
+                    report: Dict[str, float]) -> "StepReport":
+        """Adapt the historical ``{"speed": ..., "cpu_util": ...}`` dict."""
+        return cls(step=step, group=group, speed=float(report["speed"]),
+                   cpu_util=(float(report["cpu_util"])
+                             if "cpu_util" in report else None),
+                   power_w=(float(report["power_w"])
+                            if "power_w" in report else None))
+
+    def as_legacy(self) -> Dict[str, float]:
+        out = {"speed": self.speed}
+        if self.cpu_util is not None:
+            out["cpu_util"] = self.cpu_util
+        if self.power_w is not None:
+            out["power_w"] = self.power_w
+        return out
+
+
+def normalize_reports(step: int, reports) -> Dict[str, StepReport]:
+    """Accept either ``{group: StepReport}`` or the legacy
+    ``{group: {"speed": ...}}`` shape and return ``{group: StepReport}``."""
+    out: Dict[str, StepReport] = {}
+    for name, r in (reports or {}).items():
+        if isinstance(r, StepReport):
+            out[name] = r
+        else:
+            out[name] = StepReport.from_legacy(step, name, r)
+    return out
+
+
+class TelemetryBus:
+    """Buffered pub/sub for :class:`StepReport` events.
+
+    Producers call :meth:`publish` any time during a step; the consumer
+    (the control plane) calls :meth:`drain` once per step and gets the
+    latest report per group. ``last_seen`` survives drains — liveness is
+    derived from it rather than from a separate heartbeat message type.
+    """
+
+    def __init__(self) -> None:
+        self._pending: Dict[str, StepReport] = {}
+        self._last_seen: Dict[str, int] = {}
+        self._subscribers: List[Callable[[StepReport], None]] = []
+
+    # -- producer side --------------------------------------------------
+    def publish(self, report: StepReport) -> None:
+        self._pending[report.group] = report
+        self._last_seen[report.group] = report.step
+        for fn in self._subscribers:
+            fn(report)
+
+    def publish_step(self, step: int, reports) -> None:
+        """Publish a whole step's worth of (possibly legacy) reports."""
+        for rep in normalize_reports(step, reports).values():
+            self.publish(rep)
+
+    # -- consumer side --------------------------------------------------
+    def drain(self) -> Dict[str, StepReport]:
+        out = self._pending
+        self._pending = {}
+        return out
+
+    def last_seen(self, group: str) -> Optional[int]:
+        return self._last_seen.get(group)
+
+    def note_seen(self, group: str, step: int) -> None:
+        """Record liveness for a group without a full report (back-compat
+        with HeartbeatMonitor.beat)."""
+        self._last_seen[group] = step
+
+    def subscribe(self, fn: Callable[[StepReport], None]) -> None:
+        self._subscribers.append(fn)

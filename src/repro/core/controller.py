@@ -1,176 +1,93 @@
-"""HyperTune: per-step monitoring, decline index (Eq. 2), hysteresis,
-batch-size retuning (paper §III-B/C).
+"""HyperTune controller — back-compat shim over the control plane.
 
-Per step, every group reports its measured speed (and optionally CPU
-utilization). The controller computes
+The monitoring/retuning logic documented here (Eq. 2 decline index,
+20%/5-step hysteresis, speed-inversion / Eq. 3 / cpu-util retunes,
+elastic failure path) now lives in ``repro.core.control``:
 
-    index_i = 0.7 * (SP - SP_i)/SP + 0.3 * (N_step - step_i)/N_step   (Eq. 2)
+  * :mod:`repro.core.control.telemetry`  — StepReport / TelemetryBus
+  * :mod:`repro.core.control.policies`   — TuningPolicy and the four
+    concrete policies (speed decline, Eq. 3 table, cpu-util window,
+    energy-aware)
+  * :mod:`repro.core.control.control_plane` — ControlPlane composing
+    policies with elastic failure/rejoin handling
 
-flags the step "under-utilized" when index > 20%, and triggers a retune
-after 5 CONSECUTIVE flags. The new batch size preserves the plan's
-synchronous step time: b_new = measured_speed * step_time — this inversion
-reproduces the paper's own worked example (180 -> 140 at 4/8 cores stolen,
--> 100 at 6/8), which the printed Eq. 3 weights do not; both Eq. 3 variants
-are available on SpeedModel for comparison (see EXPERIMENTS.md).
-
-The CPU-utilization mode (paper's third method) keeps a 10-step sliding
-window and scales the batch by (declined util / normal util); unlike speed
-mode it can also GROW a group's batch when capacity returns.
+:class:`HyperTuneController` keeps the historical constructor and
+method surface (``observe``/``mark_failed``/``mark_rejoined``/
+``required_speed``/``decline_index``/``events``/``indices``/``plan``)
+by delegating to a :class:`~repro.core.control.control_plane.
+ControlPlane` built from the same :class:`HyperTuneConfig`. New code
+should talk to the control plane directly (DESIGN.md §7).
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Dict, List, Optional
 
-import numpy as np
-
-from repro.core import allocator
 from repro.core.allocator import BatchPlan
+from repro.core.control.control_plane import (ControlPlane, RetuneEvent,
+                                              policy_from_config)
+from repro.core.control.policies import Eq2Trigger, HyperTuneConfig
 
-
-@dataclasses.dataclass
-class RetuneEvent:
-    step: int
-    group: str
-    old_batch: int
-    new_batch: int
-    reason: str                      # "decline" | "recover"
-    plan: BatchPlan
-
-
-@dataclasses.dataclass
-class HyperTuneConfig:
-    threshold: float = 0.20          # decline-index trigger level
-    patience: int = 5                # consecutive flags before retune
-    w_speed: float = 0.7             # Eq. 2 weights
-    w_progress: float = 0.3
-    mode: str = "speed"              # "speed" | "cpu_util"
-    window: int = 10                 # cpu-util sliding window
-    min_batch: int = 1
-    recover_margin: float = 0.10     # cpu_util headroom before growing
-    use_eq3_table: bool = False      # retune via Eq. 3 interpolation instead
+__all__ = ["HyperTuneConfig", "HyperTuneController", "RetuneEvent"]
 
 
 class HyperTuneController:
-    """One instance on the coordinator; ingest per-group step reports."""
+    """One instance on the coordinator; ingest per-group step reports.
 
-    def __init__(self, plan: BatchPlan, cfg: Optional[HyperTuneConfig] = None):
-        self.plan = plan
+    Thin shim: ``observe(step, {group: {"speed": ..., "cpu_util": ...}})``
+    returns the applied :class:`RetuneEvent` (or None) exactly as
+    before; the policy variant is picked from ``cfg.mode`` /
+    ``cfg.use_eq3_table`` via :func:`policy_from_config`.
+    """
+
+    def __init__(self, plan: BatchPlan,
+                 cfg: Optional[HyperTuneConfig] = None):
         self.cfg = cfg or HyperTuneConfig()
-        self._flags: Dict[str, int] = {g.name: 0 for g in plan.groups}
-        self._util: Dict[str, Deque[float]] = {
-            g.name: collections.deque(maxlen=self.cfg.window)
-            for g in plan.groups}
-        self._normal_util: Dict[str, float] = {}
-        self.events: List[RetuneEvent] = []
-        self.indices: List[Dict[str, float]] = []
+        self.control_plane = ControlPlane(
+            plan, [policy_from_config(self.cfg)], cfg=self.cfg)
 
-    # ------------------------------------------------------------------
+    # -- delegated state -------------------------------------------------
+    @property
+    def plan(self) -> BatchPlan:
+        return self.control_plane.plan
+
+    @plan.setter
+    def plan(self, new_plan: BatchPlan) -> None:
+        self.control_plane.plan = new_plan
+
+    @property
+    def events(self) -> List[RetuneEvent]:
+        return self.control_plane.events
+
+    @property
+    def indices(self) -> List[Dict[str, float]]:
+        return self.control_plane.indices
+
+    # -- Eq. 2 surface (used directly by tests/diagnostics) --------------
     def required_speed(self, group: str) -> float:
-        """Speed the synchronous plan demands of this group: b_g / T_step.
+        """Speed the synchronous plan demands of this group: b_g / T_step
+        (Eq. 2's SP)."""
+        return Eq2Trigger.required_speed(self.plan, group)
 
-        Eq. 2's SP. Using the plan-required speed (not the benchmark max)
-        makes the index settle to ~0 after a successful retune — a node is
-        under-utilized iff it makes the step LATE.
-        """
-        g = next(g for g in self.plan.groups if g.name == group)
-        return g.batch_size / max(self.plan.step_time, 1e-9)
+    def decline_index(self, group: str, speed: float,
+                      step_in_epoch: int) -> float:
+        policy = self.control_plane.policies[0]
+        return policy.trigger.decline_index(self.plan, group, speed,
+                                            step_in_epoch)
 
-    def decline_index(self, group: str, speed: float, step_in_epoch: int
-                      ) -> float:
-        sp_expected = self.required_speed(group)
-        n = max(self.plan.steps_per_epoch, 1)
-        c = self.cfg
-        return (c.w_speed * (sp_expected - speed) / max(sp_expected, 1e-9)
-                + c.w_progress * (n - step_in_epoch) / n)
-
-    # ------------------------------------------------------------------
+    # -- the historical entry points -------------------------------------
     def observe(self, step: int, reports: Dict[str, Dict[str, float]]
                 ) -> Optional[RetuneEvent]:
         """reports: {group: {"speed": img/s, "cpu_util": 0..1 (optional)}}.
 
-        Returns a RetuneEvent when the hysteresis fires; the caller applies
-        ``event.plan`` (data ranges + row mask) before the next step.
+        Returns a RetuneEvent when the hysteresis fires; the caller
+        applies ``event.plan`` (data ranges + row mask) before the next
+        step.
         """
-        c = self.cfg
-        step_in_epoch = step % max(self.plan.steps_per_epoch, 1)
-        idxs = {}
-        event = None
-        for g in self.plan.groups:
-            r = reports.get(g.name)
-            if r is None or g.batch_size == 0:
-                continue
-            idx = self.decline_index(g.name, r["speed"], step_in_epoch)
-            idxs[g.name] = idx
-            if "cpu_util" in r:
-                self._util[g.name].append(r["cpu_util"])
-                self._normal_util.setdefault(g.name, r["cpu_util"])
-            # Eq. 2 as printed lets the progress term alone cross 20% at the
-            # start of every epoch; a real slowdown (beyond a 2% noise
-            # floor) is additionally required — disambiguation noted in
-            # DESIGN.md §8.
-            declined = r["speed"] < self.required_speed(g.name) * 0.98
-            flagged = declined and idx > c.threshold
-            self._flags[g.name] = self._flags[g.name] + 1 if flagged else 0
-            if self._flags[g.name] >= c.patience and event is None:
-                event = self._retune(step, g, r)
-                self._flags[g.name] = 0
-            elif (c.mode == "cpu_util" and not flagged and event is None):
-                event = self._maybe_recover(step, g, r)
-        self.indices.append(idxs)
-        return event
+        return self.control_plane.observe(step, reports)
 
-    # ------------------------------------------------------------------
-    def _retune(self, step: int, g, report) -> RetuneEvent:
-        c = self.cfg
-        if c.mode == "cpu_util" and self._util[g.name]:
-            # sliding window: average of the declined utilisation
-            recent = list(self._util[g.name])[-c.patience:]
-            normal = self._normal_util.get(g.name, 1.0)
-            ratio = float(np.mean(recent)) / max(normal, 1e-9)
-            new_bs = int(g.batch_size * ratio)
-        elif c.use_eq3_table:
-            new_bs = int(g.speed_model.batchsize_for_speed(report["speed"]))
-        else:
-            # step-time-preserving inversion (reproduces the paper's 140/100)
-            new_bs = int(report["speed"] * self.plan.step_time)
-        new_bs = max(new_bs, c.min_batch)
-        if abs(new_bs - g.batch_size) <= max(1, int(0.02 * g.batch_size)):
-            return None                      # hysteresis: ignore no-op retunes
-        return self._apply(step, g, new_bs, "decline")
-
-    def _maybe_recover(self, step: int, g, report) -> Optional[RetuneEvent]:
-        """cpu_util mode only: grow the batch when capacity frees up."""
-        c = self.cfg
-        if g.batch_size >= g.capacity or len(self._util[g.name]) < c.window:
-            return None
-        normal = self._normal_util.get(g.name, 1.0)
-        recent = float(np.mean(list(self._util[g.name])[-5:]))
-        if recent < normal * (1.0 - c.recover_margin):
-            new_bs = min(int(g.batch_size * normal / max(recent, 1e-9)),
-                         g.capacity)
-            if new_bs > g.batch_size:
-                return self._apply(step, g, new_bs, "recover")
-        return None
-
-    def _apply(self, step: int, g, new_bs: int, reason: str) -> RetuneEvent:
-        old = g.batch_size
-        self.plan = allocator.retune(self.plan, {g.name: new_bs},
-                                     min_batch=0)
-        for ng in self.plan.groups:
-            self._flags.setdefault(ng.name, 0)
-        ev = RetuneEvent(step, g.name, old, new_bs, reason, self.plan)
-        self.events.append(ev)
-        return ev
-
-    # ------------------------------------------------------------------
     def mark_failed(self, step: int, group: str) -> RetuneEvent:
         """Elastic path: a group disappeared (pre-emption / crash)."""
-        g = next(g for g in self.plan.groups if g.name == group)
-        return self._apply(step, g, 0, "failure")
+        return self.control_plane.mark_failed(step, group)
 
     def mark_rejoined(self, step: int, group: str) -> RetuneEvent:
-        g = next(g for g in self.plan.groups if g.name == group)
-        bs = int(g.speed_model.knee())
-        return self._apply(step, g, min(bs, g.capacity), "recover")
+        return self.control_plane.mark_rejoined(step, group)

@@ -5,20 +5,33 @@ b_g -> 0 masks the group's rows, training continues the SAME compiled step
 at reduced throughput, and the data pipeline re-splits ranges (Eq. 1) so
 no samples are starved. Rejoin restores b_g at the benchmark knee.
 
-A heartbeat monitor turns missed reports into failures; stragglers (alive
+Liveness now lives in the control plane itself: a group that stops
+publishing on the TelemetryBus for ``liveness_timeout`` steps is masked
+out, and auto-rejoined when its reports resume (see
+``repro.core.control.control_plane.ControlPlane``). Stragglers (alive
 but slow) stay on the normal HyperTune decline path.
+
+:class:`HeartbeatMonitor` is retained for callers that drive liveness
+explicitly; it works against anything with the controller surface
+(``plan`` / ``mark_failed`` / ``mark_rejoined``) — the historical
+``HyperTuneController`` shim or a ``ControlPlane`` directly.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, Optional
 
-from repro.core.controller import HyperTuneController, RetuneEvent
+from repro.core.control.control_plane import RetuneEvent
 
 
 @dataclasses.dataclass
 class HeartbeatMonitor:
-    """Declare a group failed after `timeout_steps` silent steps."""
+    """Declare a group failed after `timeout_steps` silent steps.
+
+    ``controller`` may be a HyperTuneController or a ControlPlane —
+    both expose plan/mark_failed/mark_rejoined.
+    """
+
     timeout_steps: int = 3
     _last_seen: Dict[str, int] = dataclasses.field(default_factory=dict)
     _failed: Dict[str, bool] = dataclasses.field(default_factory=dict)
@@ -27,25 +40,23 @@ class HeartbeatMonitor:
         self._last_seen[group] = step
         self._failed[group] = False
 
-    def check(self, step: int, controller: HyperTuneController
-              ) -> Optional[RetuneEvent]:
+    def check(self, step: int, controller) -> Optional[RetuneEvent]:
         for g in controller.plan.groups:
             if g.batch_size == 0:
                 continue
             last = self._last_seen.get(g.name, step)
-            if step - last >= self.timeout_steps and not self._failed.get(g.name):
+            if step - last >= self.timeout_steps and \
+                    not self._failed.get(g.name):
                 self._failed[g.name] = True
                 return controller.mark_failed(step, g.name)
         return None
 
-    def rejoin(self, step: int, group: str,
-               controller: HyperTuneController) -> RetuneEvent:
+    def rejoin(self, step: int, group: str, controller) -> RetuneEvent:
         self._failed[group] = False
         self._last_seen[group] = step
         return controller.mark_rejoined(step, group)
 
-    def maybe_rejoin(self, step: int, reports,
-                     controller: HyperTuneController
+    def maybe_rejoin(self, step: int, reports, controller
                      ) -> Optional[RetuneEvent]:
         """A previously-failed group is reporting again -> bring it back
         at its benchmark knee (paper's recovery semantics)."""

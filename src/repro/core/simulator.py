@@ -3,14 +3,18 @@
 Reproduces the paper's evaluation environments:
   * 3× AIC 2U servers (Xeon Silver 4108) training MobileNetV2 — Fig. 6;
   * FlacheSAN1N36M host + up to 36 Laguna CSDs — Fig. 7a/b + energy table;
-with interference events (the paper's Gzip core-stealing) and a power
-model for J/img energy accounting.
+with interference events (the paper's Gzip core-stealing), dropout events
+(elastic failure/rejoin) and a power model for J/img energy accounting.
 
 Synchronous semantics: a step processes Σ b_g·count_g samples in
-max_g(step_time_g); an interfered node's speed is capacity-scaled. This
-is the baseline ("HyperTune off") behaviour; with the controller engaged
-the per-step reports flow through HyperTuneController and the plan is
-retuned mid-epoch exactly as on the real cluster.
+max_g(step_time_g); an interfered node's speed is capacity-scaled (and
+optionally capped at an absolute img/s — the core-stealing bound the
+paper's worked example implies). This is the baseline ("HyperTune off")
+behaviour; with a control plane engaged the per-step reports flow over
+the TelemetryBus and the plan is retuned mid-epoch exactly as on the
+real cluster: idle-but-alive groups (b_g = 0) publish their benchmark
+speed so the rejoin path can restore them, and dropped-out groups
+publish nothing so liveness can mask them out.
 """
 from __future__ import annotations
 
@@ -20,7 +24,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.allocator import BatchPlan, GroupState, solve
-from repro.core.controller import HyperTuneController, HyperTuneConfig
+from repro.core.control import (DEFAULT_POWER_W, ControlPlane, StepReport,
+                                attributable_power)
 from repro.core.speed_model import SpeedModel
 
 
@@ -64,18 +69,36 @@ CSD_SHUFFLENET = dict(vmax=1.24, b_half=1.4,
                       batch_sizes=(3, 6, 12, 25, 35, 50))
 HOST_CAP_SHUFFLENET = 0.44
 
-# Energy model calibrated to the paper's J/img table: host-only MobileNetV2
-# 33.4 img/s @ 1.32 J/img -> 44.1 W attributable; host+36 CSDs 99.83 img/s
-# @ 0.54 J/img -> 53.9 W total -> ~0.27 W marginal per active CSD.
-POWER_W = {"host": 44.1, "csd": 0.272, "xeon": 44.1}
+# Energy model calibrated to the paper's J/img table — the canonical
+# numbers live with the energy-aware policy (control/policies.py).
+# Copied so simulator-local tweaks can't rewrite the policy defaults.
+POWER_W = dict(DEFAULT_POWER_W)
 
 
 @dataclasses.dataclass
 class Interference:
+    """External load on one group. ``capacity`` scales the benchmark
+    curve (the historical model); ``speed_cap`` additionally bounds the
+    node at an absolute img/s — stolen cores cap attainable throughput
+    regardless of batch size, which is what makes the paper's worked
+    example (180 -> 140 -> 100) a fixed point of the retune."""
+
     group: str
     start_step: int
     end_step: int
-    capacity: float                  # remaining speed fraction (0..1]
+    capacity: float = 1.0            # remaining speed fraction (0..1]
+    speed_cap: Optional[float] = None  # absolute img/s bound
+
+
+@dataclasses.dataclass
+class Dropout:
+    """A group goes completely silent (crash / pre-emption): it publishes
+    no telemetry in [start_step, end_step), so a liveness-enabled control
+    plane masks it out and rejoins it when reports resume."""
+
+    group: str
+    start_step: int
+    end_step: int
 
 
 @dataclasses.dataclass
@@ -96,20 +119,43 @@ class SimResult:
         return self.energy_j / max(self.images, 1e-9)
 
 
+def _as_control_plane(obj) -> Optional[ControlPlane]:
+    """Accept a ControlPlane or anything exposing one (the
+    HyperTuneController shim)."""
+    if obj is None or isinstance(obj, ControlPlane):
+        return obj
+    return obj.control_plane
+
+
 class ClusterSim:
-    """Discrete-step simulator of synchronous heterogeneous training."""
+    """Discrete-step simulator of synchronous heterogeneous training.
+
+    ``controller`` keeps the historical keyword (HyperTuneController or
+    ControlPlane both accepted); ``control_plane`` is the explicit new
+    spelling. Reports flow through the control plane's TelemetryBus.
+    """
 
     def __init__(self, plan: BatchPlan,
                  interferences: Optional[List[Interference]] = None,
                  power_w: Optional[Dict[str, float]] = None,
-                 controller: Optional[HyperTuneController] = None,
+                 controller=None,
+                 control_plane: Optional[ControlPlane] = None,
+                 dropouts: Optional[List[Dropout]] = None,
                  speed_noise: float = 0.0, seed: int = 0):
         self.plan = plan
         self.interferences = interferences or []
+        self.dropouts = dropouts or []
         self.power_w = power_w or POWER_W
-        self.controller = controller
+        self.control_plane = control_plane or _as_control_plane(controller)
         self.rng = np.random.default_rng(seed)
         self.speed_noise = speed_noise
+        if self.dropouts and self.control_plane is not None and \
+                self.control_plane.liveness_timeout is None:
+            # dropouts are only observable through bus silence; a control
+            # plane without liveness would silently never notice them
+            raise ValueError(
+                "dropouts need a liveness-enabled control plane: construct "
+                "it with ControlPlane(..., liveness_timeout=<steps>)")
 
     def _capacity(self, group: str, step: int) -> float:
         cap = 1.0
@@ -118,39 +164,68 @@ class ClusterSim:
                 cap = min(cap, iv.capacity)
         return cap
 
+    def _speed_cap(self, group: str, step: int) -> Optional[float]:
+        caps = [iv.speed_cap for iv in self.interferences
+                if iv.group == group and iv.speed_cap is not None
+                and iv.start_step <= step < iv.end_step]
+        return min(caps) if caps else None
+
+    def _dropped(self, group: str, step: int) -> bool:
+        return any(d.group == group and d.start_step <= step < d.end_step
+                   for d in self.dropouts)
+
+    def _group_speed(self, g: GroupState, step: int) -> float:
+        sp = g.speed_model.speed(g.batch_size) * self._capacity(g.name, step)
+        cap_abs = self._speed_cap(g.name, step)
+        if cap_abs is not None:
+            sp = min(sp, cap_abs)
+        if self.speed_noise:
+            sp *= 1.0 + self.rng.normal(0, self.speed_noise)
+        return max(sp, 1e-9)
+
     def run(self, steps: int) -> SimResult:
+        cp = self.control_plane
         images = 0.0
         wall = 0.0
         energy = 0.0
-        speeds = []
+        speeds: List[float] = []
         for step in range(steps):
-            plan = self.controller.plan if self.controller else self.plan
-            live = [g for g in plan.groups if g.batch_size > 0]
+            plan = cp.plan if cp else self.plan
+            # a dropped-out (crashed) group does no work and draws no
+            # attributable power — until liveness masks it out its data
+            # rows simply go unprocessed
+            live = [g for g in plan.groups if g.batch_size > 0
+                    and not self._dropped(g.name, step)]
             if not live:
                 break
             # per-group actual speeds under current interference
-            g_speed = {}
-            for g in live:
-                cap = self._capacity(g.name, step)
-                sp = g.speed_model.speed(g.batch_size) * cap
-                if self.speed_noise:
-                    sp *= 1.0 + self.rng.normal(0, self.speed_noise)
-                g_speed[g.name] = max(sp, 1e-9)
+            g_speed = {g.name: self._group_speed(g, step) for g in live}
             step_time = max(g.batch_size / g_speed[g.name] for g in live)
             batch = sum(g.batch_size * g.count for g in live)
             images += batch
             wall += step_time
             # power: active node classes draw their attributable power
-            p = sum(self.power_w.get(g.name, self.power_w.get("host", 40.0))
-                    * g.count for g in live)
+            p = sum(attributable_power(self.power_w, g.name) * g.count
+                    for g in live)
             energy += p * step_time
             speeds.append(batch / step_time)
-            if self.controller is not None:
-                reports = {g.name: {"speed": g_speed[g.name],
-                                    "cpu_util": self._capacity(g.name, step)}
-                           for g in live}
-                self.controller.observe(step, reports)
-        events = self.controller.events if self.controller else []
+            if cp is not None:
+                for g in plan.groups:
+                    if self._dropped(g.name, step):
+                        continue                 # silent: liveness path
+                    if g.batch_size == 0:
+                        # idle but alive: advertise the benchmark speed so
+                        # the rejoin path can restore the knee
+                        cp.bus.publish(StepReport(
+                            step, g.name,
+                            g.speed_model.speed(g.speed_model.knee()),
+                            cpu_util=0.0))
+                    else:
+                        cp.bus.publish(StepReport(
+                            step, g.name, g_speed[g.name],
+                            cpu_util=self._capacity(g.name, step)))
+                cp.poll(step)
+        events = cp.events if cp else []
         return SimResult(steps, images, wall, energy, speeds, events)
 
 
@@ -180,3 +255,18 @@ def csd_plan(n_csd: int, net: str = "mobilenet",
     if n_csd:
         groups["csd"] = (n_csd, csd)
     return solve(groups, dataset)
+
+
+def fig6_escalating_interference(
+        group: str = "xeon0",
+        stage1_step: int = 5, stage2_step: int = 25,
+        horizon: int = 10 ** 9) -> List[Interference]:
+    """The paper's Fig. 6 worked example as a schedule: Gzip steals 4/8
+    cores (node capped near 24.3 img/s -> retune 180 -> 140), then 6/8
+    (capped near 17.35 img/s -> retune 140 -> 100). The absolute caps
+    are the per-node speeds the paper's own 140/100 batch sizes imply at
+    the 5.79 s synchronous step (EXPERIMENTS.md §Retuning)."""
+    return [
+        Interference(group, stage1_step, stage2_step, speed_cap=24.3),
+        Interference(group, stage2_step, horizon, speed_cap=17.35),
+    ]

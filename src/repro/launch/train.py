@@ -3,15 +3,16 @@
 Wires the whole stack together the way a fleet deployment would:
 
   probe -> allocate (equal step time, Eq. 1) -> pjit train loop
-        -> per-step speed reports -> HyperTuneController (Eq. 2/3)
+        -> per-step StepReports on the TelemetryBus -> ControlPlane
+           (pluggable tuning policies, Eq. 2/3 / cpu-util / energy)
         -> retune = new row mask + Eq. 1 re-split (no recompile)
-        -> checkpoint/auto-resume; heartbeat -> elastic mask-out.
+        -> checkpoint/auto-resume; bus silence -> elastic mask-out.
 
 On this CPU container the "cluster" is simulated at the REPORT level only:
 the jitted step is real JAX training; interference hooks scale the
 reported per-group speeds exactly as a busy node would. On a fleet the
 reports come from per-host step timers (multihost_utils) instead — the
-controller, plan and data paths are identical.
+control plane, plan and data paths are identical.
 
 CLI:
   PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
@@ -32,8 +33,8 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import ArchConfig, get_arch, reduced_config
 from repro.core import allocator, hetero_dp
 from repro.core.allocator import BatchPlan
-from repro.core.controller import HyperTuneConfig, HyperTuneController
-from repro.core.elastic import HeartbeatMonitor
+from repro.core.control import (ControlPlane, HyperTuneConfig, StepReport,
+                                policy_from_config)
 from repro.core.speed_model import SpeedModel, probe
 from repro.data.pipeline import HeteroPipeline
 from repro.models.model_factory import aux_inputs, build_model
@@ -76,8 +77,15 @@ class HeteroTrainer:
         self.arch_cfg = arch_cfg
         self.plan = plan
         self.model = build_model(arch_cfg)
-        self.controller = HyperTuneController(plan, self.cfg.hypertune)
-        self.heartbeat = HeartbeatMonitor()
+        # the control plane owns the live plan: policies + elastic
+        # liveness (3 silent steps on the bus -> mask-out, reports
+        # resuming -> knee-restore), replacing the old controller +
+        # HeartbeatMonitor pair. ``controller`` stays as an alias for
+        # historical call sites (plan/events surface is identical).
+        self.control_plane = ControlPlane(
+            plan, [policy_from_config(self.cfg.hypertune)],
+            cfg=self.cfg.hypertune, liveness_timeout=3)
+        self.controller = self.control_plane
         self.pipeline = HeteroPipeline(
             plan, self.cfg.seq_len, arch_cfg.vocab_size,
             seed=self.cfg.seed, private_frac=self.cfg.private_frac)
@@ -138,7 +146,7 @@ class HeteroTrainer:
             return
         extras = {
             "pipeline": self.pipeline.snapshot(),
-            "batch_sizes": self.controller.plan.batch_sizes(),
+            "batch_sizes": self.control_plane.plan.batch_sizes(),
             "trainer_step": self.step,
         }
         self.ckpt.save(self.step, {"params": self.params,
@@ -160,10 +168,10 @@ class HeteroTrainer:
         if "pipeline" in extras:
             self.pipeline.restore(extras["pipeline"])
         if "batch_sizes" in extras:
-            new = allocator.retune(self.controller.plan,
+            new = allocator.retune(self.control_plane.plan,
                                    {k: int(v) for k, v in
                                     extras["batch_sizes"].items()})
-            self.controller.plan = new
+            self.control_plane.plan = new
             self.pipeline.set_plan(new)
         return True
 
@@ -181,7 +189,7 @@ class HeteroTrainer:
         steps = steps if steps is not None else self.cfg.steps
         target = self.step + steps
         while self.step < target:
-            plan = self.controller.plan
+            plan = self.control_plane.plan
             np_batch = self.pipeline.next_batch()
             batch = {
                 "tokens": jnp.asarray(np_batch["tokens"]),
@@ -197,14 +205,13 @@ class HeteroTrainer:
 
             reports = (report_fn(self.step, plan, dt) if report_fn
                        else self._healthy_reports(plan))
-            event = self.heartbeat.maybe_rejoin(self.step, reports,
-                                                self.controller)
-            for g in reports:
-                self.heartbeat.beat(self.step, g)
-            event = event or self.controller.observe(self.step, reports)
-            event = event or self.heartbeat.check(self.step, self.controller)
+            for gname, r in reports.items():
+                self.control_plane.bus.publish(
+                    StepReport.from_legacy(self.step, gname, r))
+            # one control round: rejoin -> policies -> liveness
+            event = self.control_plane.poll(self.step)
             if event is not None:
-                self.pipeline.set_plan(self.controller.plan)
+                self.pipeline.set_plan(self.control_plane.plan)
                 if on_retune:
                     on_retune(event)
 

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional [test] extra
+    from _hypo import given, settings, st
 
 from repro.configs.base import get_arch, reduced_config
 from repro.core import hetero_dp

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional [test] extra
+    from _hypo import given, settings, st
 
 from repro.optim import compression as C
 from repro.optim.optimizer import AdamW, OptConfig, schedule

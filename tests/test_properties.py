@@ -1,9 +1,15 @@
 """System-level property tests (hypothesis): the paper's core invariants
-over randomized clusters and interference patterns."""
+over randomized clusters and interference patterns.
+
+``hypothesis`` ships in the optional ``[test]`` extra (pyproject.toml);
+the whole module skips cleanly when it isn't installed so the tier-1
+suite stays collectable on a bare runtime."""
 from __future__ import annotations
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.allocator import retune, row_mask, solve
@@ -12,8 +18,8 @@ from repro.core.simulator import ClusterSim, Interference
 from repro.core.speed_model import SpeedModel
 
 
-def saturating(vmax, b_half):
-    bs = np.array([4.0, 8, 16, 32, 64, 128, 192, 256])
+def saturating(vmax, b_half, bs=(4, 8, 16, 32, 64, 128, 192, 256)):
+    bs = np.asarray(bs, float)
     return SpeedModel(bs, vmax * bs / (bs + b_half))
 
 
@@ -110,6 +116,38 @@ class TestPlanInvariants:
         res = ClusterSim(solve(groups, 100_000), []).run(20)
         vmax_total = sum(v * c for (v, b, c) in cluster)
         assert plateau(res) <= vmax_total * 1.001
+
+
+class TestAllocatorProperties:
+    """Property tests formerly in tests/test_allocator.py — moved here so
+    the deterministic allocator suite runs without hypothesis."""
+
+    LADDER = (8, 16, 32, 64, 128, 256, 512)
+
+    @given(vmax2=st.floats(5.0, 80.0), bh2=st.floats(1.0, 40.0))
+    @settings(max_examples=30, deadline=None)
+    def test_equal_step_time_property(self, vmax2, bh2):
+        """Step times equalize up to INTEGER batch granularity: a node
+        whose equal-time batch is b can only hit the target within
+        ~1/b relative error (hypothesis-discovered bound — extremely slow
+        nodes, e.g. ideal batch 3, are ±30% quantized; the paper's CSDs
+        at knee 15 are ±7%)."""
+        a = saturating(50.0, 12.0, bs=self.LADDER)
+        b = saturating(vmax2, bh2, bs=self.LADDER)
+        plan = solve({"a": (1, a), "b": (1, b)}, 100_000)
+        live = [g for g in plan.groups if g.batch_size > 0]
+        times = [g.speed_model.step_time(g.batch_size) for g in live]
+        granularity = max(1.0 / min(g.batch_size for g in live), 0.10)
+        assert max(times) / min(times) < 1.15 + 2.0 * granularity
+
+    @given(cut=st.integers(0, 64))
+    @settings(max_examples=25, deadline=None)
+    def test_mask_sum_tracks_batch(self, cut):
+        sm = saturating(34.2, 18.0, bs=(8, 16, 32, 64, 128, 256))
+        plan = solve({"a": (1, sm), "b": (1, sm)}, 10_000)
+        bs = plan.batch_sizes()["a"]
+        new = retune(plan, {"a": max(bs - cut, 0)})
+        assert row_mask(new).sum() == new.global_batch
 
 
 class TestSimulatorAccounting:

@@ -3,7 +3,10 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # optional [test] extra
+    from _hypo import given, settings, st
 
 from repro.core.speed_model import SpeedModel, probe
 
