@@ -1,8 +1,15 @@
 """Benchmark driver: one entry per paper table/figure + live micro-benches
-+ the roofline aggregation. Prints ``name,us_per_call,derived`` CSV.
++ the runtime protocol benches + the roofline aggregation.
+
+Prints ``name,us_per_call,derived`` CSV to stdout (historical format)
+AND writes every entry — including per-entry rows and failures — to a
+machine-readable JSON file (default ``BENCH_runtime.json``) so the perf
+trajectory can be tracked across commits instead of scraped from logs.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 
@@ -14,35 +21,54 @@ def _timed(fn):
 
 
 def main() -> None:
-    from benchmarks import live_train, paper_figs, roofline_table
+    from benchmarks import (live_train, paper_figs, roofline_table,
+                            runtime_bench)
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_runtime.json",
+                    help="machine-readable output path ('' disables)")
+    args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    entries = []
     failures = 0
 
-    for name, fn in paper_figs.ALL.items():
-        try:
-            us, (rows, derived) = _timed(fn)
-            print(f"{name},{us:.0f},{derived}")
-        except Exception as e:  # pragma: no cover
-            failures += 1
-            print(f"{name},nan,ERROR:{e}", file=sys.stderr)
-
-    for name, fn in live_train.ALL.items():
-        try:
-            us, (rows, derived) = _timed(fn)
-            print(f"{name},{us:.0f},{derived}")
-        except Exception as e:  # pragma: no cover
-            failures += 1
-            print(f"{name},nan,ERROR:{e}", file=sys.stderr)
+    suites = [paper_figs.ALL, live_train.ALL, runtime_bench.ALL]
+    for suite in suites:
+        for name, fn in suite.items():
+            try:
+                us, (rows, derived) = _timed(fn)
+                print(f"{name},{us:.0f},{derived}")
+                entries.append({"name": name, "us_per_call": round(us),
+                                "derived": derived, "rows": rows,
+                                "ok": True})
+            except Exception as e:  # pragma: no cover
+                failures += 1
+                print(f"{name},nan,ERROR:{e}", file=sys.stderr)
+                entries.append({"name": name, "us_per_call": None,
+                                "derived": None, "error": str(e),
+                                "ok": False})
 
     try:
         us, rows = _timed(roofline_table.load)
         n = len(rows)
         worst = (min((r["roofline_frac"] for r in rows), default=float("nan")))
         print(f"roofline_table,{us:.0f},cells={n};worst={worst:.4f}")
+        entries.append({"name": "roofline_table", "us_per_call": round(us),
+                        "derived": {"cells": n, "worst": worst},
+                        "ok": True})
     except Exception as e:  # pragma: no cover
         failures += 1
         print(f"roofline_table,nan,ERROR:{e}", file=sys.stderr)
+        entries.append({"name": "roofline_table", "us_per_call": None,
+                        "derived": None, "error": str(e), "ok": False})
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"entries": entries, "failures": failures}, f,
+                      indent=1, default=str)
+        print(f"wrote {args.json} ({len(entries)} entries)",
+              file=sys.stderr)
 
     if failures:
         raise SystemExit(1)

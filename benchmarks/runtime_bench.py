@@ -1,0 +1,58 @@
+"""Stannis runtime micro-benchmarks (coordinator + IPC hot path).
+
+  runtime_rounds       — coordinator round latency + reports/s through
+                         the thread-worker runtime (pure protocol cost:
+                         grant -> report rendezvous over pipes);
+  runtime_retune_lag   — rounds from a coordinator retune decision to
+                         the worker echoing the new batch size (must be
+                         1: the next granted report already carries it);
+  runtime_fig6_parity  — the Fig. 6 escalating-interference scenario
+                         through ClusterSim and through live workers;
+                         derived is 1.0 only if the event streams are
+                         IDENTICAL (steps, batches, reasons).
+
+All entries ride ``benchmarks/run.py`` and land in BENCH_runtime.json.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+
+def runtime_rounds() -> Tuple[List[Dict], float]:
+    from repro.runtime.parity import run_runtime
+
+    result, _ = run_runtime(steps=60, manager="local")
+    rows = [
+        {"metric": "rounds", "value": result.rounds},
+        {"metric": "mean_round_latency_us",
+         "value": round(result.mean_round_latency_s * 1e6, 1)},
+        {"metric": "reports_total", "value": result.reports_total},
+        {"metric": "reports_per_s", "value": round(result.reports_per_s, 1)},
+    ]
+    return rows, round(result.reports_per_s, 1)
+
+
+def runtime_retune_lag() -> Tuple[List[Dict], float]:
+    from repro.core.simulator import fig6_escalating_interference
+    from repro.runtime.parity import run_runtime
+
+    result, events = run_runtime(fig6_escalating_interference(),
+                                 steps=45, manager="local")
+    rows = [{"metric": "n_retunes", "value": len(events)},
+            {"metric": "lags_rounds", "value": list(result.retune_lags)}]
+    worst = max(result.retune_lags) if result.retune_lags else float("nan")
+    return rows, float(worst)
+
+
+def runtime_fig6_parity() -> Tuple[List[Dict], float]:
+    from repro.runtime.parity import fig6_parity
+
+    p = fig6_parity(manager="local")
+    rows = [{"path": "sim", "events": [list(e) for e in p["sim"]]},
+            {"path": "runtime", "events": [list(e) for e in p["runtime"]]}]
+    return rows, 1.0 if p["match"] else 0.0
+
+
+ALL = {"runtime_rounds": runtime_rounds,
+       "runtime_retune_lag": runtime_retune_lag,
+       "runtime_fig6_parity": runtime_fig6_parity}

@@ -1,0 +1,50 @@
+"""Interference window evaluation — the ONE copy of the float ops.
+
+Three consumers evaluate "what does external load do to this group's
+speed at this step": ``ClusterSim`` (modeled cluster), the runtime's
+worker-side ``SpeedGovernor`` (live injector) and the inproc report
+hooks in ``launch/train.py``. Sim/runtime trace parity depends on all
+three staying float-op-identical, so they all call these helpers.
+
+``windows`` is any sequence of objects with ``start_step``/``end_step``
+/``capacity``/``speed_cap`` fields (``simulator.Interference`` or
+``runtime.worker.InterferenceSpec``). Pass ``group`` to filter a mixed
+schedule by the window's ``group`` attribute; windows without one (the
+worker's pre-filtered specs) always apply.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+
+def _applies(window, step: int, group: Optional[str]) -> bool:
+    if group is not None and getattr(window, "group", group) != group:
+        return False
+    return window.start_step <= step < window.end_step
+
+
+def window_capacity(windows: Sequence, step: int,
+                    group: Optional[str] = None) -> float:
+    """Remaining speed fraction (0..1] under all active windows."""
+    cap = 1.0
+    for iv in windows:
+        if _applies(iv, step, group):
+            cap = min(cap, iv.capacity)
+    return cap
+
+
+def window_speed_cap(windows: Sequence, step: int,
+                     group: Optional[str] = None) -> Optional[float]:
+    """Tightest absolute img/s bound active at this step, or None."""
+    caps = [iv.speed_cap for iv in windows
+            if iv.speed_cap is not None and _applies(iv, step, group)]
+    return min(caps) if caps else None
+
+
+def govern_speed(raw_speed: float, windows: Sequence, step: int,
+                 group: Optional[str] = None) -> float:
+    """capacity-scaled then absolutely-capped speed (the order the
+    simulator established; parity-critical)."""
+    sp = raw_speed * window_capacity(windows, step, group)
+    cap = window_speed_cap(windows, step, group)
+    return sp if cap is None else min(sp, cap)

@@ -26,6 +26,7 @@ import numpy as np
 from repro.core.allocator import BatchPlan, GroupState, solve
 from repro.core.control import (DEFAULT_POWER_W, ControlPlane, StepReport,
                                 attributable_power)
+from repro.core.interference import window_capacity, window_speed_cap
 from repro.core.speed_model import SpeedModel
 
 
@@ -158,17 +159,10 @@ class ClusterSim:
                 "it with ControlPlane(..., liveness_timeout=<steps>)")
 
     def _capacity(self, group: str, step: int) -> float:
-        cap = 1.0
-        for iv in self.interferences:
-            if iv.group == group and iv.start_step <= step < iv.end_step:
-                cap = min(cap, iv.capacity)
-        return cap
+        return window_capacity(self.interferences, step, group)
 
     def _speed_cap(self, group: str, step: int) -> Optional[float]:
-        caps = [iv.speed_cap for iv in self.interferences
-                if iv.group == group and iv.speed_cap is not None
-                and iv.start_step <= step < iv.end_step]
-        return min(caps) if caps else None
+        return window_speed_cap(self.interferences, step, group)
 
     def _dropped(self, group: str, step: int) -> bool:
         return any(d.group == group and d.start_step <= step < d.end_step

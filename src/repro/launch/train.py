@@ -8,20 +8,35 @@ Wires the whole stack together the way a fleet deployment would:
         -> retune = new row mask + Eq. 1 re-split (no recompile)
         -> checkpoint/auto-resume; bus silence -> elastic mask-out.
 
-On this CPU container the "cluster" is simulated at the REPORT level only:
-the jitted step is real JAX training; interference hooks scale the
-reported per-group speeds exactly as a busy node would. On a fleet the
-reports come from per-host step timers (multihost_utils) instead — the
-control plane, plan and data paths are identical.
+Three execution substrates, selected with ``--runtime``:
+
+  inproc   the historical single-process loop: real jitted steps, the
+           "cluster" simulated at the REPORT level only (interference
+           hooks scale the reported per-group speeds exactly as a busy
+           node would);
+  local    the Stannis runtime (repro.runtime) over thread workers —
+           coordinator EventLoop, typed IPC messages, deterministic CI;
+  process  the Stannis runtime over REAL worker processes, each running
+           the jitted train step at its group's live batch size and
+           streaming reports back over a pipe. Faults are real: a killed
+           worker produces genuine bus silence.
+
+``--interfere`` grammar (comma-separated events):
+  csd@20x0.5      capacity 0.5 from step 20, open-ended
+  csd@20-40x0.5   capacity 0.5 in steps [20, 40)
+  xeon0@5-25v24.3 absolute speed cap 24.3 img/s in [5, 25)
+  csd@20-40!      dropout (silent — no reports) in [20, 40)
 
 CLI:
   PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
-      --steps 50 --groups host:1,csd:4 --interfere csd@20x0.5
+      --steps 50 --groups host:1,csd:4 --interfere csd@20-40x0.5 \
+      --runtime process
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import re
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -168,9 +183,13 @@ class HeteroTrainer:
         if "pipeline" in extras:
             self.pipeline.restore(extras["pipeline"])
         if "batch_sizes" in extras:
+            # min_batch=0 (retune's own default, made explicit): a group
+            # that was masked out (b_g = 0) when the checkpoint was taken
+            # must stay failed — regression-locked in test_checkpoint.py
             new = allocator.retune(self.control_plane.plan,
                                    {k: int(v) for k, v in
-                                    extras["batch_sizes"].items()})
+                                    extras["batch_sizes"].items()},
+                                   min_batch=0)
             self.control_plane.plan = new
             self.pipeline.set_plan(new)
         return True
@@ -308,16 +327,123 @@ def _parse_groups(text: str, sm: SpeedModel) -> Dict[str, Tuple]:
     return out
 
 
-def _parse_interfere(text: Optional[str]):
-    # "csd@20x0.5" -> {"csd": [(20, 10**9, 0.5)]}
+def parse_interfere(text: Optional[str]):
+    """The ``--interfere`` grammar -> simulator event dataclasses.
+
+    part := GROUP@START[-END]EFFECT, EFFECT one of
+      x<frac>   capacity scale (the historical form; END optional)
+      v<img/s>  absolute speed cap (core-stealing bound)
+      !         dropout: the group publishes nothing in the window
+
+    Returns (interferences, dropouts) — the SAME dataclasses ClusterSim
+    and the runtime's WorkerSpecs consume, so one schedule string drives
+    all three execution substrates identically.
+    """
+    from repro.core.simulator import Dropout, Interference
+
+    ivs: List[Interference] = []
+    drops: List[Dropout] = []
     if not text:
-        return None
-    out: Dict[str, List[Tuple[int, int, float]]] = {}
+        return ivs, drops
     for part in text.split(","):
         name, rest = part.split("@")
-        start, cap = rest.split("x")
-        out.setdefault(name, []).append((int(start), 10 ** 9, float(cap)))
-    return interference_report_fn(out)
+        m = re.match(r"^(\d+)(?:-(\d+))?(x[\d.eE+-]+|v[\d.eE+-]+|!)$", rest)
+        if not m:
+            raise ValueError(f"bad --interfere event: {part!r}")
+        start = int(m.group(1))
+        end = int(m.group(2)) if m.group(2) else 10 ** 9
+        effect = m.group(3)
+        if effect == "!":
+            drops.append(Dropout(name, start, end))
+        elif effect.startswith("x"):
+            ivs.append(Interference(name, start, end,
+                                    capacity=float(effect[1:])))
+        else:
+            ivs.append(Interference(name, start, end,
+                                    speed_cap=float(effect[1:])))
+    return ivs, drops
+
+
+def events_report_fn(interferences, dropouts) -> Optional[Callable]:
+    """Report hook for the inproc loop from simulator event dataclasses:
+    capacity-scaled + absolutely-capped speeds (``ClusterSim`` model),
+    dropped-out groups silent."""
+    if not interferences and not dropouts:
+        return None
+
+    from repro.core.interference import (govern_speed, window_capacity,
+                                         window_speed_cap)
+
+    def fn(step, plan, dt):
+        reports = HeteroTrainer._healthy_reports(plan)
+        for d in dropouts:
+            if d.start_step <= step < d.end_step:
+                reports.pop(d.group, None)
+        for g in plan.groups:
+            if g.name not in reports or g.batch_size <= 0:
+                continue
+            cap = window_capacity(interferences, step, g.name)
+            if cap >= 1.0 and \
+                    window_speed_cap(interferences, step, g.name) is None:
+                continue
+            sp = govern_speed(g.speed_model.speed(g.batch_size),
+                              interferences, step, g.name)
+            reports[g.name]["speed"] = min(reports[g.name]["speed"], sp)
+            reports[g.name]["cpu_util"] = cap
+        return reports
+
+    return fn
+
+
+def _run_distributed(args, cfg: TrainerConfig, sm: SpeedModel,
+                     interferences, dropouts) -> None:
+    """Drive training through the Stannis runtime (repro.runtime): a
+    coordinator EventLoop + thread or process workers over typed IPC."""
+    from repro.runtime import EventLoop, MANAGERS, specs_from_plan
+
+    if cfg.ckpt_dir or args.resume:
+        # runtime CheckpointAcks are state summaries, not on-disk
+        # snapshots (param fan-in is a ROADMAP open item)
+        print("warning: --ckpt-dir/--resume are inproc-only; the "
+              f"{args.runtime} runtime does not persist checkpoints yet",
+              flush=True)
+    plan = allocator.solve(_parse_groups(args.groups, sm), cfg.dataset_size)
+    train_workers = (args.worker_train == "on"
+                     or (args.worker_train == "auto"
+                         and args.runtime == "process"))
+    train = ({"arch": args.arch, "seq_len": args.seq_len,
+              "reduced": not args.full_size} if train_workers else None)
+    cp = ControlPlane(plan, [policy_from_config(cfg.hypertune)],
+                      cfg=cfg.hypertune, liveness_timeout=3)
+    manager = MANAGERS[args.runtime]()
+    # training workers jit-compile on their first granted step; a short
+    # round deadline would read that compile stall as bus silence and
+    # mask healthy groups out, so the auto default is generous
+    round_timeout = (args.round_timeout if args.round_timeout is not None
+                     else (120.0 if train_workers else 5.0))
+    loop = EventLoop(cp, manager, round_timeout=round_timeout)
+    print(f"runtime={args.runtime} workers={plan.batch_sizes()} "
+          f"train_in_workers={train_workers}")
+    try:
+        # start() inside the try: a handshake failure on worker N must
+        # still tear down workers 0..N-1
+        manager.start(specs_from_plan(plan, interferences, dropouts,
+                                      train=train, seed=cfg.seed))
+        res = loop.run(args.steps, checkpoint_every=10)
+    finally:
+        loop.shutdown()
+    print(f"done: {res.rounds} rounds, {res.reports_total} reports "
+          f"({res.reports_per_s:.0f} reports/s, "
+          f"{res.mean_round_latency_s * 1e3:.1f} ms/round), "
+          f"{len(res.events)} plan changes")
+    for e in res.events:
+        print(f"  retune @ round {e.step}: {e.group}:"
+              f"{e.old_batch}->{e.new_batch} ({e.reason})")
+    if res.retune_lags:
+        print(f"  retune propagation lag: {res.retune_lags} round(s)")
+    for ack in res.checkpoint_acks[-len(plan.groups):]:
+        print(f"  worker {ack.group}: step {ack.worker_step} "
+              f"b={ack.batch_size} compiles={ack.n_compiles}")
 
 
 def main() -> None:
@@ -328,9 +454,23 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--groups", default="host:1,worker:2")
-    ap.add_argument("--interfere", default=None)
+    ap.add_argument("--interfere", default=None,
+                    help="e.g. 'csd@20-40x0.5,csd@45-50!' (x=capacity, "
+                         "v=absolute img/s cap, !=dropout)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--runtime", choices=("inproc", "local", "process"),
+                    default="inproc",
+                    help="inproc: single-process loop; local: thread "
+                         "workers; process: real worker processes")
+    ap.add_argument("--round-timeout", type=float, default=None,
+                    help="coordinator round deadline (s); a silent worker "
+                         "costs at most this per round (default: 5, or 120 "
+                         "when workers run jitted steps)")
+    ap.add_argument("--worker-train", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="run real jitted steps inside runtime workers "
+                         "(auto: on for --runtime process)")
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
@@ -339,6 +479,7 @@ def main() -> None:
     cfg = TrainerConfig(steps=args.steps, seq_len=args.seq_len,
                         ckpt_dir=args.ckpt_dir,
                         ckpt_every=10 if args.ckpt_dir else 0)
+    interferences, dropouts = parse_interfere(args.interfere)
 
     # probe this node once, reuse the curve for every group (single-host
     # stand-in; a fleet probes per node class)
@@ -349,13 +490,17 @@ def main() -> None:
     sm = bootstrap.probe_speed_model()
     print(f"probe: knee={sm.knee()} vmax={sm.vmax:.2f} samp/s")
 
+    if args.runtime != "inproc":
+        _run_distributed(args, cfg, sm, interferences, dropouts)
+        return
+
     trainer = HeteroTrainer.from_probe(arch, _parse_groups(args.groups, sm),
                                        cfg)
     trainer.params = bootstrap.params        # reuse init
     if args.resume:
         if trainer.resume():
             print(f"resumed at step {trainer.step}")
-    recs = trainer.run(report_fn=_parse_interfere(args.interfere))
+    recs = trainer.run(report_fn=events_report_fn(interferences, dropouts))
     retunes = [r for r in recs if r.retune]
     print(f"done: {len(recs)} steps, {len(retunes)} retunes, "
           f"final loss {recs[-1].loss:.4f}")

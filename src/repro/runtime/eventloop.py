@@ -1,0 +1,280 @@
+"""The Stannis coordinator: an event loop owning the control plane.
+
+Per synchronous round the loop
+
+  1. applies any scheduled fault-injection actions (kill / restart /
+     suspend / resume, delegated to the execution manager);
+  2. paces every live worker with a ``StepGrant`` (the coordinator owns
+     the logical clock — workers stamp reports with the granted step);
+  3. collects one ``StepReportMsg`` per granted worker, bounded by
+     ``round_timeout``. A killed worker surfaces as channel EOF, a
+     suspended worker as a timeout — EITHER WAY the bus simply receives
+     nothing, and the existing ControlPlane liveness path masks the
+     group out after ``liveness_timeout`` silent rounds. No failure
+     message type exists anywhere in the protocol.
+  4. publishes the round's reports on the ``TelemetryBus`` and runs one
+     control round (rejoin -> policies -> liveness);
+  5. broadcasts any plan change as a ``Retune`` message — workers flip
+     their row mask, nothing recompiles — and measures propagation lag
+     from the worker-echoed batch size.
+
+Because pacing is a rendezvous (grant -> report), a fully-live cluster
+runs with zero timeouts and the round sequence is deterministic: the
+same scenario replayed through :class:`~repro.core.simulator.ClusterSim`
+and through this loop produces the identical event stream
+(tests/test_runtime*.py assert the paper's 180 -> 140 -> 100 Fig. 6
+sequence through both).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.allocator import BatchPlan
+from repro.core.control import ControlPlane, RetuneEvent, StepReport
+from repro.runtime.ipc import ChannelClosed
+from repro.runtime.managers.base import ExecutionManager
+from repro.runtime.messages import (CheckpointAck, CheckpointRequest, Goodbye,
+                                    Hello, Message, Retune, StepGrant,
+                                    StepReportMsg)
+from repro.runtime.worker import InterferenceSpec, WorkerSpec
+
+
+@dataclasses.dataclass
+class FaultAction:
+    """One scheduled fault-injection action. ``action`` is one of
+    "kill" | "restart" | "suspend" | "resume"."""
+
+    step: int
+    action: str
+    group: str
+
+
+@dataclasses.dataclass
+class RoundStats:
+    step: int
+    n_reports: int
+    latency_s: float
+    event: Optional[str] = None
+
+
+@dataclasses.dataclass
+class RuntimeResult:
+    rounds: int
+    events: List[RetuneEvent]
+    round_stats: List[RoundStats]
+    wall_time: float
+    reports_total: int
+    retune_lags: List[int]               # rounds from decision to worker echo
+    checkpoint_acks: List[CheckpointAck]
+
+    def event_tuples(self):
+        return [(e.step, e.group, e.old_batch, e.new_batch, e.reason)
+                for e in self.events]
+
+    @property
+    def reports_per_s(self) -> float:
+        return self.reports_total / max(self.wall_time, 1e-9)
+
+    @property
+    def mean_round_latency_s(self) -> float:
+        if not self.round_stats:
+            return 0.0
+        return sum(r.latency_s for r in self.round_stats) / \
+            len(self.round_stats)
+
+
+def specs_from_plan(plan: BatchPlan,
+                    interferences: Sequence = (),
+                    dropouts: Sequence = (),
+                    train: Optional[Dict] = None,
+                    seed: int = 0) -> List[WorkerSpec]:
+    """One WorkerSpec per plan group, carrying its benchmark table and
+    its slice of the fault schedule. ``interferences``/``dropouts`` are
+    the simulator's dataclasses — the runtime and ``ClusterSim`` consume
+    the SAME scenario description (trace parity by construction)."""
+    specs = []
+    for g in plan.groups:
+        ivs = [InterferenceSpec(iv.start_step, iv.end_step, iv.capacity,
+                                iv.speed_cap)
+               for iv in interferences if iv.group == g.name]
+        sil = [(d.start_step, d.end_step)
+               for d in dropouts if d.group == g.name]
+        specs.append(WorkerSpec(
+            group=g.name, batch_size=g.batch_size, capacity=g.capacity,
+            count=g.count,
+            speed_batches=[float(b) for b in g.speed_model.batch_sizes],
+            speed_speeds=[float(s) for s in g.speed_model.speeds],
+            interference=ivs, silence=sil,
+            train=dict(train) if train else None, seed=seed))
+    return specs
+
+
+class EventLoop:
+    def __init__(self, control_plane: ControlPlane,
+                 manager: ExecutionManager,
+                 round_timeout: float = 1.0) -> None:
+        self.control_plane = control_plane
+        self.manager = manager
+        self.round_timeout = round_timeout
+        self._ckpt_acks: List[CheckpointAck] = []
+        self._awaiting_acks: set = set()
+        self._pending_lag: Dict[str, tuple] = {}   # group -> (step, new_bs)
+        self._lags: List[int] = []
+
+    # ------------------------------------------------------------------
+    def run(self, rounds: int, faults: Sequence[FaultAction] = (),
+            checkpoint_every: int = 0,
+            on_retune=None) -> RuntimeResult:
+        cp = self.control_plane
+        stats: List[RoundStats] = []
+        reports_total = 0
+        t_run = time.perf_counter()
+        for step in range(rounds):
+            t0 = time.perf_counter()
+            self._apply_faults(step, faults)
+            granted = self._grant(step)
+            reports = self._collect(granted, step)
+            reports_total += len(reports)
+            for msg in reports.values():
+                cp.bus.publish(StepReport(step, msg.group, msg.speed,
+                                          cpu_util=msg.cpu_util,
+                                          power_w=msg.power_w))
+            event = cp.poll(step)
+            if event is not None:
+                self._broadcast_retune(step, event)
+                if on_retune:
+                    on_retune(event)
+            if checkpoint_every and (step + 1) % checkpoint_every == 0:
+                self._broadcast(CheckpointRequest(step))
+                self._awaiting_acks = set(self.manager.live())
+            stats.append(RoundStats(
+                step, len(reports), time.perf_counter() - t0,
+                None if event is None else
+                f"{event.group}:{event.old_batch}->{event.new_batch}"
+                f" ({event.reason})"))
+        self._drain_acks()
+        return RuntimeResult(rounds, list(cp.events), stats,
+                             time.perf_counter() - t_run, reports_total,
+                             list(self._lags), list(self._ckpt_acks))
+
+    def shutdown(self) -> None:
+        self.manager.shutdown()
+
+    # ------------------------------------------------------------------
+    def _apply_faults(self, step: int, faults: Sequence[FaultAction]) -> None:
+        for f in faults:
+            if f.step != step:
+                continue
+            if f.action == "kill":
+                self.manager.kill(f.group)
+            elif f.action == "suspend":
+                self.manager.suspend(f.group)
+            elif f.action == "resume":
+                self.manager.resume(f.group)
+            elif f.action == "restart":
+                handle = self.manager.workers[f.group]
+                spec = dataclasses.replace(
+                    handle.spec,
+                    batch_size=self.control_plane.plan.batch_sizes().get(
+                        f.group, handle.spec.batch_size))
+                self.manager.restart(f.group, spec)
+            else:
+                raise ValueError(f"unknown fault action: {f.action}")
+
+    def _grant(self, step: int) -> List[str]:
+        granted = []
+        for name, handle in self.manager.live().items():
+            try:
+                handle.channel.put(StepGrant(step))
+                granted.append(name)
+            except ChannelClosed:
+                self.manager.mark_dead(name)
+        return granted
+
+    def _collect(self, granted: List[str],
+                 step: int) -> Dict[str, StepReportMsg]:
+        """One report per granted worker, or silence by the deadline."""
+        reports: Dict[str, StepReportMsg] = {}
+        pending = set(granted)
+        deadline = time.perf_counter() + self.round_timeout
+        while pending and time.perf_counter() < deadline:
+            progressed = False
+            for name in sorted(pending):
+                handle = self.manager.workers[name]
+                if not handle.alive:
+                    pending.discard(name)
+                    continue
+                try:
+                    while handle.channel.poll(0.0):
+                        msg = handle.channel.get()
+                        progressed = True
+                        if self._route(name, msg, step, reports):
+                            pending.discard(name)
+                            break
+                except ChannelClosed:
+                    self.manager.mark_dead(name)
+                    pending.discard(name)
+                    progressed = True
+            if pending and not progressed:
+                time.sleep(0.002)
+        return reports
+
+    def _route(self, name: str, msg: Message, step: int,
+               reports: Dict[str, StepReportMsg]) -> bool:
+        """Returns True when ``name``'s report for THIS round arrived."""
+        if isinstance(msg, StepReportMsg):
+            if msg.step != step:
+                return False             # stale (e.g. post-resume backlog)
+            reports[name] = msg
+            lag = self._pending_lag.get(name)
+            if lag is not None and msg.batch_size == lag[1]:
+                self._lags.append(step - lag[0])
+                self._pending_lag.pop(name)
+            return True
+        if isinstance(msg, CheckpointAck):
+            self._ckpt_acks.append(msg)
+            self._awaiting_acks.discard(name)
+        elif isinstance(msg, Goodbye):
+            self.manager.mark_dead(name)
+            return True
+        elif isinstance(msg, Hello):
+            pass                         # late duplicate; handshake owns it
+        return False
+
+    def _drain_acks(self) -> None:
+        """A CheckpointRequest broadcast on the FINAL round would
+        otherwise never be answered in a _collect pass — drain the
+        outstanding acks so the result reflects the workers' final
+        state."""
+        deadline = time.perf_counter() + self.round_timeout
+        while self._awaiting_acks and time.perf_counter() < deadline:
+            progressed = False
+            for name in sorted(self._awaiting_acks):
+                handle = self.manager.workers.get(name)
+                if handle is None or not handle.alive:
+                    self._awaiting_acks.discard(name)
+                    break
+                try:
+                    while handle.channel.poll(0.0):
+                        self._route(name, handle.channel.get(), -1, {})
+                        progressed = True
+                except ChannelClosed:
+                    self.manager.mark_dead(name)
+                    self._awaiting_acks.discard(name)
+                    progressed = True
+            if self._awaiting_acks and not progressed:
+                time.sleep(0.002)
+
+    def _broadcast_retune(self, step: int, event: RetuneEvent) -> None:
+        self._broadcast(Retune(step, self.control_plane.plan.batch_sizes(),
+                               group=event.group, reason=event.reason))
+        self._pending_lag[event.group] = (step, event.new_batch)
+
+    def _broadcast(self, msg: Message) -> None:
+        for name, handle in self.manager.live().items():
+            try:
+                handle.channel.put(msg)
+            except ChannelClosed:
+                self.manager.mark_dead(name)

@@ -1,0 +1,8 @@
+"""IPC layer for the Stannis runtime: typed channels over
+``multiprocessing`` primitives (DESIGN.md §10)."""
+from repro.runtime.ipc.base import Channel, ChannelClosed
+from repro.runtime.ipc.pipe import PipeChannel, pipe_pair
+from repro.runtime.ipc.queue import QueueChannel, queue_pair
+
+__all__ = ["Channel", "ChannelClosed", "PipeChannel", "pipe_pair",
+           "QueueChannel", "queue_pair"]

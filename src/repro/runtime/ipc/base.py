@@ -1,0 +1,44 @@
+"""IPC channel abstraction for the Stannis runtime.
+
+A :class:`Channel` moves :class:`~repro.runtime.messages.Message` wire
+tuples between the coordinator and one worker, whether that worker is a
+thread (LocalManager), a spawn-context process (ProcessManager), or —
+eventually — a remote host. The surface is deliberately tiny (put /
+poll / get / close) so the event loop never touches transport details,
+and a dead peer always surfaces as :class:`ChannelClosed` rather than a
+transport-specific exception.
+"""
+from __future__ import annotations
+
+import abc
+
+from repro.runtime.messages import Message
+
+
+class ChannelClosed(Exception):
+    """The peer is gone (EOF / closed handle). The runtime treats this
+    as *silence*, never as an error to propagate: a closed channel is
+    exactly how a crashed worker looks from the coordinator."""
+
+
+class Channel(abc.ABC):
+    """Bidirectional, ordered, typed message channel."""
+
+    @abc.abstractmethod
+    def put(self, message: Message) -> None:
+        """Send one message. Raises :class:`ChannelClosed` if the peer
+        is gone."""
+
+    @abc.abstractmethod
+    def poll(self, timeout: float = 0.0) -> bool:
+        """True if :meth:`get` would not block. A readable-but-EOF
+        channel also returns True — the EOF is delivered by ``get``."""
+
+    @abc.abstractmethod
+    def get(self) -> Message:
+        """Receive one message (blocking). Raises :class:`ChannelClosed`
+        on EOF."""
+
+    @abc.abstractmethod
+    def close(self) -> None:
+        """Close this end. Idempotent."""

@@ -1,0 +1,52 @@
+"""Pipe-backed channel: one end of a ``multiprocessing.Pipe``.
+
+Works identically for thread workers (both ends in-process) and for
+spawn-context process workers (the Connection is inherited through
+``Process(args=...)``). Only wire tuples of primitives travel through
+it — see ``runtime/messages.py``.
+"""
+from __future__ import annotations
+
+import multiprocessing
+from multiprocessing.connection import Connection
+from typing import Tuple
+
+from repro.runtime.ipc.base import Channel, ChannelClosed
+from repro.runtime.messages import Message
+
+
+class PipeChannel(Channel):
+    def __init__(self, connection: Connection) -> None:
+        self._conn = connection
+        self._closed = False
+
+    def put(self, message: Message) -> None:
+        try:
+            self._conn.send(message.to_wire())
+        except (OSError, ValueError, BrokenPipeError) as e:
+            raise ChannelClosed(str(e)) from e
+
+    def poll(self, timeout: float = 0.0) -> bool:
+        if self._closed:
+            return False
+        try:
+            return self._conn.poll(timeout)
+        except (OSError, EOFError):
+            return True                  # EOF is delivered by get()
+
+    def get(self) -> Message:
+        try:
+            return Message.from_wire(self._conn.recv())
+        except (EOFError, OSError) as e:
+            raise ChannelClosed(str(e)) from e
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._conn.close()
+
+
+def pipe_pair() -> Tuple[PipeChannel, PipeChannel]:
+    """(coordinator_end, worker_end) duplex channel pair."""
+    a, b = multiprocessing.Pipe()
+    return PipeChannel(a), PipeChannel(b)

@@ -1,0 +1,58 @@
+"""Queue-backed channel: a pair of ``multiprocessing.Queue``s.
+
+The alternative transport for setups where a duplex pipe is awkward
+(e.g. many-to-one fan-in, or a future cluster backend that replaces the
+queues with a broker). Semantics match :class:`PipeChannel` except that
+a dead peer cannot be detected from the transport itself — the runtime
+already treats that as ordinary silence, so nothing above this layer
+changes.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import queue as _queue
+from typing import Optional, Tuple
+
+from repro.runtime.ipc.base import Channel, ChannelClosed
+from repro.runtime.messages import Message, WireMessage
+
+
+class QueueChannel(Channel):
+    def __init__(self, inbox: "multiprocessing.Queue",
+                 outbox: "multiprocessing.Queue") -> None:
+        self._inbox = inbox
+        self._outbox = outbox
+        self._peeked: Optional[WireMessage] = None
+        self._closed = False
+
+    def put(self, message: Message) -> None:
+        if self._closed:
+            raise ChannelClosed("channel closed")
+        self._outbox.put(message.to_wire())
+
+    def poll(self, timeout: float = 0.0) -> bool:
+        if self._peeked is not None:
+            return True
+        try:
+            self._peeked = self._inbox.get(
+                timeout=timeout) if timeout else self._inbox.get_nowait()
+            return True
+        except _queue.Empty:
+            return False
+
+    def get(self) -> Message:
+        if self._peeked is None:
+            self._peeked = self._inbox.get()
+        wire, self._peeked = self._peeked, None
+        return Message.from_wire(wire)
+
+    def close(self) -> None:
+        self._closed = True
+
+
+def queue_pair() -> Tuple[QueueChannel, QueueChannel]:
+    """(coordinator_end, worker_end) built from two mp queues."""
+    to_worker: "multiprocessing.Queue" = multiprocessing.Queue()
+    to_coord: "multiprocessing.Queue" = multiprocessing.Queue()
+    return (QueueChannel(to_coord, to_worker),
+            QueueChannel(to_worker, to_coord))

@@ -1,0 +1,10 @@
+"""Pluggable execution managers for the Stannis runtime."""
+from repro.runtime.managers.base import (ExecutionManager, HandshakeTimeout,
+                                         WorkerHandle)
+from repro.runtime.managers.local import LocalManager
+from repro.runtime.managers.process import ProcessManager
+
+MANAGERS = {"local": LocalManager, "process": ProcessManager}
+
+__all__ = ["ExecutionManager", "HandshakeTimeout", "WorkerHandle",
+           "LocalManager", "ProcessManager", "MANAGERS"]

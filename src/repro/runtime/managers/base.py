@@ -1,0 +1,126 @@
+"""Execution managers: how worker loops come to exist (DESIGN.md §10).
+
+A manager owns the worker lifecycle — spawn, handshake, fault injection
+(kill / suspend / resume), restart, teardown — and hands the event loop
+one :class:`~repro.runtime.ipc.base.Channel` per live worker. The event
+loop never learns whether a worker is a thread, a process or (later) a
+remote host.
+
+Manager matrix:
+
+  ==============  =========  ==========  ======================
+  manager         substrate  kill        suspend/resume
+  ==============  =========  ==========  ======================
+  LocalManager    threads    channel     no (use spec.silence)
+                             close
+  ProcessManager  processes  SIGKILL     SIGSTOP / SIGCONT
+  ==============  =========  ==========  ======================
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Dict, Optional
+
+from repro.runtime.ipc import Channel, ChannelClosed
+from repro.runtime.messages import Hello
+from repro.runtime.worker import WorkerSpec
+
+
+class HandshakeTimeout(Exception):
+    """A spawned worker never said Hello within the deadline."""
+
+
+@dataclasses.dataclass
+class WorkerHandle:
+    spec: WorkerSpec
+    channel: Channel
+    alive: bool = True
+    incarnation: int = 0
+    pid: Optional[int] = None
+
+
+class ExecutionManager(abc.ABC):
+    """Spawns and supervises one worker per node group."""
+
+    name = "base"
+
+    def __init__(self, hello_timeout: float = 30.0) -> None:
+        self.hello_timeout = hello_timeout
+        self.workers: Dict[str, WorkerHandle] = {}
+
+    # -- lifecycle ------------------------------------------------------
+    def start(self, specs) -> None:
+        for spec in specs:
+            self.spawn(spec)
+
+    def spawn(self, spec: WorkerSpec) -> WorkerHandle:
+        handle = self._launch(spec)
+        self._await_hello(handle)
+        self.workers[spec.group] = handle
+        return handle
+
+    def restart(self, group: str, spec: WorkerSpec) -> WorkerHandle:
+        """Bring a (presumed dead) worker back; blocks until its Hello
+        arrives so the caller knows exactly which round it rejoins."""
+        old = self.workers.get(group)
+        spec.incarnation = (old.incarnation + 1) if old else 0
+        return self.spawn(spec)
+
+    @abc.abstractmethod
+    def _launch(self, spec: WorkerSpec) -> WorkerHandle:
+        """Start the worker loop and return its handle (pre-handshake)."""
+
+    # -- fault injection ------------------------------------------------
+    @abc.abstractmethod
+    def kill(self, group: str) -> None:
+        """Hard-stop a worker. The coordinator observes genuine channel
+        silence/EOF — no failure message is synthesized."""
+
+    def suspend(self, group: str) -> None:
+        raise NotImplementedError(
+            f"{self.name} manager cannot suspend workers")
+
+    def resume(self, group: str) -> None:
+        raise NotImplementedError(
+            f"{self.name} manager cannot resume workers")
+
+    # -- bookkeeping ----------------------------------------------------
+    def live(self) -> Dict[str, WorkerHandle]:
+        return {g: h for g, h in self.workers.items() if h.alive}
+
+    def mark_dead(self, group: str) -> None:
+        h = self.workers.get(group)
+        if h is not None and h.alive:
+            h.alive = False
+            h.channel.close()
+
+    def shutdown(self) -> None:
+        from repro.runtime.messages import Shutdown
+
+        for h in self.live().values():
+            try:
+                h.channel.put(Shutdown())
+            except ChannelClosed:
+                pass
+        self._join_all()
+        for h in self.workers.values():
+            h.channel.close()
+
+    @abc.abstractmethod
+    def _join_all(self) -> None:
+        """Wait (bounded) for workers to exit; force-stop stragglers."""
+
+    # ------------------------------------------------------------------
+    def _await_hello(self, handle: WorkerHandle) -> None:
+        if not handle.channel.poll(self.hello_timeout):
+            raise HandshakeTimeout(handle.spec.group)
+        try:
+            msg = handle.channel.get()
+        except ChannelClosed as e:
+            raise HandshakeTimeout(handle.spec.group) from e
+        if not isinstance(msg, Hello):
+            raise HandshakeTimeout(
+                f"{handle.spec.group}: expected Hello, got {msg.kind}")
+        handle.pid = msg.pid
+        handle.incarnation = msg.incarnation

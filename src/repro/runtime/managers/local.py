@@ -1,0 +1,43 @@
+"""Thread-based execution manager: deterministic CI runs.
+
+Workers are daemon threads running the SAME ``run_worker`` loop as
+process workers, over the same pipe transport. Rendezvous pacing (grant
+-> report) makes rounds fully deterministic — no timeouts fire while
+every worker is live. ``kill`` closes the coordinator-side channel: the
+worker's blocking recv raises EOF and the loop exits, which is the
+closest a thread gets to a crash; for mid-run *silence* (alive but
+mute) use ``WorkerSpec.silence`` windows instead.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.runtime.ipc.pipe import pipe_pair
+from repro.runtime.managers.base import ExecutionManager, WorkerHandle
+from repro.runtime.worker import WorkerSpec, run_worker
+
+
+class LocalManager(ExecutionManager):
+    name = "local"
+
+    def __init__(self, hello_timeout: float = 30.0) -> None:
+        super().__init__(hello_timeout)
+        self._threads = {}
+
+    def _launch(self, spec: WorkerSpec) -> WorkerHandle:
+        coord_end, worker_end = pipe_pair()
+        t = threading.Thread(target=run_worker, args=(spec, worker_end),
+                             name=f"stannis-{spec.group}", daemon=True)
+        t.start()
+        self._threads[spec.group] = t
+        return WorkerHandle(spec, coord_end)
+
+    def kill(self, group: str) -> None:
+        self.mark_dead(group)                    # closes channel -> EOF
+        t = self._threads.get(group)
+        if t is not None:
+            t.join(timeout=5.0)
+
+    def _join_all(self) -> None:
+        for t in self._threads.values():
+            t.join(timeout=5.0)

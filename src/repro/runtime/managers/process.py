@@ -1,0 +1,70 @@
+"""Process-based execution manager: real workers, real faults.
+
+Each node group runs in its own spawn-context process (spawn, not fork:
+workers may initialize JAX, which must not inherit a forked runtime).
+Specs travel as wire primitives and the transport Connection is
+inherited through ``Process(args=...)`` — nothing closure-shaped
+crosses the boundary.
+
+Fault injection is the real thing:
+  * ``kill``    — SIGKILL + join. The coordinator sees channel EOF and,
+                  through bus silence, the liveness mask-out path.
+  * ``suspend`` — SIGSTOP. The channel stays open but goes silent: the
+                  exact failure mode of a wedged node, which only the
+                  silence-derived liveness path can detect.
+  * ``resume``  — SIGCONT. The worker drains its grant backlog (stale
+                  reports are discarded by the event loop) and rejoins
+                  at its knee.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import signal
+
+from repro.runtime.ipc.pipe import PipeChannel
+from repro.runtime.managers.base import ExecutionManager, WorkerHandle
+from repro.runtime.worker import WorkerSpec, worker_entry
+
+
+class ProcessManager(ExecutionManager):
+    name = "process"
+
+    def __init__(self, hello_timeout: float = 120.0) -> None:
+        super().__init__(hello_timeout)
+        self._ctx = multiprocessing.get_context("spawn")
+        self._procs = {}
+
+    def _launch(self, spec: WorkerSpec) -> WorkerHandle:
+        coord_conn, worker_conn = self._ctx.Pipe()
+        proc = self._ctx.Process(target=worker_entry,
+                                 args=(spec.to_wire(), worker_conn),
+                                 name=f"stannis-{spec.group}", daemon=True)
+        proc.start()
+        worker_conn.close()                      # child's end only
+        self._procs[spec.group] = proc
+        return WorkerHandle(spec, PipeChannel(coord_conn))
+
+    def kill(self, group: str) -> None:
+        proc = self._procs.get(group)
+        if proc is not None and proc.is_alive():
+            proc.kill()
+            proc.join(timeout=10.0)
+        self.mark_dead(group)
+
+    def suspend(self, group: str) -> None:
+        proc = self._procs.get(group)
+        if proc is not None and proc.pid and proc.is_alive():
+            os.kill(proc.pid, signal.SIGSTOP)
+
+    def resume(self, group: str) -> None:
+        proc = self._procs.get(group)
+        if proc is not None and proc.pid and proc.is_alive():
+            os.kill(proc.pid, signal.SIGCONT)
+
+    def _join_all(self) -> None:
+        for group, proc in self._procs.items():
+            proc.join(timeout=10.0)
+            if proc.is_alive():                  # wedged: force-stop
+                proc.kill()
+                proc.join(timeout=5.0)

@@ -1,0 +1,148 @@
+"""Typed wire protocol for the Stannis runtime (DESIGN.md §10).
+
+Every coordinator<->worker exchange is one of the dataclasses below,
+serialized as a ``(kind, field-dict)`` tuple of primitives. No closures,
+lambdas or live objects ever cross a process boundary — a spawn-context
+worker (which shares no memory with the coordinator) deserializes the
+same bytes a thread worker does, and a future socket transport could
+json-encode them unchanged.
+
+The protocol (one synchronous round):
+
+  worker     -> coordinator   Hello          once, on (re)join
+  coordinator -> worker       StepGrant      paces the round (logical clock)
+  worker     -> coordinator   StepReportMsg  one per granted round
+  coordinator -> worker       Retune         broadcast after a plan change
+  coordinator -> worker       CheckpointRequest
+  worker     -> coordinator   CheckpointAck
+  coordinator -> worker       Shutdown
+  worker     -> coordinator   Goodbye        best-effort, before exit
+
+A killed or suspended worker simply stops producing ``StepReportMsg`` —
+there is no failure message type. Liveness is *derived* from that
+silence by the control plane, exactly as on the simulator's bus.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, Optional, Tuple, Type
+
+_REGISTRY: Dict[str, Type["Message"]] = {}
+
+WireMessage = Tuple[str, Dict]
+
+
+def register(cls: Type["Message"]) -> Type["Message"]:
+    _REGISTRY[cls.kind] = cls
+    return cls
+
+
+@dataclasses.dataclass
+class Message:
+    """Base wire message. Subclasses set a unique ``kind`` ClassVar."""
+
+    kind: ClassVar[str] = "base"
+
+    def to_wire(self) -> WireMessage:
+        return (self.kind, dataclasses.asdict(self))
+
+    @staticmethod
+    def from_wire(wire: WireMessage) -> "Message":
+        kind, fields = wire
+        return _REGISTRY[kind](**fields)
+
+
+@register
+@dataclasses.dataclass
+class Hello(Message):
+    """Worker announces itself (join / rejoin). ``incarnation`` counts
+    restarts so the coordinator can tell a rejoined worker from a stale
+    late message of its previous life."""
+
+    kind: ClassVar[str] = "hello"
+    group: str
+    pid: int
+    batch_size: int
+    incarnation: int = 0
+
+
+@register
+@dataclasses.dataclass
+class StepGrant(Message):
+    """Coordinator paces one synchronous round. ``step`` is the
+    coordinator's logical clock — workers stamp their report with it, so
+    interference windows and liveness arithmetic align across the whole
+    cluster without wall-clock agreement."""
+
+    kind: ClassVar[str] = "grant"
+    step: int
+
+
+@register
+@dataclasses.dataclass
+class StepReportMsg(Message):
+    """One group's measurement for one granted round (the wire form of
+    :class:`repro.core.control.telemetry.StepReport`). ``batch_size`` is
+    the batch the worker ACTUALLY ran — the coordinator uses it to
+    measure retune propagation lag. ``wall_dt`` is the real measured
+    step time when the worker executes a jitted step."""
+
+    kind: ClassVar[str] = "report"
+    step: int
+    group: str
+    speed: float
+    cpu_util: Optional[float] = None
+    power_w: Optional[float] = None
+    batch_size: int = 0
+    wall_dt: Optional[float] = None
+    loss: Optional[float] = None
+
+
+@register
+@dataclasses.dataclass
+class Retune(Message):
+    """Plan change pushed to every live worker: the full new per-group
+    batch map (workers pick their own entry and flip their row mask —
+    no recompilation, DESIGN.md §2)."""
+
+    kind: ClassVar[str] = "retune"
+    step: int
+    batch_sizes: Dict[str, int]
+    group: str = ""                      # group that triggered the change
+    reason: str = ""
+
+
+@register
+@dataclasses.dataclass
+class CheckpointRequest(Message):
+    kind: ClassVar[str] = "ckpt_req"
+    step: int
+
+
+@register
+@dataclasses.dataclass
+class CheckpointAck(Message):
+    """Worker-side state summary. ``n_compiles`` proves the no-recompile
+    retune invariant end-to-end (it must stay at 1 across retunes)."""
+
+    kind: ClassVar[str] = "ckpt_ack"
+    step: int
+    group: str
+    worker_step: int
+    batch_size: int
+    n_compiles: int = 0
+
+
+@register
+@dataclasses.dataclass
+class Shutdown(Message):
+    kind: ClassVar[str] = "shutdown"
+    reason: str = "done"
+
+
+@register
+@dataclasses.dataclass
+class Goodbye(Message):
+    kind: ClassVar[str] = "goodbye"
+    group: str
+    worker_step: int

@@ -1,0 +1,118 @@
+"""Sim/runtime trace-parity harness (DESIGN.md §10).
+
+``ClusterSim`` and the multi-process runtime consume the SAME scenario
+description (the simulator's ``Interference``/``Dropout`` dataclasses)
+and drive the SAME ``ControlPlane``; this module runs a scenario
+through both and hands back the two event streams for comparison.
+
+Parity claims (asserted in tests/test_runtime*.py and reported by
+``benchmarks/runtime_bench.py``):
+
+  * the Fig. 6 escalating-interference scenario produces the paper's
+    exact 180 -> 140 -> 100 retune sequence through the simulator AND
+    through real worker processes;
+  * a worker kill/restart cycle through ``ProcessManager`` produces the
+    same failure -> recover event pair (same steps, same batch sizes)
+    as the simulator's ``Dropout`` path — liveness derived from genuine
+    IPC silence instead of modeled silence.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.control import ControlPlane, SpeedDeclinePolicy
+from repro.core.simulator import (ClusterSim, Dropout,
+                                  fig6_escalating_interference,
+                                  stannis_3node_plan)
+from repro.runtime.eventloop import (EventLoop, FaultAction, RuntimeResult,
+                                     specs_from_plan)
+from repro.runtime.managers import MANAGERS
+
+EventTuple = Tuple[int, str, int, int, str]
+
+
+def _event_tuples(cp: ControlPlane) -> List[EventTuple]:
+    return [(e.step, e.group, e.old_batch, e.new_batch, e.reason)
+            for e in cp.events]
+
+
+def run_sim(interferences: Sequence = (), dropouts: Sequence = (),
+            steps: int = 45,
+            liveness_timeout: Optional[int] = None) -> List[EventTuple]:
+    """The scenario through the discrete-step simulator."""
+    plan = stannis_3node_plan()
+    cp = ControlPlane(plan, [SpeedDeclinePolicy()],
+                      liveness_timeout=liveness_timeout)
+    ClusterSim(plan, list(interferences), control_plane=cp,
+               dropouts=list(dropouts)).run(steps)
+    return _event_tuples(cp)
+
+
+def run_runtime(interferences: Sequence = (), dropouts: Sequence = (),
+                steps: int = 45, manager: str = "local",
+                liveness_timeout: Optional[int] = None,
+                faults: Sequence[FaultAction] = (),
+                round_timeout: float = 1.0,
+                train: Optional[dict] = None
+                ) -> Tuple[RuntimeResult, List[EventTuple]]:
+    """The scenario through live workers. ``dropouts`` become worker-side
+    silence windows (deterministic everywhere, threads included);
+    ``faults`` instead injects REAL kills/suspends via the manager."""
+    plan = stannis_3node_plan()
+    cp = ControlPlane(plan, [SpeedDeclinePolicy()],
+                      liveness_timeout=liveness_timeout)
+    specs = specs_from_plan(plan, interferences, dropouts, train=train)
+    mgr = MANAGERS[manager]()
+    loop = EventLoop(cp, mgr, round_timeout=round_timeout)
+    try:
+        # start() inside the try: a handshake failure on worker N must
+        # still tear down workers 0..N-1
+        mgr.start(specs)
+        result = loop.run(steps, faults=faults)
+    finally:
+        loop.shutdown()
+    return result, result.event_tuples()
+
+
+# -- canned parity scenarios -------------------------------------------------
+
+
+def fig6_parity(manager: str = "local", steps: int = 45,
+                train: Optional[dict] = None) -> dict:
+    """Escalating Gzip interference: the paper's 180 -> 140 -> 100."""
+    sim_events = run_sim(fig6_escalating_interference(), steps=steps)
+    result, rt_events = run_runtime(fig6_escalating_interference(),
+                                    steps=steps, manager=manager,
+                                    train=train)
+    return {"sim": sim_events, "runtime": rt_events,
+            "match": sim_events == rt_events, "result": result}
+
+
+def dropout_parity(manager: str = "local", fail: int = 5, rejoin: int = 20,
+                   steps: int = 40, fault_mode: str = "silence",
+                   group: str = "xeon1", round_timeout: float = 0.25) -> dict:
+    """Failure -> mask-out -> rejoin, sim Dropout vs a live fault.
+
+    fault_mode: "silence" (worker alive but mute — deterministic on any
+    manager), "kill" (SIGKILL + restart; real process death), or
+    "suspend" (SIGSTOP + SIGCONT; a wedged-but-running node).
+    """
+    sim_events = run_sim(dropouts=[Dropout(group, fail, rejoin)],
+                         steps=steps, liveness_timeout=3)
+    if fault_mode == "silence":
+        dropouts, faults = [Dropout(group, fail, rejoin)], []
+    elif fault_mode == "kill":
+        dropouts = []
+        faults = [FaultAction(fail, "kill", group),
+                  FaultAction(rejoin, "restart", group)]
+    elif fault_mode == "suspend":
+        dropouts = []
+        faults = [FaultAction(fail, "suspend", group),
+                  FaultAction(rejoin, "resume", group)]
+    else:
+        raise ValueError(fault_mode)
+    result, rt_events = run_runtime(
+        dropouts=dropouts, steps=steps, manager=manager,
+        liveness_timeout=3, faults=faults, round_timeout=round_timeout)
+    return {"sim": sim_events, "runtime": rt_events,
+            "match": sim_events == rt_events, "result": result}

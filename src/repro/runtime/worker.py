@@ -1,0 +1,239 @@
+"""Stannis runtime worker: one node group's training loop.
+
+The SAME loop body serves both execution managers — a LocalManager
+thread and a ProcessManager spawn-context process run ``run_worker``
+unchanged; only the transport and the fault surface differ. The worker:
+
+  * announces itself with ``Hello`` (join / rejoin);
+  * on each ``StepGrant`` optionally runs ONE real jitted train step
+    (``hetero_dp.make_train_step`` at the group's live batch size inside
+    its fixed-capacity row mask) and reports its speed;
+  * applies ``Retune`` messages by flipping row-mask contents only —
+    the compiled step is untouched (``CheckpointAck.n_compiles`` proves
+    it);
+  * carries its own interference injector (:class:`SpeedGovernor`) —
+    the Gzip core-stealing scenarios of the paper, applied worker-side
+    so the coordinator observes a genuinely degraded report stream.
+
+Module import stays JAX-free: spawn-context workers that only report
+(trace-parity runs) never pay the jax import, and ``TrainExecutor``
+imports it lazily.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.interference import (govern_speed, window_capacity,
+                                     window_speed_cap)
+from repro.core.speed_model import SpeedModel
+from repro.runtime.ipc import Channel, ChannelClosed
+from repro.runtime.messages import (CheckpointAck, CheckpointRequest, Goodbye,
+                                    Hello, Message, Retune, Shutdown,
+                                    StepGrant, StepReportMsg)
+
+
+@dataclasses.dataclass
+class InterferenceSpec:
+    """Worker-side interference window, mirroring
+    ``core.simulator.Interference`` field-for-field so the governed
+    report stream is bit-identical to the simulator's."""
+
+    start_step: int
+    end_step: int
+    capacity: float = 1.0
+    speed_cap: Optional[float] = None
+
+
+@dataclasses.dataclass
+class WorkerSpec:
+    """Everything a worker needs, as primitives (spawn-safe).
+
+    ``silence`` windows make the worker skip reporting (alive but mute)
+    — the deterministic fault injector for thread workers, which cannot
+    be SIGKILLed. ``train`` enables the real jitted step:
+    ``{"arch": name, "seq_len": int, "reduced": bool}``.
+    """
+
+    group: str
+    batch_size: int
+    capacity: int
+    count: int = 1
+    speed_batches: List[float] = dataclasses.field(default_factory=list)
+    speed_speeds: List[float] = dataclasses.field(default_factory=list)
+    interference: List[InterferenceSpec] = dataclasses.field(
+        default_factory=list)
+    silence: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    train: Optional[Dict] = None
+    seed: int = 0
+    incarnation: int = 0
+
+    def to_wire(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_wire(cls, wire: Dict) -> "WorkerSpec":
+        wire = dict(wire)
+        wire["interference"] = [InterferenceSpec(**iv)
+                                for iv in wire.get("interference", [])]
+        wire["silence"] = [tuple(w) for w in wire.get("silence", [])]
+        return cls(**wire)
+
+    def speed_model(self) -> SpeedModel:
+        return SpeedModel(np.asarray(self.speed_batches, float),
+                          np.asarray(self.speed_speeds, float))
+
+
+class SpeedGovernor:
+    """Worker-side interference injector: the SAME window math as
+    ``ClusterSim`` (one shared copy in ``core.interference`` — parity
+    depends on it), evaluated against the coordinator's logical clock
+    (the grant step)."""
+
+    def __init__(self, windows: List[InterferenceSpec],
+                 silence: List[Tuple[int, int]]) -> None:
+        self.windows = windows
+        self.silence = silence
+
+    def capacity(self, step: int) -> float:
+        return window_capacity(self.windows, step)
+
+    def speed_cap(self, step: int) -> Optional[float]:
+        return window_speed_cap(self.windows, step)
+
+    def silenced(self, step: int) -> bool:
+        return any(s <= step < e for s, e in self.silence)
+
+    def govern(self, raw_speed: float, step: int) -> float:
+        return govern_speed(raw_speed, self.windows, step)
+
+
+class TrainExecutor:
+    """Real training substrate: a reduced-config model + jitted
+    ``make_train_step``, run at the group's live batch size inside its
+    capacity-row mask. Built lazily so report-only workers never import
+    jax."""
+
+    def __init__(self, spec: WorkerSpec) -> None:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.configs.base import get_arch, reduced_config
+        from repro.core import hetero_dp
+        from repro.models.model_factory import aux_inputs, build_model
+        from repro.optim.optimizer import AdamW, OptConfig
+
+        cfg = get_arch(spec.train["arch"])
+        if spec.train.get("reduced", True):
+            cfg = reduced_config(cfg)
+        self.seq_len = int(spec.train.get("seq_len", 32))
+        self.capacity = max(spec.capacity, 1)
+        self.model = build_model(cfg)
+        self.opt = AdamW(OptConfig())
+        self.params = self.model.init(jax.random.PRNGKey(spec.seed))
+        self.opt_state = self.opt.init(self.params)
+        self.step_fn = jax.jit(hetero_dp.make_train_step(self.model, self.opt))
+        rng = np.random.default_rng(spec.seed)
+        toks = rng.integers(0, cfg.vocab_size,
+                            (self.capacity, self.seq_len + 1))
+        self._batch = {
+            "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+            "targets": jnp.asarray(toks[:, 1:], jnp.int32),
+        }
+        self._batch.update(aux_inputs(cfg, self.capacity, self.seq_len,
+                                      jnp.float32, concrete=True))
+        self._jnp = jnp
+        self._jax = jax
+
+    def run_step(self, batch_size: int) -> Tuple[float, float]:
+        """One jitted step with the first ``batch_size`` capacity rows
+        live. Returns (loss, wall_dt)."""
+        jnp = self._jnp
+        mask = np.zeros((self.capacity,), np.float32)
+        mask[:min(batch_size, self.capacity)] = 1.0
+        batch = dict(self._batch, sample_mask=jnp.asarray(mask))
+        t0 = time.perf_counter()
+        self.params, self.opt_state, metrics = self.step_fn(
+            self.params, self.opt_state, batch)
+        loss = float(metrics["loss"])            # blocks
+        return loss, max(time.perf_counter() - t0, 1e-9)
+
+    @property
+    def n_compiles(self) -> int:
+        return int(self.step_fn._cache_size())
+
+
+def run_worker(spec: WorkerSpec, chan: Channel) -> None:
+    """The worker loop (thread and process entry point share it)."""
+    gov = SpeedGovernor(spec.interference, spec.silence)
+    sm = spec.speed_model()
+    executor = TrainExecutor(spec) if spec.train else None
+    worker_step = 0
+    try:
+        chan.put(Hello(spec.group, os.getpid(), spec.batch_size,
+                       spec.incarnation))
+        while True:
+            msg = chan.get()
+            if isinstance(msg, Shutdown):
+                chan.put(Goodbye(spec.group, worker_step))
+                break
+            if isinstance(msg, Retune):
+                spec.batch_size = int(
+                    msg.batch_sizes.get(spec.group, spec.batch_size))
+                continue
+            if isinstance(msg, CheckpointRequest):
+                chan.put(CheckpointAck(
+                    msg.step, spec.group, worker_step, spec.batch_size,
+                    executor.n_compiles if executor else 0))
+                continue
+            if isinstance(msg, StepGrant):
+                report = _one_step(spec, gov, sm, executor, msg.step)
+                worker_step += 1
+                if report is not None:
+                    chan.put(report)
+    except ChannelClosed:
+        pass                                     # coordinator gone: exit
+    finally:
+        chan.close()
+
+
+def _one_step(spec: WorkerSpec, gov: SpeedGovernor, sm: SpeedModel,
+              executor: Optional[TrainExecutor],
+              step: int) -> Optional[StepReportMsg]:
+    """Execute (maybe) and report (maybe) one granted round.
+
+    Report semantics mirror the simulator exactly (same float ops, same
+    order) so a governed runtime stream is bit-identical to a
+    ``ClusterSim`` stream and trace parity holds:
+
+      b == 0   -> benchmark knee speed, cpu_util 0 (idle-but-alive);
+      b > 0    -> speed(b) × capacity, min absolute cap; cpu_util is the
+                  capacity fraction. With a TrainExecutor the raw speed
+                  is the real measured b/dt instead of the curve.
+    """
+    loss = wall_dt = None
+    if executor is not None and spec.batch_size > 0:
+        loss, wall_dt = executor.run_step(spec.batch_size)
+    if gov.silenced(step):
+        return None
+    if spec.batch_size == 0:
+        return StepReportMsg(step, spec.group, sm.speed(sm.knee()),
+                             cpu_util=0.0, batch_size=0)
+    raw = (spec.batch_size / wall_dt if wall_dt is not None
+           else sm.speed(spec.batch_size))
+    return StepReportMsg(step, spec.group, gov.govern(raw, step),
+                         cpu_util=gov.capacity(step),
+                         batch_size=spec.batch_size,
+                         wall_dt=wall_dt, loss=loss)
+
+
+def worker_entry(spec_wire: Dict, connection) -> None:
+    """Spawn-context process entry point: rebuild the spec from wire
+    primitives and wrap the inherited Connection."""
+    from repro.runtime.ipc.pipe import PipeChannel
+
+    run_worker(WorkerSpec.from_wire(spec_wire), PipeChannel(connection))

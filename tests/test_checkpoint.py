@@ -97,3 +97,39 @@ class TestGC:
         for s in range(3):
             ck.save(s, t)
         assert ck.list_steps() == [0, 1, 2]
+
+
+class TestTrainerResumeMaskedGroup:
+    """resume() must restore the plan with min_batch=0 (matching
+    ControlPlane._apply): a checkpoint taken while a group was masked
+    out (b_g = 0) must NOT resurrect it at the allocator's minimum."""
+
+    def test_masked_group_stays_failed_after_resume(self, tmp_path):
+        from repro.configs.base import get_arch, reduced_config
+        from repro.core.allocator import solve
+        from repro.core.speed_model import SpeedModel
+        from repro.launch.train import HeteroTrainer, TrainerConfig
+
+        sm = SpeedModel(np.array([1.0, 2, 4, 8]),
+                        np.array([10.0, 18, 28, 30]))
+        arch = reduced_config(get_arch("deepseek-7b"))
+        cfg = TrainerConfig(seq_len=32, dataset_size=4096, steps=4,
+                            log_every=0, ckpt_dir=str(tmp_path))
+
+        t = HeteroTrainer(arch, solve({"a": (1, sm), "b": (1, sm)}, 4096),
+                          cfg)
+        t.run(2)
+        t.control_plane.mark_failed(t.step, "b")
+        t.pipeline.set_plan(t.control_plane.plan)
+        assert t.control_plane.plan.batch_sizes()["b"] == 0
+        t.save()
+        t.ckpt.wait()
+
+        fresh = HeteroTrainer(arch, solve({"a": (1, sm), "b": (1, sm)},
+                                          4096), cfg)
+        assert fresh.resume()
+        assert fresh.step == t.step
+        # the failed group stays failed; the healthy one is untouched
+        assert fresh.control_plane.plan.batch_sizes()["b"] == 0
+        assert fresh.control_plane.plan.batch_sizes()["a"] == \
+            t.control_plane.plan.batch_sizes()["a"]

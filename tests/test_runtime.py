@@ -1,0 +1,239 @@
+"""Stannis runtime: wire protocol, IPC channels, worker governor, and
+sim/runtime trace parity through the thread-worker manager.
+
+Acceptance anchors (ISSUE 2):
+  * the Fig. 6 escalating-interference scenario through the runtime
+    yields the EXACT retune sequence asserted for ClusterSim in
+    tests/test_control_plane.py (180 -> 140 -> 100);
+  * a worker kill/restart cycle produces the same failure -> recover
+    event pair (same steps, same batches) as the simulator's Dropout
+    path — liveness derived from real IPC silence;
+  * retunes propagate to workers in one round and the --interfere
+    grammar covers windows, absolute caps and dropouts.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.simulator import Dropout, Interference
+from repro.launch.train import events_report_fn, parse_interfere
+from repro.runtime.ipc import ChannelClosed, pipe_pair, queue_pair
+from repro.runtime.messages import (CheckpointAck, Hello, Message, Retune,
+                                    Shutdown, StepGrant, StepReportMsg)
+from repro.runtime.parity import (dropout_parity, fig6_parity, run_runtime,
+                                  run_sim)
+from repro.runtime.worker import InterferenceSpec, SpeedGovernor, WorkerSpec
+
+
+# ---------------------------------------------------------------------------
+# wire protocol
+# ---------------------------------------------------------------------------
+
+
+class TestMessages:
+    @pytest.mark.parametrize("msg", [
+        Hello("xeon0", 1234, 180, incarnation=2),
+        StepGrant(7),
+        StepReportMsg(7, "xeon0", 31.13, cpu_util=0.8, batch_size=180,
+                      wall_dt=0.5, loss=3.2),
+        Retune(9, {"xeon0": 140, "xeon1": 180}, group="xeon0",
+               reason="decline"),
+        CheckpointAck(10, "xeon0", 11, 140, n_compiles=1),
+        Shutdown("done"),
+    ])
+    def test_wire_roundtrip(self, msg):
+        wire = msg.to_wire()
+        kind, fields = wire
+        assert isinstance(kind, str)
+        # wire payload is primitives only — spawn-safe, no closures
+        assert all(not callable(v) for v in fields.values())
+        back = Message.from_wire(wire)
+        assert back == msg and type(back) is type(msg)
+
+    def test_worker_spec_roundtrip(self):
+        spec = WorkerSpec(
+            group="xeon0", batch_size=180, capacity=180,
+            speed_batches=[10.0, 90.0, 180.0], speed_speeds=[12.0, 28.0, 31.0],
+            interference=[InterferenceSpec(5, 25, speed_cap=24.3)],
+            silence=[(3, 6)], train={"arch": "deepseek-7b", "seq_len": 32})
+        back = WorkerSpec.from_wire(spec.to_wire())
+        assert back == spec
+        assert back.speed_model().knee() == 180
+
+
+# ---------------------------------------------------------------------------
+# ipc channels
+# ---------------------------------------------------------------------------
+
+
+class TestChannels:
+    @pytest.mark.parametrize("pair", [pipe_pair, queue_pair])
+    def test_roundtrip_and_poll(self, pair):
+        a, b = pair()
+        assert not a.poll(0.0)
+        b.put(StepGrant(3))
+        assert a.poll(1.0)
+        assert a.get() == StepGrant(3)
+        assert not a.poll(0.0)
+
+    def test_pipe_eof_raises_channel_closed(self):
+        a, b = pipe_pair()
+        b.close()
+        assert a.poll(1.0)                       # EOF is readable
+        with pytest.raises(ChannelClosed):
+            a.get()
+        with pytest.raises(ChannelClosed):
+            a.put(StepGrant(0))
+
+
+# ---------------------------------------------------------------------------
+# worker-side interference injector
+# ---------------------------------------------------------------------------
+
+
+class TestSpeedGovernor:
+    def test_capacity_and_abs_cap_windows(self):
+        gov = SpeedGovernor([InterferenceSpec(5, 10, capacity=0.5),
+                             InterferenceSpec(8, 20, speed_cap=4.0)], [])
+        assert gov.govern(20.0, 0) == 20.0       # healthy
+        assert gov.govern(20.0, 5) == 10.0       # capacity scale
+        assert gov.govern(20.0, 8) == 4.0        # abs cap dominates
+        assert gov.govern(20.0, 15) == 4.0
+        assert gov.govern(20.0, 20) == 20.0      # windows end
+
+    def test_silence_windows(self):
+        gov = SpeedGovernor([], [(3, 6)])
+        assert not gov.silenced(2)
+        assert gov.silenced(3) and gov.silenced(5)
+        assert not gov.silenced(6)
+
+
+# ---------------------------------------------------------------------------
+# trace parity through the thread runtime (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+
+class TestTraceParity:
+    def test_fig6_exact_sequence_through_runtime(self):
+        p = fig6_parity(manager="local")
+        assert [(g, ob, nb, r) for (_, g, ob, nb, r) in p["runtime"]] == [
+            ("xeon0", 180, 140, "decline"),
+            ("xeon0", 140, 100, "decline"),
+        ]
+        assert p["match"], (p["sim"], p["runtime"])
+
+    def test_retune_propagates_in_one_round(self):
+        p = fig6_parity(manager="local")
+        assert p["result"].retune_lags == [1, 1]
+
+    def test_silence_dropout_matches_sim(self):
+        d = dropout_parity(manager="local", fault_mode="silence")
+        assert d["match"], (d["sim"], d["runtime"])
+        assert [(e[1], e[4]) for e in d["runtime"]] == [
+            ("xeon1", "failure"), ("xeon1", "recover")]
+
+    def test_kill_restart_matches_sim_dropout(self):
+        """Channel-close kill -> genuine silence -> mask-out at the same
+        step the sim's Dropout produces; restart -> knee rejoin."""
+        d = dropout_parity(manager="local", fault_mode="kill")
+        assert d["match"], (d["sim"], d["runtime"])
+        fail, recover = d["runtime"]
+        assert fail == (7, "xeon1", 180, 0, "failure")
+        assert recover == (20, "xeon1", 0, 180, "recover")
+
+    def test_healthy_cluster_no_events_and_full_reports(self):
+        result, events = run_runtime(steps=20, manager="local")
+        assert events == []
+        assert result.reports_total == 20 * 3    # every worker, every round
+        assert all(s.n_reports == 3 for s in result.round_stats)
+
+    def test_final_round_checkpoint_acks_are_drained(self):
+        """A CheckpointRequest broadcast on the LAST round has no later
+        _collect pass — run() must drain the acks before returning."""
+        from repro.core.control import ControlPlane, SpeedDeclinePolicy
+        from repro.core.simulator import stannis_3node_plan
+        from repro.runtime import EventLoop, LocalManager, specs_from_plan
+
+        plan = stannis_3node_plan()
+        cp = ControlPlane(plan, [SpeedDeclinePolicy()])
+        manager = LocalManager()
+        loop = EventLoop(cp, manager, round_timeout=5.0)
+        try:
+            manager.start(specs_from_plan(plan))
+            res = loop.run(6, checkpoint_every=6)   # request fires at step 5
+        finally:
+            loop.shutdown()
+        assert {a.group for a in res.checkpoint_acks} == \
+            {"xeon0", "xeon1", "xeon2"}
+        assert all(a.step == 5 for a in res.checkpoint_acks)
+
+
+# ---------------------------------------------------------------------------
+# --interfere grammar (satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestInterfereGrammar:
+    def test_legacy_open_ended_capacity(self):
+        ivs, drops = parse_interfere("csd@20x0.5")
+        assert drops == []
+        assert ivs == [Interference("csd", 20, 10 ** 9, capacity=0.5)]
+
+    def test_window_capacity_abs_cap_and_dropout(self):
+        ivs, drops = parse_interfere(
+            "csd@20-40x0.5,xeon0@5-25v24.3,csd@50-60!")
+        assert ivs == [
+            Interference("csd", 20, 40, capacity=0.5),
+            Interference("xeon0", 5, 25, speed_cap=24.3),
+        ]
+        assert drops == [Dropout("csd", 50, 60)]
+
+    def test_empty_and_bad_specs(self):
+        assert parse_interfere(None) == ([], [])
+        assert parse_interfere("") == ([], [])
+        with pytest.raises(ValueError):
+            parse_interfere("csd@20z0.5")
+        with pytest.raises(ValueError):
+            parse_interfere("csd@x0.5")
+
+    def test_events_report_fn_matches_sim_semantics(self):
+        from repro.core.simulator import stannis_3node_plan
+        plan = stannis_3node_plan()
+        g0 = plan.groups[0]
+        fn = events_report_fn([Interference("xeon0", 5, 10, capacity=0.5),
+                               Interference("xeon0", 8, 12, speed_cap=4.0)],
+                              [Dropout("xeon1", 6, 9)])
+        healthy = fn(0, plan, 0.1)
+        assert set(healthy) == {"xeon0", "xeon1", "xeon2"}
+        r5 = fn(5, plan, 0.1)
+        assert r5["xeon0"]["speed"] == pytest.approx(
+            0.5 * g0.speed_model.speed(g0.batch_size))
+        assert r5["xeon0"]["cpu_util"] == 0.5
+        r8 = fn(8, plan, 0.1)
+        assert r8["xeon0"]["speed"] == 4.0       # abs cap dominates
+        assert "xeon1" not in fn(6, plan, 0.1)   # dropped out
+        assert "xeon1" in fn(9, plan, 0.1)
+
+    def test_none_when_no_events(self):
+        assert events_report_fn([], []) is None
+
+
+# ---------------------------------------------------------------------------
+# sim-side sanity: the parity baselines are the known sequences
+# ---------------------------------------------------------------------------
+
+
+class TestSimBaselines:
+    def test_fig6_sim_baseline(self):
+        events = run_sim(
+            __import__("repro.core.simulator",
+                       fromlist=["fig6_escalating_interference"]
+                       ).fig6_escalating_interference())
+        assert [(ob, nb) for (_, _, ob, nb, _) in events] == \
+            [(180, 140), (140, 100)]
+
+    def test_dropout_sim_baseline(self):
+        events = run_sim(dropouts=[Dropout("xeon1", 5, 20)],
+                         steps=40, liveness_timeout=3)
+        assert events == [(7, "xeon1", 180, 0, "failure"),
+                          (20, "xeon1", 0, 180, "recover")]
