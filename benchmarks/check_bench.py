@@ -1,0 +1,113 @@
+"""CI benchmark regression gate (ROADMAP: benchmark trajectory tracking).
+
+Parses the ``BENCH_runtime.json`` artifact that ``benchmarks/run.py``
+writes and fails (exit 1) when the recorded numbers regress:
+
+  * a metric listed under ``floors`` fell below its stored floor
+    (e.g. ``runtime_rounds.reports_per_s`` — protocol throughput, or
+    ``runtime_async_staleness.derived`` — the async-over-sync speedup);
+  * a metric listed under ``exact`` drifted from its stored value
+    (e.g. ``fig6_sequence.derived`` — the paper's final 100 batch, or
+    ``runtime_fig6_parity.derived`` — sim/runtime trace parity);
+  * any gated entry is missing from the JSON or recorded as errored.
+
+Metric addresses are ``<entry name>.<metric>``: ``derived`` reads the
+entry's derived value, anything else looks the metric up in the entry's
+``rows`` (the ``{"metric": ..., "value": ...}`` shape). Floors live in
+``benchmarks/bench_floors.json`` next to this module — deliberately
+conservative (CI runners are slower and noisier than dev machines):
+they gate regressions an order of magnitude out, not run-to-run jitter.
+
+Usage (the CI step):
+    python -m benchmarks.check_bench BENCH_runtime.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+DEFAULT_FLOORS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "bench_floors.json")
+
+
+def _entry(bench: Dict, name: str) -> Optional[Dict]:
+    return next((e for e in bench.get("entries", ())
+                 if e.get("name") == name), None)
+
+
+def _metric(entry: Dict, metric: str):
+    if metric == "derived":
+        return entry.get("derived")
+    for row in entry.get("rows") or ():
+        if isinstance(row, dict) and row.get("metric") == metric:
+            return row.get("value")
+    return None
+
+
+def _resolve(bench: Dict, address: str, problems: List[str]):
+    """``entry.metric`` -> value, appending a problem when the entry is
+    absent, errored, or lacks the metric."""
+    name, _, metric = address.partition(".")
+    entry = _entry(bench, name)
+    if entry is None:
+        problems.append(f"{address}: benchmark entry {name!r} missing "
+                        f"from the JSON")
+        return None
+    if not entry.get("ok", False):
+        problems.append(f"{address}: benchmark entry {name!r} errored: "
+                        f"{entry.get('error')}")
+        return None
+    value = _metric(entry, metric or "derived")
+    if value is None:
+        problems.append(f"{address}: metric {metric!r} not recorded")
+    return value
+
+
+def check(bench: Dict, floors: Dict) -> List[str]:
+    """Returns the list of regressions (empty = gate passes)."""
+    problems: List[str] = []
+    for address, floor in (floors.get("floors") or {}).items():
+        value = _resolve(bench, address, problems)
+        if value is None:
+            continue
+        if float(value) < float(floor):
+            problems.append(f"{address}: {value} regressed below the "
+                            f"stored floor {floor}")
+    for address, expected in (floors.get("exact") or {}).items():
+        value = _resolve(bench, address, problems)
+        if value is None:
+            continue
+        if float(value) != float(expected):
+            problems.append(f"{address}: {value} != expected {expected} "
+                            f"(parity mismatch)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_json", help="BENCH_runtime.json path")
+    ap.add_argument("--floors", default=DEFAULT_FLOORS,
+                    help="stored floors/expectations JSON")
+    args = ap.parse_args(argv)
+
+    with open(args.bench_json) as f:
+        bench = json.load(f)
+    with open(args.floors) as f:
+        floors = json.load(f)
+
+    problems = check(bench, floors)
+    for p in problems:
+        print(f"REGRESSION: {p}", file=sys.stderr)
+    if not problems:
+        gated = list(floors.get("floors") or {}) + \
+            list(floors.get("exact") or {})
+        print(f"bench gate: {len(gated)} metric(s) within bounds "
+              f"({', '.join(gated)})")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,13 +12,13 @@ from repro.core.control.policies import (DEFAULT_POWER_W, CpuUtilPolicy,
                                          Eq2Trigger, Eq3TablePolicy,
                                          HyperTuneConfig, SpeedDeclinePolicy,
                                          TuningPolicy, attributable_power)
-from repro.core.control.telemetry import (StepReport, TelemetryBus,
-                                          normalize_reports)
+from repro.core.control.telemetry import (StepBuckets, StepReport,
+                                          TelemetryBus, normalize_reports)
 
 __all__ = [
     "ControlPlane", "RetuneEvent", "policy_from_config",
     "DEFAULT_POWER_W", "CpuUtilPolicy", "Decision", "EnergyAwarePolicy",
     "Eq2Trigger", "Eq3TablePolicy", "HyperTuneConfig", "SpeedDeclinePolicy",
     "TuningPolicy", "attributable_power",
-    "StepReport", "TelemetryBus", "normalize_reports",
+    "StepBuckets", "StepReport", "TelemetryBus", "normalize_reports",
 ]

@@ -114,3 +114,55 @@ class TelemetryBus:
 
     def subscribe(self, fn: Callable[[StepReport], None]) -> None:
         self._subscribers.append(fn)
+
+
+class StepBuckets:
+    """Out-of-order report assembly for bounded-staleness pacing.
+
+    Under asynchronous (run-ahead) rounds the coordinator receives
+    reports for several different steps interleaved: a worker with k
+    grants in flight answers them back-to-back while the control plane
+    is still processing an older round. This class buckets arrivals by
+    their *stamped* step so control rounds can still run in order, each
+    on a coherent per-step report set.
+
+    The ``floor`` is the oldest step the consumer still cares about
+    (the control round currently being assembled). Anything below it is
+    stale — e.g. the post-SIGCONT backlog a resumed worker flushes — and
+    is rejected rather than bucketed, mirroring the synchronous loop's
+    ``msg.step != step`` filter. Duplicate (step, group) arrivals are
+    first-wins: a re-delivered report can never clobber the one a
+    control round may already have been decided on.
+    """
+
+    def __init__(self) -> None:
+        self._buckets: Dict[int, Dict[str, object]] = {}
+        self._floor = 0
+
+    @property
+    def floor(self) -> int:
+        return self._floor
+
+    def add(self, step: int, group: str, payload) -> bool:
+        """Bucket one arrival. Returns False when it was stale (below
+        the floor); duplicates are kept first-wins and return True."""
+        if step < self._floor:
+            return False
+        self._buckets.setdefault(step, {}).setdefault(group, payload)
+        return True
+
+    def peek(self, step: int) -> Dict[str, object]:
+        """The (possibly still incomplete) bucket for ``step``."""
+        return self._buckets.get(step, {})
+
+    def pop(self, step: int) -> Dict[str, object]:
+        """Consume ``step``'s bucket and advance the floor past it —
+        later arrivals for it (or anything older) are stale."""
+        out = self._buckets.pop(step, {})
+        self._floor = max(self._floor, step + 1)
+        for s in [s for s in self._buckets if s < self._floor]:
+            del self._buckets[s]
+        return out
+
+    def pending_steps(self) -> List[int]:
+        return sorted(self._buckets)

@@ -142,7 +142,10 @@ class ClusterSim:
                  controller=None,
                  control_plane: Optional[ControlPlane] = None,
                  dropouts: Optional[List[Dropout]] = None,
-                 speed_noise: float = 0.0, seed: int = 0):
+                 speed_noise: float = 0.0, seed: int = 0,
+                 staleness: int = 0):
+        if staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {staleness}")
         self.plan = plan
         self.interferences = interferences or []
         self.dropouts = dropouts or []
@@ -150,6 +153,12 @@ class ClusterSim:
         self.control_plane = control_plane or _as_control_plane(controller)
         self.rng = np.random.default_rng(seed)
         self.speed_noise = speed_noise
+        # bounded-staleness mirror of the async runtime (DESIGN.md §11):
+        # a plan change decided at step s is queued behind the k grants
+        # already in a worker's channel, so it takes effect on the
+        # cluster at step s + 1 + k. k=0 reads cp.plan directly every
+        # step — bit-identical to the historical synchronous model.
+        self.staleness = int(staleness)
         if self.dropouts and self.control_plane is not None and \
                 self.control_plane.liveness_timeout is None:
             # dropouts are only observable through bus silence; a control
@@ -183,8 +192,18 @@ class ClusterSim:
         wall = 0.0
         energy = 0.0
         speeds: List[float] = []
+        # staleness mode: (effective step, plan snapshot) queue; workers
+        # keep running the old batches until a decision propagates
+        pending_plans: List[Tuple[int, BatchPlan]] = []
+        applied_plan = cp.plan if cp else self.plan
         for step in range(steps):
-            plan = cp.plan if cp else self.plan
+            if cp is not None:
+                if self.staleness == 0:
+                    applied_plan = cp.plan
+                else:
+                    while pending_plans and pending_plans[0][0] <= step:
+                        applied_plan = pending_plans.pop(0)[1]
+            plan = applied_plan
             # a dropped-out (crashed) group does no work and draws no
             # attributable power — until liveness masks it out its data
             # rows simply go unprocessed
@@ -218,7 +237,10 @@ class ClusterSim:
                         cp.bus.publish(StepReport(
                             step, g.name, g_speed[g.name],
                             cpu_util=self._capacity(g.name, step)))
-                cp.poll(step)
+                event = cp.poll(step)
+                if self.staleness and event is not None:
+                    pending_plans.append(
+                        (step + 1 + self.staleness, cp.plan))
         events = cp.events if cp else []
         return SimResult(steps, images, wall, energy, speeds, events)
 

@@ -421,9 +421,10 @@ def _run_distributed(args, cfg: TrainerConfig, sm: SpeedModel,
     # mask healthy groups out, so the auto default is generous
     round_timeout = (args.round_timeout if args.round_timeout is not None
                      else (120.0 if train_workers else 5.0))
-    loop = EventLoop(cp, manager, round_timeout=round_timeout)
+    loop = EventLoop(cp, manager, round_timeout=round_timeout,
+                     staleness=args.staleness)
     print(f"runtime={args.runtime} workers={plan.batch_sizes()} "
-          f"train_in_workers={train_workers}")
+          f"train_in_workers={train_workers} staleness={args.staleness}")
     try:
         # start() inside the try: a handshake failure on worker N must
         # still tear down workers 0..N-1
@@ -441,6 +442,9 @@ def _run_distributed(args, cfg: TrainerConfig, sm: SpeedModel,
               f"{e.old_batch}->{e.new_batch} ({e.reason})")
     if res.retune_lags:
         print(f"  retune propagation lag: {res.retune_lags} round(s)")
+    if res.staleness:
+        print(f"  bounded staleness k={res.staleness}: "
+              f"{res.stale_reports} stale report(s) dropped")
     for ack in res.checkpoint_acks[-len(plan.groups):]:
         print(f"  worker {ack.group}: step {ack.worker_step} "
               f"b={ack.batch_size} compiles={ack.n_compiles}")
@@ -463,6 +467,11 @@ def main() -> None:
                     default="inproc",
                     help="inproc: single-process loop; local: thread "
                          "workers; process: real worker processes")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="bounded-staleness bound k for the runtime "
+                         "coordinator: keep up to k rounds of grants in "
+                         "flight per worker (0 = strict synchronous "
+                         "rendezvous, the Fig. 6 parity mode)")
     ap.add_argument("--round-timeout", type=float, default=None,
                     help="coordinator round deadline (s); a silent worker "
                          "costs at most this per round (default: 5, or 120 "
@@ -472,6 +481,14 @@ def main() -> None:
                     help="run real jitted steps inside runtime workers "
                          "(auto: on for --runtime process)")
     args = ap.parse_args()
+    if args.staleness and args.runtime == "inproc":
+        # the inproc loop has no grant pipeline to run ahead on —
+        # silently training synchronously would misreport the mode
+        ap.error("--staleness requires a runtime with a coordinator "
+                 "grant pipeline; use --runtime local or --runtime "
+                 "process")
+    if args.staleness < 0:
+        ap.error("--staleness must be >= 0")
 
     arch = get_arch(args.arch)
     if not args.full_size:

@@ -12,7 +12,8 @@ that execution substrate (DESIGN.md §10):
   eventloop.py  the coordinator, owning the existing ControlPlane
   parity.py     sim/runtime trace-parity harness
 """
-from repro.runtime.eventloop import (EventLoop, FaultAction, RoundStats,
+from repro.runtime.eventloop import (EventLoop, FaultAction,
+                                     RetuneLagTracker, RoundStats,
                                      RuntimeResult, specs_from_plan)
 from repro.runtime.managers import (MANAGERS, ExecutionManager, LocalManager,
                                     ProcessManager)
@@ -23,8 +24,8 @@ from repro.runtime.worker import (InterferenceSpec, SpeedGovernor,
                                   WorkerSpec, run_worker, worker_entry)
 
 __all__ = [
-    "EventLoop", "FaultAction", "RoundStats", "RuntimeResult",
-    "specs_from_plan",
+    "EventLoop", "FaultAction", "RetuneLagTracker", "RoundStats",
+    "RuntimeResult", "specs_from_plan",
     "MANAGERS", "ExecutionManager", "LocalManager", "ProcessManager",
     "CheckpointAck", "CheckpointRequest", "Goodbye", "Hello", "Message",
     "Retune", "Shutdown", "StepGrant", "StepReportMsg",

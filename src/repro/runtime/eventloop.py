@@ -1,38 +1,52 @@
 """The Stannis coordinator: an event loop owning the control plane.
 
-Per synchronous round the loop
+Per coordinator round the loop
 
   1. applies any scheduled fault-injection actions (kill / restart /
      suspend / resume, delegated to the execution manager);
-  2. paces every live worker with a ``StepGrant`` (the coordinator owns
-     the logical clock — workers stamp reports with the granted step);
-  3. collects one ``StepReportMsg`` per granted worker, bounded by
-     ``round_timeout``. A killed worker surfaces as channel EOF, a
-     suspended worker as a timeout — EITHER WAY the bus simply receives
-     nothing, and the existing ControlPlane liveness path masks the
-     group out after ``liveness_timeout`` silent rounds. No failure
-     message type exists anywhere in the protocol.
+  2. paces every live worker with ``StepGrant``s, keeping up to
+     ``staleness`` (k) rounds of grants in flight beyond the round it is
+     collecting — the coordinator owns the logical clock, workers stamp
+     reports with the granted step;
+  3. assembles the round's reports, accepting out-of-order arrivals
+     into per-step buckets (:class:`~repro.core.control.telemetry.
+     StepBuckets`) and waiting — bounded by ``round_timeout`` — until
+     the round's bucket is complete-enough (every worker granted that
+     step and still on the same incarnation has answered). A killed
+     worker surfaces as channel EOF, a suspended worker as a timeout —
+     EITHER WAY the bus simply receives nothing and the existing
+     ControlPlane liveness path masks the group out after
+     ``liveness_timeout`` silent *coordinator rounds* (never granted
+     steps: a run-ahead worker's pre-delivered reports only defer
+     detection by at most k rounds, they cannot suppress it);
   4. publishes the round's reports on the ``TelemetryBus`` and runs one
      control round (rejoin -> policies -> liveness);
   5. broadcasts any plan change as a ``Retune`` message — workers flip
      their row mask, nothing recompiles — and measures propagation lag
-     from the worker-echoed batch size.
+     from the worker-echoed batch size, one pending entry per
+     (group, decision step).
 
-Because pacing is a rendezvous (grant -> report), a fully-live cluster
-runs with zero timeouts and the round sequence is deterministic: the
-same scenario replayed through :class:`~repro.core.simulator.ClusterSim`
-and through this loop produces the identical event stream
-(tests/test_runtime*.py assert the paper's 180 -> 140 -> 100 Fig. 6
-sequence through both).
+With ``staleness=0`` pacing is the strict rendezvous (grant -> report)
+of PR 2: a fully-live cluster runs with zero timeouts and the round
+sequence is deterministic — the same scenario replayed through
+:class:`~repro.core.simulator.ClusterSim` and through this loop produces
+the identical event stream (tests/test_runtime*.py assert the paper's
+180 -> 140 -> 100 Fig. 6 sequence through both). With ``staleness=k>0``
+the grant pipeline keeps workers busy while the coordinator processes
+older rounds; a ``Retune`` decided at round r is queued behind the
+grants already in flight, so it takes effect on the worker at step
+r+k+1 — deterministically, which is what lets ``ClusterSim(staleness=k)``
+mirror the mode for trace parity at any k.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.allocator import BatchPlan
-from repro.core.control import ControlPlane, RetuneEvent, StepReport
+from repro.core.control import ControlPlane, RetuneEvent, StepBuckets, \
+    StepReport
 from repro.runtime.ipc import ChannelClosed
 from repro.runtime.managers.base import ExecutionManager
 from repro.runtime.messages import (CheckpointAck, CheckpointRequest, Goodbye,
@@ -68,6 +82,9 @@ class RuntimeResult:
     reports_total: int
     retune_lags: List[int]               # rounds from decision to worker echo
     checkpoint_acks: List[CheckpointAck]
+    staleness: int = 0
+    stale_reports: int = 0               # below-floor arrivals discarded
+    acks_dropped: int = 0                # checkpoint acks expired on timeout
 
     def event_tuples(self):
         return [(e.step, e.group, e.old_batch, e.new_batch, e.reason)
@@ -85,11 +102,62 @@ class RuntimeResult:
             len(self.round_stats)
 
 
+class RetuneLagTracker:
+    """Propagation-lag bookkeeping, one pending entry per
+    (group, decision step).
+
+    Keying by group alone (PR 2) meant a second retune for the same
+    group overwrote the first entry before its echo arrived — the first
+    lag was never recorded, and a late echo of the OLD batch size could
+    match the new entry. Here every decision keeps its own slot; an
+    echo matches the oldest pending entry carrying that batch size, and
+    matching an entry expires every older entry for the group (the
+    worker is provably past them — their echo can never arrive).
+
+    ``min_lag`` is the earliest a genuine echo can possibly arrive:
+    channels are FIFO and the coordinator has already sent grants
+    through round s+k when it broadcasts a retune decided at round s,
+    so no report stamped <= s+k can reflect it — a genuine echo has
+    lag >= k+1. Requiring that rejects the flapping false-positive
+    where a second retune returns to the batch size the worker is
+    STILL running (pre-first-retune run-ahead reports would otherwise
+    "echo" it with an impossibly small lag, and expire the first
+    entry before its real echo arrived)."""
+
+    def __init__(self, min_lag: int = 1) -> None:
+        # (group, decision step) -> new batch; insertion-ordered, and
+        # decisions arrive in step order, so iteration is oldest-first
+        self._pending: Dict[Tuple[str, int], int] = {}
+        self.min_lag = min_lag
+
+    def note(self, step: int, group: str, new_batch: int) -> None:
+        self._pending[(group, step)] = new_batch
+
+    def match(self, round_: int, group: str,
+              batch_size: int) -> Optional[int]:
+        """An echoed batch size observed at coordinator ``round_``.
+        Returns the measured lag in rounds, or None if it answers no
+        pending entry."""
+        hit = next((s for (g, s), bs in self._pending.items()
+                    if g == group and bs == batch_size
+                    and round_ - s >= self.min_lag), None)
+        if hit is None:
+            return None
+        for key in [k for k in self._pending
+                    if k[0] == group and k[1] <= hit]:
+            del self._pending[key]           # matched + superseded ones
+        return round_ - hit
+
+    def pending(self) -> Dict[Tuple[str, int], int]:
+        return dict(self._pending)
+
+
 def specs_from_plan(plan: BatchPlan,
                     interferences: Sequence = (),
                     dropouts: Sequence = (),
                     train: Optional[Dict] = None,
-                    seed: int = 0) -> List[WorkerSpec]:
+                    seed: int = 0,
+                    step_delay_s: float = 0.0) -> List[WorkerSpec]:
     """One WorkerSpec per plan group, carrying its benchmark table and
     its slice of the fault schedule. ``interferences``/``dropouts`` are
     the simulator's dataclasses — the runtime and ``ClusterSim`` consume
@@ -107,21 +175,39 @@ def specs_from_plan(plan: BatchPlan,
             speed_batches=[float(b) for b in g.speed_model.batch_sizes],
             speed_speeds=[float(s) for s in g.speed_model.speeds],
             interference=ivs, silence=sil,
-            train=dict(train) if train else None, seed=seed))
+            train=dict(train) if train else None, seed=seed,
+            step_delay_s=step_delay_s))
     return specs
 
 
 class EventLoop:
     def __init__(self, control_plane: ControlPlane,
                  manager: ExecutionManager,
-                 round_timeout: float = 1.0) -> None:
+                 round_timeout: float = 1.0,
+                 staleness: int = 0,
+                 ack_timeout: Optional[float] = None) -> None:
+        if staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {staleness}")
         self.control_plane = control_plane
         self.manager = manager
         self.round_timeout = round_timeout
+        self.staleness = int(staleness)
+        # checkpoint acks outlive their round; give them a longer leash
+        self.ack_timeout = (ack_timeout if ack_timeout is not None
+                            else 4.0 * round_timeout)
         self._ckpt_acks: List[CheckpointAck] = []
-        self._awaiting_acks: set = set()
-        self._pending_lag: Dict[str, tuple] = {}   # group -> (step, new_bs)
+        # per-checkpoint-step outstanding acks: {ckpt step: {group: inc}}
+        self._awaiting_acks: Dict[int, Dict[str, int]] = {}
+        self._ack_deadlines: Dict[int, float] = {}
+        self._acks_dropped = 0
+        self._lag = RetuneLagTracker(min_lag=self.staleness + 1)
         self._lags: List[int] = []
+        self._buckets = StepBuckets()
+        # per step: {group: incarnation granted} — a report is only owed
+        # by the worker life the grant was actually delivered to
+        self._expected: Dict[int, Dict[str, int]] = {}
+        self._granted_hi: Dict[str, int] = {}    # group -> highest granted
+        self._stale_reports = 0
 
     # ------------------------------------------------------------------
     def run(self, rounds: int, faults: Sequence[FaultAction] = (),
@@ -134,13 +220,16 @@ class EventLoop:
         for step in range(rounds):
             t0 = time.perf_counter()
             self._apply_faults(step, faults)
-            granted = self._grant(step)
-            reports = self._collect(granted, step)
+            self._grant_ahead(step, rounds)
+            reports = self._collect_round(step)
             reports_total += len(reports)
             for msg in reports.values():
                 cp.bus.publish(StepReport(step, msg.group, msg.speed,
                                           cpu_util=msg.cpu_util,
                                           power_w=msg.power_w))
+                lag = self._lag.match(step, msg.group, msg.batch_size)
+                if lag is not None:
+                    self._lags.append(lag)
             event = cp.poll(step)
             if event is not None:
                 self._broadcast_retune(step, event)
@@ -148,7 +237,13 @@ class EventLoop:
                     on_retune(event)
             if checkpoint_every and (step + 1) % checkpoint_every == 0:
                 self._broadcast(CheckpointRequest(step))
-                self._awaiting_acks = set(self.manager.live())
+                live = self.manager.live()
+                if live:
+                    self._awaiting_acks[step] = {
+                        n: h.incarnation for n, h in live.items()}
+                    self._ack_deadlines[step] = \
+                        time.perf_counter() + self.ack_timeout
+            self._expire_acks()
             stats.append(RoundStats(
                 step, len(reports), time.perf_counter() - t0,
                 None if event is None else
@@ -157,7 +252,10 @@ class EventLoop:
         self._drain_acks()
         return RuntimeResult(rounds, list(cp.events), stats,
                              time.perf_counter() - t_run, reports_total,
-                             list(self._lags), list(self._ckpt_acks))
+                             list(self._lags), list(self._ckpt_acks),
+                             staleness=self.staleness,
+                             stale_reports=self._stale_reports,
+                             acks_dropped=self._acks_dropped)
 
     def shutdown(self) -> None:
         self.manager.shutdown()
@@ -174,103 +272,166 @@ class EventLoop:
             elif f.action == "resume":
                 self.manager.resume(f.group)
             elif f.action == "restart":
-                handle = self.manager.workers[f.group]
+                handle = self.manager.workers.get(f.group)
+                if handle is None:
+                    known = ", ".join(sorted(self.manager.workers)) \
+                        or "<none>"
+                    raise ValueError(
+                        f"cannot restart unknown group {f.group!r}: it was "
+                        f"never started by this manager (known groups: "
+                        f"{known})")
                 spec = dataclasses.replace(
                     handle.spec,
                     batch_size=self.control_plane.plan.batch_sizes().get(
                         f.group, handle.spec.batch_size))
                 self.manager.restart(f.group, spec)
+                # the new incarnation starts its grant stream at the
+                # current round — its predecessor's grants died with it
+                self._granted_hi.pop(f.group, None)
             else:
                 raise ValueError(f"unknown fault action: {f.action}")
 
-    def _grant(self, step: int) -> List[str]:
-        granted = []
+    # -- grant pipeline -------------------------------------------------
+    def _grant_ahead(self, step: int, rounds: int) -> None:
+        """Keep every live worker granted through ``step + staleness``
+        (capped at the final round). At staleness=0 this issues exactly
+        one grant per worker per round — the synchronous rendezvous."""
+        hi = min(step + self.staleness, rounds - 1)
         for name, handle in self.manager.live().items():
-            try:
-                handle.channel.put(StepGrant(step))
-                granted.append(name)
-            except ChannelClosed:
-                self.manager.mark_dead(name)
-        return granted
-
-    def _collect(self, granted: List[str],
-                 step: int) -> Dict[str, StepReportMsg]:
-        """One report per granted worker, or silence by the deadline."""
-        reports: Dict[str, StepReportMsg] = {}
-        pending = set(granted)
-        deadline = time.perf_counter() + self.round_timeout
-        while pending and time.perf_counter() < deadline:
-            progressed = False
-            for name in sorted(pending):
-                handle = self.manager.workers[name]
-                if not handle.alive:
-                    pending.discard(name)
-                    continue
+            lo = max(self._granted_hi.get(name, step - 1) + 1, step)
+            for s in range(lo, hi + 1):
                 try:
-                    while handle.channel.poll(0.0):
-                        msg = handle.channel.get()
-                        progressed = True
-                        if self._route(name, msg, step, reports):
-                            pending.discard(name)
-                            break
+                    handle.channel.put(StepGrant(s, self.staleness))
                 except ChannelClosed:
                     self.manager.mark_dead(name)
-                    pending.discard(name)
-                    progressed = True
-            if pending and not progressed:
-                time.sleep(0.002)
-        return reports
+                    break
+                self._granted_hi[name] = s
+                self._expected.setdefault(s, {})[name] = handle.incarnation
 
-    def _route(self, name: str, msg: Message, step: int,
-               reports: Dict[str, StepReportMsg]) -> bool:
-        """Returns True when ``name``'s report for THIS round arrived."""
+    # -- collection -----------------------------------------------------
+    def _collect_round(self, step: int) -> Dict[str, StepReportMsg]:
+        """Assemble round ``step``'s bucket: one report per worker that
+        was granted the step and is still on that incarnation, or
+        silence by the deadline. Out-of-order arrivals for later rounds
+        are bucketed for their own round; below-floor arrivals (e.g. a
+        resumed worker's backlog flush) are discarded as stale."""
+        deadline = time.perf_counter() + self.round_timeout
+        while True:
+            progressed = self._pump(step)
+            missing = self._missing(step)
+            if not missing:
+                break
+            now = time.perf_counter()
+            if now >= deadline:
+                break
+            if not progressed:
+                # event-driven wait: block on one owing worker's channel
+                # (releases the GIL, wakes the instant data lands)
+                # instead of sleeping a fixed quantum
+                handle = self.manager.workers[missing[0]]
+                try:
+                    handle.channel.poll(min(0.002, deadline - now))
+                except ChannelClosed:
+                    self.manager.mark_dead(missing[0])
+        self._expected.pop(step, None)
+        return self._buckets.pop(step)
+
+    def _missing(self, step: int) -> List[str]:
+        """Workers still owing round ``step`` a report: granted it, not
+        yet bucketed, alive, and on the incarnation the grant went to."""
+        got = self._buckets.peek(step)
+        out = []
+        for name, inc in self._expected.get(step, {}).items():
+            if name in got:
+                continue
+            handle = self.manager.workers.get(name)
+            if handle is None or not handle.alive or \
+                    handle.incarnation != inc:
+                continue                 # that worker life is gone
+            out.append(name)
+        return out
+
+    def _pump(self, floor: Optional[int]) -> bool:
+        """Drain every live worker's channel, routing messages. Returns
+        True when anything arrived."""
+        progressed = False
+        for name in sorted(self.manager.live()):
+            handle = self.manager.workers[name]
+            try:
+                while handle.channel.poll(0.0):
+                    self._route(name, handle.channel.get(), floor)
+                    progressed = True
+            except ChannelClosed:
+                self.manager.mark_dead(name)
+                progressed = True
+        return progressed
+
+    def _route(self, name: str, msg: Message,
+               floor: Optional[int]) -> None:
+        """Dispatch one arrival. ``floor`` is the oldest round still
+        being assembled; report arrivals below it are stale (the
+        synchronous loop's ``msg.step != step`` filter, generalized).
+        ``floor=None`` (the final ack drain) drops reports silently."""
         if isinstance(msg, StepReportMsg):
-            if msg.step != step:
-                return False             # stale (e.g. post-resume backlog)
-            reports[name] = msg
-            lag = self._pending_lag.get(name)
-            if lag is not None and msg.batch_size == lag[1]:
-                self._lags.append(step - lag[0])
-                self._pending_lag.pop(name)
-            return True
-        if isinstance(msg, CheckpointAck):
+            if floor is None:
+                return
+            if not self._buckets.add(msg.step, name, msg):
+                self._stale_reports += 1
+        elif isinstance(msg, CheckpointAck):
             self._ckpt_acks.append(msg)
-            self._awaiting_acks.discard(name)
+            pend = self._awaiting_acks.get(msg.step)
+            if pend is not None:
+                pend.pop(name, None)
+                if not pend:
+                    self._awaiting_acks.pop(msg.step, None)
+                    self._ack_deadlines.pop(msg.step, None)
         elif isinstance(msg, Goodbye):
             self.manager.mark_dead(name)
-            return True
         elif isinstance(msg, Hello):
             pass                         # late duplicate; handshake owns it
-        return False
+
+    # -- checkpoint acks ------------------------------------------------
+    def _expire_acks(self,
+                     deadline_override: Optional[float] = None) -> None:
+        """Per-checkpoint-step bookkeeping: a still-outstanding ack set
+        is only dropped on ITS OWN explicit timeout (or when the owing
+        worker life is gone) — a later CheckpointRequest broadcast never
+        clobbers it (the PR-2 overwrite bug, when ``checkpoint_every``
+        was small relative to ``round_timeout``). The final drain caps
+        every per-step deadline at ``deadline_override``."""
+        now = time.perf_counter()
+        for ckpt_step in list(self._awaiting_acks):
+            pend = self._awaiting_acks[ckpt_step]
+            for name in [n for n, inc in pend.items()
+                         if (self.manager.workers.get(n) is None
+                             or not self.manager.workers[n].alive
+                             or self.manager.workers[n].incarnation != inc)]:
+                pend.pop(name)           # dead/restarted: can never ack
+            deadline = self._ack_deadlines.get(ckpt_step, 0.0)
+            if deadline_override is not None:
+                deadline = min(deadline, deadline_override)
+            if pend and now < deadline:
+                continue
+            self._acks_dropped += len(pend)
+            self._awaiting_acks.pop(ckpt_step, None)
+            self._ack_deadlines.pop(ckpt_step, None)
 
     def _drain_acks(self) -> None:
         """A CheckpointRequest broadcast on the FINAL round would
-        otherwise never be answered in a _collect pass — drain the
+        otherwise never be answered in a collection pass — drain the
         outstanding acks so the result reflects the workers' final
         state."""
         deadline = time.perf_counter() + self.round_timeout
         while self._awaiting_acks and time.perf_counter() < deadline:
-            progressed = False
-            for name in sorted(self._awaiting_acks):
-                handle = self.manager.workers.get(name)
-                if handle is None or not handle.alive:
-                    self._awaiting_acks.discard(name)
-                    break
-                try:
-                    while handle.channel.poll(0.0):
-                        self._route(name, handle.channel.get(), -1, {})
-                        progressed = True
-                except ChannelClosed:
-                    self.manager.mark_dead(name)
-                    self._awaiting_acks.discard(name)
-                    progressed = True
-            if self._awaiting_acks and not progressed:
+            if not self._pump(None):
                 time.sleep(0.002)
+            self._expire_acks(deadline_override=deadline)
 
+    # -- broadcast ------------------------------------------------------
     def _broadcast_retune(self, step: int, event: RetuneEvent) -> None:
         self._broadcast(Retune(step, self.control_plane.plan.batch_sizes(),
                                group=event.group, reason=event.reason))
-        self._pending_lag[event.group] = (step, event.new_batch)
+        self._lag.note(step, event.group, event.new_batch)
 
     def _broadcast(self, msg: Message) -> None:
         for name, handle in self.manager.live().items():

@@ -69,13 +69,25 @@ class Hello(Message):
 @register
 @dataclasses.dataclass
 class StepGrant(Message):
-    """Coordinator paces one synchronous round. ``step`` is the
-    coordinator's logical clock — workers stamp their report with it, so
-    interference windows and liveness arithmetic align across the whole
-    cluster without wall-clock agreement."""
+    """Coordinator paces one round. ``step`` is the coordinator's
+    logical clock — workers stamp their report with it, so interference
+    windows and liveness arithmetic align across the whole cluster
+    without wall-clock agreement.
+
+    ``staleness`` is the coordinator's bounded-staleness window k: how
+    many rounds of grants it keeps in flight beyond the one it is
+    currently collecting. k=0 is the strict grant -> report rendezvous
+    (the synchronous mode, and the Fig. 6 parity baseline); k>=1 lets a
+    worker run ahead, answering queued grants back-to-back while the
+    coordinator overlaps collection of older rounds with the next
+    grant. Informational for the worker — its loop is identical either
+    way (drain the channel FIFO, stamp each report with the granted
+    step) — but carried on the wire so a worker can reason about how
+    far ahead of the control plane it may be running."""
 
     kind: ClassVar[str] = "grant"
     step: int
+    staleness: int = 0
 
 
 @register

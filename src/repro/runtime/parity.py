@@ -38,13 +38,14 @@ def _event_tuples(cp: ControlPlane) -> List[EventTuple]:
 
 def run_sim(interferences: Sequence = (), dropouts: Sequence = (),
             steps: int = 45,
-            liveness_timeout: Optional[int] = None) -> List[EventTuple]:
+            liveness_timeout: Optional[int] = None,
+            staleness: int = 0) -> List[EventTuple]:
     """The scenario through the discrete-step simulator."""
     plan = stannis_3node_plan()
     cp = ControlPlane(plan, [SpeedDeclinePolicy()],
                       liveness_timeout=liveness_timeout)
     ClusterSim(plan, list(interferences), control_plane=cp,
-               dropouts=list(dropouts)).run(steps)
+               dropouts=list(dropouts), staleness=staleness).run(steps)
     return _event_tuples(cp)
 
 
@@ -53,17 +54,23 @@ def run_runtime(interferences: Sequence = (), dropouts: Sequence = (),
                 liveness_timeout: Optional[int] = None,
                 faults: Sequence[FaultAction] = (),
                 round_timeout: float = 1.0,
-                train: Optional[dict] = None
+                train: Optional[dict] = None,
+                staleness: int = 0,
+                step_delay_s: float = 0.0
                 ) -> Tuple[RuntimeResult, List[EventTuple]]:
     """The scenario through live workers. ``dropouts`` become worker-side
     silence windows (deterministic everywhere, threads included);
-    ``faults`` instead injects REAL kills/suspends via the manager."""
+    ``faults`` instead injects REAL kills/suspends via the manager.
+    ``staleness`` is the bounded-staleness bound k — 0 is the strict
+    synchronous rendezvous, k>=1 lets workers run k rounds ahead."""
     plan = stannis_3node_plan()
     cp = ControlPlane(plan, [SpeedDeclinePolicy()],
                       liveness_timeout=liveness_timeout)
-    specs = specs_from_plan(plan, interferences, dropouts, train=train)
+    specs = specs_from_plan(plan, interferences, dropouts, train=train,
+                            step_delay_s=step_delay_s)
     mgr = MANAGERS[manager]()
-    loop = EventLoop(cp, mgr, round_timeout=round_timeout)
+    loop = EventLoop(cp, mgr, round_timeout=round_timeout,
+                     staleness=staleness)
     try:
         # start() inside the try: a handshake failure on worker N must
         # still tear down workers 0..N-1
@@ -78,27 +85,43 @@ def run_runtime(interferences: Sequence = (), dropouts: Sequence = (),
 
 
 def fig6_parity(manager: str = "local", steps: int = 45,
-                train: Optional[dict] = None) -> dict:
-    """Escalating Gzip interference: the paper's 180 -> 140 -> 100."""
-    sim_events = run_sim(fig6_escalating_interference(), steps=steps)
+                train: Optional[dict] = None,
+                staleness: int = 0) -> dict:
+    """Escalating Gzip interference: the paper's 180 -> 140 -> 100.
+    With ``staleness=k`` both paths run the bounded-staleness mode —
+    the retune decisions land at the SAME steps (stale reports are not
+    flagged as declined: the capped speed already matches the retuned
+    plan's required speed), only propagation to the workers lags by
+    k+1 rounds, so the event streams still match exactly."""
+    sim_events = run_sim(fig6_escalating_interference(), steps=steps,
+                         staleness=staleness)
     result, rt_events = run_runtime(fig6_escalating_interference(),
                                     steps=steps, manager=manager,
-                                    train=train)
+                                    train=train, staleness=staleness)
     return {"sim": sim_events, "runtime": rt_events,
             "match": sim_events == rt_events, "result": result}
 
 
 def dropout_parity(manager: str = "local", fail: int = 5, rejoin: int = 20,
                    steps: int = 40, fault_mode: str = "silence",
-                   group: str = "xeon1", round_timeout: float = 0.25) -> dict:
+                   group: str = "xeon1", round_timeout: float = 0.25,
+                   staleness: int = 0) -> dict:
     """Failure -> mask-out -> rejoin, sim Dropout vs a live fault.
 
     fault_mode: "silence" (worker alive but mute — deterministic on any
     manager), "kill" (SIGKILL + restart; real process death), or
     "suspend" (SIGSTOP + SIGCONT; a wedged-but-running node).
+
+    Exact sim parity holds at ``staleness=0``. At k>0 a run-ahead
+    worker may have pre-delivered up to k reports before the fault
+    lands, deferring silence-derived detection by at most k coordinator
+    rounds — callers asserting under run-ahead should accept a failure
+    step in [sim_step, sim_step + k] (the bounded-staleness guarantee)
+    rather than exact equality.
     """
     sim_events = run_sim(dropouts=[Dropout(group, fail, rejoin)],
-                         steps=steps, liveness_timeout=3)
+                         steps=steps, liveness_timeout=3,
+                         staleness=staleness)
     if fault_mode == "silence":
         dropouts, faults = [Dropout(group, fail, rejoin)], []
     elif fault_mode == "kill":
@@ -113,6 +136,7 @@ def dropout_parity(manager: str = "local", fail: int = 5, rejoin: int = 20,
         raise ValueError(fault_mode)
     result, rt_events = run_runtime(
         dropouts=dropouts, steps=steps, manager=manager,
-        liveness_timeout=3, faults=faults, round_timeout=round_timeout)
+        liveness_timeout=3, faults=faults, round_timeout=round_timeout,
+        staleness=staleness)
     return {"sim": sim_events, "runtime": rt_events,
             "match": sim_events == rt_events, "result": result}

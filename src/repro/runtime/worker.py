@@ -7,7 +7,14 @@ unchanged; only the transport and the fault surface differ. The worker:
   * announces itself with ``Hello`` (join / rejoin);
   * on each ``StepGrant`` optionally runs ONE real jitted train step
     (``hetero_dp.make_train_step`` at the group's live batch size inside
-    its fixed-capacity row mask) and reports its speed;
+    its fixed-capacity row mask) and reports its speed. Under
+    bounded-staleness pacing (``StepGrant.staleness`` > 0) several
+    grants sit queued in the channel at once; the loop drains them
+    FIFO, running ahead of the coordinator's control rounds while
+    stamping every report with ITS OWN granted step — a ``Retune``
+    queued behind k outstanding grants therefore lands exactly k+1
+    steps after the decision, which is the determinism the sim mirror
+    (``ClusterSim(staleness=k)``) and the trace-parity tests rely on;
   * applies ``Retune`` messages by flipping row-mask contents only —
     the compiled step is untouched (``CheckpointAck.n_compiles`` proves
     it);
@@ -57,6 +64,11 @@ class WorkerSpec:
     — the deterministic fault injector for thread workers, which cannot
     be SIGKILLed. ``train`` enables the real jitted step:
     ``{"arch": name, "seq_len": int, "reduced": bool}``.
+    ``step_delay_s`` models per-step compute time for report-only
+    workers (a real TrainExecutor has it for free): the worker sleeps
+    that long per granted step, releasing the GIL, so thread-worker
+    benchmarks exhibit the genuine compute/coordination overlap that
+    bounded-staleness pacing exists to exploit.
     """
 
     group: str
@@ -71,6 +83,7 @@ class WorkerSpec:
     train: Optional[Dict] = None
     seed: int = 0
     incarnation: int = 0
+    step_delay_s: float = 0.0
 
     def to_wire(self) -> Dict:
         return dataclasses.asdict(self)
@@ -218,6 +231,8 @@ def _one_step(spec: WorkerSpec, gov: SpeedGovernor, sm: SpeedModel,
     loss = wall_dt = None
     if executor is not None and spec.batch_size > 0:
         loss, wall_dt = executor.run_step(spec.batch_size)
+    elif spec.step_delay_s > 0.0:
+        time.sleep(spec.step_delay_s)    # modeled compute (GIL released)
     if gov.silenced(step):
         return None
     if spec.batch_size == 0:

@@ -333,3 +333,51 @@ class TestCpuUtilBaseline:
         # and it stays frozen afterwards (recovery must not drift it)
         cp.observe(9, reports_for(cp.plan, {}, util={"xeon0": 0.2}))
         assert policy._normal_util["xeon0"] == pytest.approx(0.95)
+
+
+# ---------------------------------------------------------------------------
+# StepBuckets — out-of-order report assembly for bounded-staleness pacing
+# ---------------------------------------------------------------------------
+
+
+class TestStepBuckets:
+    def test_out_of_order_assembly(self):
+        from repro.core.control import StepBuckets
+
+        b = StepBuckets()
+        assert b.add(2, "a", "a2")               # run-ahead arrival
+        assert b.add(0, "a", "a0")
+        assert b.add(0, "b", "b0")
+        assert b.pending_steps() == [0, 2]
+        assert b.peek(0) == {"a": "a0", "b": "b0"}
+        assert b.pop(0) == {"a": "a0", "b": "b0"}
+        assert b.pop(1) == {}                    # nothing arrived for 1
+        assert b.pop(2) == {"a": "a2"}
+
+    def test_floor_rejects_stale_arrivals(self):
+        from repro.core.control import StepBuckets
+
+        b = StepBuckets()
+        b.add(0, "a", "a0")
+        b.pop(0)
+        assert b.floor == 1
+        assert not b.add(0, "a", "a0-again")     # post-resume backlog
+        assert b.add(1, "a", "a1")
+
+    def test_pop_discards_older_unconsumed_buckets(self):
+        from repro.core.control import StepBuckets
+
+        b = StepBuckets()
+        b.add(0, "a", "a0")                      # round 0 times out...
+        b.add(3, "a", "a3")
+        b.pop(3)                                 # ...consumer moved on
+        assert b.pending_steps() == []
+        assert not b.add(2, "a", "late")
+
+    def test_duplicates_are_first_wins(self):
+        from repro.core.control import StepBuckets
+
+        b = StepBuckets()
+        assert b.add(1, "a", "original")
+        assert b.add(1, "a", "redelivered")      # accepted but a no-op
+        assert b.pop(1) == {"a": "original"}

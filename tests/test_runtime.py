@@ -10,16 +10,33 @@ Acceptance anchors (ISSUE 2):
     path — liveness derived from real IPC silence;
   * retunes propagate to workers in one round and the --interfere
     grammar covers windows, absolute caps and dropouts.
+
+Acceptance anchors (ISSUE 4, bounded staleness):
+  * staleness=0 reproduces the synchronous rendezvous EXACTLY (the
+    Fig. 6 parity tests above run unchanged);
+  * staleness=k keeps the 180 -> 140 -> 100 sequence at the SAME
+    decision steps, with retune propagation lag of exactly k+1 rounds
+    and sim/runtime trace parity via ClusterSim(staleness=k);
+  * a kill under run-ahead is still detected by bus-silence liveness
+    (deferred by at most k rounds — the bounded-staleness guarantee);
+  * a post-resume stale-report backlog (old granted steps flushed after
+    SIGCONT) is discarded below the bucket floor and cannot corrupt
+    round stats, liveness, or retune-lag accounting.
 """
 from __future__ import annotations
+
+import threading
 
 import pytest
 
 from repro.core.simulator import Dropout, Interference
 from repro.launch.train import events_report_fn, parse_interfere
+from repro.runtime.eventloop import RetuneLagTracker
 from repro.runtime.ipc import ChannelClosed, pipe_pair, queue_pair
-from repro.runtime.messages import (CheckpointAck, Hello, Message, Retune,
-                                    Shutdown, StepGrant, StepReportMsg)
+from repro.runtime.managers.base import ExecutionManager, WorkerHandle
+from repro.runtime.messages import (CheckpointAck, CheckpointRequest, Goodbye,
+                                    Hello, Message, Retune, Shutdown,
+                                    StepGrant, StepReportMsg)
 from repro.runtime.parity import (dropout_parity, fig6_parity, run_runtime,
                                   run_sim)
 from repro.runtime.worker import InterferenceSpec, SpeedGovernor, WorkerSpec
@@ -34,6 +51,7 @@ class TestMessages:
     @pytest.mark.parametrize("msg", [
         Hello("xeon0", 1234, 180, incarnation=2),
         StepGrant(7),
+        StepGrant(7, staleness=3),
         StepReportMsg(7, "xeon0", 31.13, cpu_util=0.8, batch_size=180,
                       wall_dt=0.5, loss=3.2),
         Retune(9, {"xeon0": 140, "xeon1": 180}, group="xeon0",
@@ -237,3 +255,354 @@ class TestSimBaselines:
                          steps=40, liveness_timeout=3)
         assert events == [(7, "xeon1", 180, 0, "failure"),
                           (20, "xeon1", 0, 180, "recover")]
+
+
+# ---------------------------------------------------------------------------
+# bounded-staleness rounds (ISSUE 4 tentpole)
+# ---------------------------------------------------------------------------
+
+
+class TestBoundedStaleness:
+    def test_negative_staleness_rejected(self):
+        from repro.core.control import ControlPlane
+        from repro.core.simulator import ClusterSim, stannis_3node_plan
+        from repro.runtime import EventLoop, LocalManager
+
+        plan = stannis_3node_plan()
+        with pytest.raises(ValueError):
+            EventLoop(ControlPlane(plan), LocalManager(), staleness=-1)
+        with pytest.raises(ValueError):
+            ClusterSim(plan, staleness=-2)
+
+    @pytest.mark.parametrize("k", [1, 2])
+    def test_fig6_sequence_and_lag_under_runahead(self, k):
+        """The retune DECISIONS land at the same steps as the
+        synchronous run (stale post-retune reports are not flagged: the
+        capped speed already matches the retuned plan), propagation to
+        the workers lags exactly k+1 rounds, and the sim mirror
+        (ClusterSim(staleness=k)) matches the runtime event-for-event."""
+        p = fig6_parity(manager="local", staleness=k)
+        assert [(g, ob, nb, r) for (_, g, ob, nb, r) in p["runtime"]] == [
+            ("xeon0", 180, 140, "decline"),
+            ("xeon0", 140, 100, "decline"),
+        ]
+        assert p["match"], (p["sim"], p["runtime"])
+        assert p["result"].retune_lags == [k + 1, k + 1]
+        assert p["result"].stale_reports == 0
+
+    def test_decision_steps_identical_to_synchronous(self):
+        sync = fig6_parity(manager="local")["runtime"]
+        asynch = fig6_parity(manager="local", staleness=2)["runtime"]
+        assert [(s, g) for (s, g, *_) in sync] == \
+            [(s, g) for (s, g, *_) in asynch]
+
+    def test_healthy_cluster_full_reports_under_runahead(self):
+        result, events = run_runtime(steps=20, manager="local", staleness=2)
+        assert events == []
+        assert result.staleness == 2
+        assert result.reports_total == 20 * 3    # every worker, every round
+        assert all(s.n_reports == 3 for s in result.round_stats)
+        assert result.stale_reports == 0
+
+    def test_kill_under_runahead_still_detected(self):
+        """A kill at round 5 with k=2: the worker may have pre-delivered
+        up to 2 run-ahead reports, so bus-silence liveness fires within
+        [7, 9] (deferred by at most k rounds, never suppressed); the
+        restart still rejoins at the knee at the same round."""
+        d = dropout_parity(manager="local", fault_mode="kill", staleness=2)
+        events = d["runtime"]
+        assert [(g, r) for (_, g, _, _, r) in events] == \
+            [("xeon1", "failure"), ("xeon1", "recover")]
+        fail, recover = events
+        assert 7 <= fail[0] <= 9, events
+        assert fail[2:4] == (180, 0)
+        assert recover == (20, "xeon1", 0, 180, "recover")
+
+
+# ---------------------------------------------------------------------------
+# coordinator bookkeeping (ISSUE 4 satellites)
+# ---------------------------------------------------------------------------
+
+
+class TestRetuneLagTracker:
+    """Pending retune echoes keyed by (group, decision step) — a second
+    retune for the same group must not overwrite the first entry, and a
+    late echo of the old batch must not match the wrong one."""
+
+    def test_single_echo(self):
+        t = RetuneLagTracker()
+        t.note(5, "g", 140)
+        assert t.match(6, "g", 140) == 1
+        assert t.match(7, "g", 140) is None      # already consumed
+
+    def test_double_retune_records_both_lags(self):
+        t = RetuneLagTracker()
+        t.note(5, "g", 140)
+        t.note(8, "g", 100)                      # second retune, same group
+        assert t.match(9, "g", 140) == 4         # FIRST lag still recorded
+        assert t.match(10, "g", 100) == 2
+        assert t.match(11, "g", 140) is None     # late old echo: no match
+
+    def test_superseded_entries_expire_on_newer_match(self):
+        t = RetuneLagTracker()
+        t.note(5, "g", 140)
+        t.note(8, "g", 100)
+        assert t.match(9, "g", 100) == 1         # newer entry echoes first
+        # the worker is provably past the 140 plan: its entry expired
+        assert t.match(10, "g", 140) is None
+        assert t.pending() == {}
+
+    def test_unrelated_batch_and_group(self):
+        t = RetuneLagTracker()
+        t.note(5, "g", 140)
+        assert t.match(6, "g", 180) is None
+        assert t.match(6, "h", 140) is None
+        assert t.pending() == {("g", 5): 140}
+
+    def test_flapping_retune_ignores_pre_retune_runahead_echo(self):
+        """k=2 flapping: retune #1 at 5 (180 -> 0), retune #2 at 6
+        (0 -> 180). The worker still has pre-retune-#1 grants in flight
+        echoing 180 at rounds 7 and 8 — under FIFO channels no genuine
+        echo of a retune decided at s can arrive before s + k + 1, so
+        those must NOT match entry (g, 6) (which would record an
+        impossible lag AND expire entry (g, 5) before its real echo)."""
+        t = RetuneLagTracker(min_lag=3)          # staleness k=2
+        t.note(5, "g", 0)
+        t.note(6, "g", 180)
+        assert t.match(7, "g", 180) is None      # pre-retune run-ahead
+        assert t.match(8, "g", 180) is None
+        assert t.match(8, "g", 0) == 3           # retune #1's real echo
+        assert t.match(9, "g", 180) == 3         # retune #2's real echo
+        assert t.pending() == {}
+
+    def test_eventloop_wires_min_lag_to_staleness(self):
+        from repro.core.control import ControlPlane
+        from repro.core.simulator import stannis_3node_plan
+        from repro.runtime import EventLoop, LocalManager
+
+        loop = EventLoop(ControlPlane(stannis_3node_plan()),
+                         LocalManager(), staleness=2)
+        assert loop._lag.min_lag == 3
+
+
+class _ScriptedManager(ExecutionManager):
+    """Thread manager whose worker body is supplied by the test — the
+    deterministic way to script protocol edge cases (stale backlog
+    flushes, withheld checkpoint acks) that real workers only produce
+    under racy OS timing."""
+
+    name = "scripted"
+
+    def __init__(self, script) -> None:
+        super().__init__(hello_timeout=10.0)
+        self._script = script
+        self._threads = {}
+
+    def _launch(self, spec):
+        coord, worker = pipe_pair()
+        t = threading.Thread(target=self._script, args=(worker, spec),
+                             name=f"scripted-{spec.group}", daemon=True)
+        t.start()
+        self._threads[spec.group] = t
+        return WorkerHandle(spec, coord)
+
+    def kill(self, group):
+        self.mark_dead(group)
+
+    def _join_all(self):
+        for t in self._threads.values():
+            t.join(timeout=5.0)
+
+
+def _loop_over(script, round_timeout=2.0, staleness=0, ack_timeout=None,
+               liveness_timeout=3):
+    """(EventLoop, manager) over one scripted worker named "g"."""
+    import numpy as np
+
+    from repro.core.allocator import solve
+    from repro.core.control import ControlPlane, SpeedDeclinePolicy
+    from repro.core.speed_model import SpeedModel
+    from repro.runtime import EventLoop, specs_from_plan
+
+    sm = SpeedModel(np.array([1.0, 4, 8]), np.array([2.0, 6, 8]))
+    plan = solve({"g": (1, sm)}, 512)
+    cp = ControlPlane(plan, [SpeedDeclinePolicy()],
+                      liveness_timeout=liveness_timeout)
+    mgr = _ScriptedManager(script)
+    loop = EventLoop(cp, mgr, round_timeout=round_timeout,
+                     staleness=staleness, ack_timeout=ack_timeout)
+    mgr.start(specs_from_plan(plan))
+    return loop, mgr
+
+
+def _scripted_worker(chan, spec, on_grant=None, ack=True):
+    """Baseline scripted worker body: Hello, then answer every grant
+    with an on-plan report; ``on_grant(chan, step)`` runs first."""
+    chan.put(Hello(spec.group, 0, spec.batch_size))
+    bs = spec.batch_size
+    try:
+        while True:
+            msg = chan.get()
+            if isinstance(msg, Shutdown):
+                chan.put(Goodbye(spec.group, 0))
+                return
+            if isinstance(msg, Retune):
+                bs = msg.batch_sizes.get(spec.group, bs)
+            elif isinstance(msg, CheckpointRequest):
+                if ack:
+                    chan.put(CheckpointAck(msg.step, spec.group, 0, bs))
+            elif isinstance(msg, StepGrant):
+                if on_grant:
+                    on_grant(chan, msg.step)
+                chan.put(StepReportMsg(msg.step, spec.group, float(bs),
+                                       cpu_util=1.0, batch_size=bs))
+    except ChannelClosed:
+        pass
+
+
+class TestStaleBacklog:
+    """Satellite: after SIGSTOP/SIGCONT a worker flushes reports with
+    OLD granted steps. The bucket floor (the generalized ``msg.step !=
+    step`` filter) must discard them without corrupting round stats,
+    liveness, or retune-lag accounting — under both k=0 and k>0."""
+
+    @pytest.mark.parametrize("k", [0, 2])
+    def test_backlog_flush_is_discarded(self, k):
+        flushed = []
+
+        def on_grant(chan, step):
+            if step == 3 and not flushed:
+                flushed.append(True)
+                for s in (0, 1, 2):      # post-resume backlog re-delivery
+                    chan.put(StepReportMsg(s, "g", 8.0, cpu_util=1.0,
+                                           batch_size=8))
+
+        def script(chan, spec):
+            _scripted_worker(chan, spec, on_grant=on_grant)
+
+        loop, _ = _loop_over(script, staleness=k)
+        try:
+            res = loop.run(6)
+        finally:
+            loop.shutdown()
+        # every round got exactly its own report — duplicates were
+        # either below the floor (stale-dropped) or deduped first-wins
+        assert [s.n_reports for s in res.round_stats] == [1] * 6
+        assert res.reports_total == 6
+        assert res.events == []                  # liveness never tripped
+        assert res.retune_lags == []             # no phantom lag matches
+        if k == 0:
+            # rounds 0-2 were already closed when the flush landed
+            assert res.stale_reports == 3
+
+    def test_backlog_cannot_fake_liveness(self):
+        """A worker that ONLY flushes old steps (never current ones) is
+        still masked out: stale arrivals never count as reports."""
+
+        def script(chan, spec):
+            chan.put(Hello(spec.group, 0, spec.batch_size))
+            try:
+                while True:
+                    msg = chan.get()
+                    if isinstance(msg, Shutdown):
+                        chan.put(Goodbye(spec.group, 0))
+                        return
+                    if isinstance(msg, StepGrant) and msg.step >= 2:
+                        # wedged: re-deliver step 0 forever instead of
+                        # answering the granted step
+                        chan.put(StepReportMsg(0, spec.group, 8.0,
+                                               cpu_util=1.0, batch_size=8))
+            except ChannelClosed:
+                pass
+
+        loop, _ = _loop_over(script, round_timeout=0.15)
+        try:
+            res = loop.run(8)
+        finally:
+            loop.shutdown()
+        assert [(g, r) for (_, g, _, _, r) in res.event_tuples()] == \
+            [("g", "failure")]
+        assert res.stale_reports > 0
+
+
+class TestCheckpointAckBookkeeping:
+    """Satellite: acks are tracked per checkpoint step — a later
+    CheckpointRequest broadcast never clobbers a still-outstanding set
+    (the PR-2 ``_awaiting_acks`` overwrite); sets drop only on their
+    own explicit timeout."""
+
+    def test_overlapping_checkpoints_all_acked(self):
+        from repro.core.control import ControlPlane, SpeedDeclinePolicy
+        from repro.core.simulator import stannis_3node_plan
+        from repro.runtime import EventLoop, LocalManager, specs_from_plan
+
+        plan = stannis_3node_plan()
+        cp = ControlPlane(plan, [SpeedDeclinePolicy()])
+        manager = LocalManager()
+        loop = EventLoop(cp, manager, round_timeout=5.0)
+        try:
+            manager.start(specs_from_plan(plan))
+            res = loop.run(5, checkpoint_every=1)   # a request EVERY round
+        finally:
+            loop.shutdown()
+        # 3 workers x 5 checkpoints, none dropped, nothing outstanding
+        assert len(res.checkpoint_acks) == 15
+        assert {a.step for a in res.checkpoint_acks} == set(range(5))
+        for s in range(5):
+            assert {a.group for a in res.checkpoint_acks
+                    if a.step == s} == {"xeon0", "xeon1", "xeon2"}
+        assert res.acks_dropped == 0
+        assert loop._awaiting_acks == {}
+
+    def test_outstanding_set_survives_next_broadcast(self):
+        """White-box: an ack for checkpoint step 1 must only retire step
+        1's bookkeeping while step 3's set stays fully outstanding."""
+        from repro.core.control import ControlPlane
+        from repro.core.simulator import stannis_3node_plan
+        from repro.runtime import EventLoop, LocalManager
+
+        loop = EventLoop(ControlPlane(stannis_3node_plan()), LocalManager())
+        loop._awaiting_acks = {1: {"a": 0, "b": 0}, 3: {"a": 0, "b": 0}}
+        loop._ack_deadlines = {1: 1e18, 3: 1e18}
+        loop._route("a", CheckpointAck(1, "a", 5, 8), floor=None)
+        assert loop._awaiting_acks == {1: {"b": 0}, 3: {"a": 0, "b": 0}}
+        loop._route("b", CheckpointAck(1, "b", 5, 8), floor=None)
+        assert loop._awaiting_acks == {3: {"a": 0, "b": 0}}
+        assert 1 not in loop._ack_deadlines
+
+    def test_unacked_checkpoints_drop_on_their_own_timeout(self):
+        def script(chan, spec):
+            _scripted_worker(chan, spec, ack=False)   # withhold every ack
+
+        loop, _ = _loop_over(script, round_timeout=1.0, ack_timeout=0.05)
+        try:
+            res = loop.run(6, checkpoint_every=2)     # requests at 1, 3, 5
+        finally:
+            loop.shutdown()
+        assert res.checkpoint_acks == []
+        assert res.acks_dropped == 3                  # one worker x 3 reqs
+        assert loop._awaiting_acks == {}
+
+
+class TestRestartBookkeeping:
+    def test_restart_unknown_group_fails_clearly(self):
+        """Satellite: a "restart" fault naming a group the manager never
+        started must fail with the group and the known groups in the
+        message, not a bare KeyError."""
+        from repro.core.control import ControlPlane, SpeedDeclinePolicy
+        from repro.core.simulator import stannis_3node_plan
+        from repro.runtime import (EventLoop, FaultAction, LocalManager,
+                                   specs_from_plan)
+
+        plan = stannis_3node_plan()
+        cp = ControlPlane(plan, [SpeedDeclinePolicy()])
+        manager = LocalManager()
+        loop = EventLoop(cp, manager, round_timeout=5.0)
+        try:
+            manager.start(specs_from_plan(plan))
+            with pytest.raises(ValueError) as ei:
+                loop.run(3, faults=[FaultAction(1, "restart", "ghost")])
+        finally:
+            loop.shutdown()
+        assert "ghost" in str(ei.value)
+        assert "xeon0" in str(ei.value)          # known groups are named

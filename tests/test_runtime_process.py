@@ -47,6 +47,33 @@ class TestProcessTraceParity:
         assert d["match"], (d["sim"], d["runtime"])
 
 
+class TestProcessBoundedStaleness:
+    def test_fig6_parity_under_runahead_through_processes(self):
+        """Bounded-staleness pacing over REAL processes: the decision
+        steps and batches match ClusterSim(staleness=2) exactly, and
+        the retune reaches the run-ahead workers in k+1 rounds."""
+        p = fig6_parity(manager="process", staleness=2)
+        assert p["match"], (p["sim"], p["runtime"])
+        assert [(ob, nb) for (_, _, ob, nb, _) in p["runtime"]] == \
+            [(180, 140), (140, 100)]
+        assert p["result"].retune_lags == [3, 3]
+
+    def test_sigkill_under_runahead_still_masked(self):
+        """SIGKILL at round 5 with k=2: the dead process may have
+        pre-delivered up to 2 run-ahead reports, so bus-silence
+        liveness fires within [7, 9] — deferred by at most k rounds,
+        never suppressed — and the restart rejoins at the knee."""
+        d = dropout_parity(manager="process", fault_mode="kill",
+                           staleness=2)
+        events = d["runtime"]
+        assert [(g, r) for (_, g, _, _, r) in events] == \
+            [("xeon1", "failure"), ("xeon1", "recover")]
+        fail, recover = events
+        assert 7 <= fail[0] <= 9, events
+        assert fail[2:4] == (180, 0)
+        assert recover == (20, "xeon1", 0, 180, "recover")
+
+
 @pytest.mark.slow
 class TestProcessRealTraining:
     def test_jitted_workers_report_and_never_recompile(self):

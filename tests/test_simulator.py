@@ -161,3 +161,53 @@ class TestEnergy:
         host = run(csd_plan(0)).j_per_img
         full = run(csd_plan(36)).j_per_img
         assert host / full == pytest.approx(2.45, abs=0.1)
+
+
+# ---------------------------------------------------------------------------
+# bounded-staleness mirror (ISSUE 4): retune application delayed k+1 steps
+# ---------------------------------------------------------------------------
+
+
+class TestSimStaleness:
+    @staticmethod
+    def _fig6(staleness):
+        from repro.core.control import ControlPlane, SpeedDeclinePolicy
+        from repro.core.simulator import fig6_escalating_interference
+
+        plan = stannis_3node_plan()
+        cp = ControlPlane(plan, [SpeedDeclinePolicy()])
+        result = ClusterSim(plan, fig6_escalating_interference(),
+                            control_plane=cp,
+                            staleness=staleness).run(45)
+        return cp, result
+
+    def test_decisions_invariant_under_staleness(self):
+        """Run-ahead delays APPLICATION, not decisions: the 180 -> 140
+        -> 100 sequence lands at the same steps for every k (stale
+        post-retune reports are not flagged — the capped speed already
+        matches the retuned plan's required speed)."""
+        base_cp, _ = self._fig6(0)
+        base = [(e.step, e.old_batch, e.new_batch) for e in base_cp.events]
+        assert [(ob, nb) for (_, ob, nb) in base] == [(180, 140), (140, 100)]
+        for k in (1, 2, 4):
+            cp, _ = self._fig6(k)
+            assert [(e.step, e.old_batch, e.new_batch)
+                    for e in cp.events] == base
+
+    def test_application_delayed_by_staleness(self):
+        """A retune decided at step s reshapes the cluster's per-step
+        speed at s+1 for k=0 but only at s+1+k for k=2 — the window in
+        between runs the OLD batches (exactly what a worker with k
+        queued grants does)."""
+        cp0, r0 = self._fig6(0)
+        cp2, r2 = self._fig6(2)
+        s = cp0.events[0].step               # first retune decision
+        assert cp2.events[0].step == s
+        assert r0.speeds[:s + 1] == r2.speeds[:s + 1]
+        assert r0.speeds[s + 1] != r2.speeds[s + 1]   # k=0 applied already
+        assert r2.speeds[s + 1] == r2.speeds[s]       # k=2 still on old plan
+        assert r0.speeds[s + 3] == r2.speeds[s + 3]   # both applied by s+1+k
+
+    def test_negative_staleness_rejected(self):
+        with pytest.raises(ValueError):
+            ClusterSim(stannis_3node_plan(), staleness=-1)
