@@ -18,8 +18,17 @@ entry's derived value, anything else looks the metric up in the entry's
 conservative (CI runners are slower and noisier than dev machines):
 they gate regressions an order of magnitude out, not run-to-run jitter.
 
+Besides the gate, ``--history BENCH_history.jsonl`` appends this run's
+headline metrics (reports/s for the pipe and socket transports, the
+async speedup, the gate verdict, commit/run identity from the GitHub
+env) to a JSONL trajectory file and prints the recorded trend — CI
+persists that file across runs via artifacts, so a regression shows as
+a *declining trajectory*, not just a floor breach (ROADMAP follow-up
+from PR 4).
+
 Usage (the CI step):
-    python -m benchmarks.check_bench BENCH_runtime.json
+    python -m benchmarks.check_bench BENCH_runtime.json \
+        --history BENCH_history.jsonl
 """
 from __future__ import annotations
 
@@ -27,6 +36,7 @@ import argparse
 import json
 import os
 import sys
+import time
 from typing import Dict, List, Optional
 
 DEFAULT_FLOORS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -86,11 +96,76 @@ def check(bench: Dict, floors: Dict) -> List[str]:
     return problems
 
 
+# headline metrics recorded per run in the history trajectory:
+# {record key: metric address}
+HISTORY_METRICS = {
+    "reports_per_s": "runtime_rounds.reports_per_s",
+    "socket_reports_per_s": "runtime_socket_rounds.reports_per_s",
+    "async_speedup": "runtime_async_staleness.derived",
+}
+
+
+def history_record(bench: Dict, ok: bool) -> Dict:
+    """One JSONL line: headline metrics + commit/run identity (from the
+    GitHub Actions env when present) + the gate verdict."""
+    rec = {
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "commit": os.environ.get("GITHUB_SHA", "")[:12],
+        "run": os.environ.get("GITHUB_RUN_NUMBER", ""),
+        "ok": ok,
+    }
+    for key, address in HISTORY_METRICS.items():
+        value = _resolve(bench, address, [])
+        if value is not None:
+            rec[key] = value
+    return rec
+
+
+def append_and_print_history(path: str, bench: Dict, ok: bool,
+                             limit: int = 30) -> None:
+    """Append this run to the JSONL trajectory, then print the recorded
+    reports/s trend (newest last) so a slow slide is visible long
+    before the conservative floor trips."""
+    with open(path, "a") as f:
+        f.write(json.dumps(history_record(bench, ok),
+                           separators=(",", ":")) + "\n")
+    records = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except ValueError:
+                continue                 # tolerate a corrupt line
+    shown = records[-limit:]
+    print(f"bench trajectory ({len(records)} run(s) recorded, "
+          f"showing last {len(shown)}):")
+    print(f"  {'run':>6} {'commit':<12} {'pipe rep/s':>11} "
+          f"{'sock rep/s':>11} {'async x':>8}  gate")
+    for r in shown:
+        def col(key, width, fmt="{:.1f}"):
+            v = r.get(key)
+            return ("-" if v is None else fmt.format(float(v))).rjust(width)
+        print(f"  {str(r.get('run') or '-'):>6} "
+              f"{(r.get('commit') or '-'):<12} "
+              f"{col('reports_per_s', 11)} "
+              f"{col('socket_reports_per_s', 11)} "
+              f"{col('async_speedup', 8, '{:.3f}')}  "
+              f"{'ok' if r.get('ok') else 'FAIL'}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("bench_json", help="BENCH_runtime.json path")
     ap.add_argument("--floors", default=DEFAULT_FLOORS,
                     help="stored floors/expectations JSON")
+    ap.add_argument("--history", default=None, metavar="JSONL",
+                    help="append this run's headline metrics to the "
+                         "trajectory file and print the trend")
+    ap.add_argument("--history-limit", type=int, default=30,
+                    help="how many trailing history rows to print")
     args = ap.parse_args(argv)
 
     with open(args.bench_json) as f:
@@ -106,6 +181,9 @@ def main(argv=None) -> int:
             list(floors.get("exact") or {})
         print(f"bench gate: {len(gated)} metric(s) within bounds "
               f"({', '.join(gated)})")
+    if args.history:
+        append_and_print_history(args.history, bench, not problems,
+                                 limit=args.history_limit)
     return 1 if problems else 0
 
 

@@ -12,6 +12,13 @@
                             through ClusterSim and through live workers;
                             derived is 1.0 only if the event streams
                             are IDENTICAL (steps, batches, reasons);
+  runtime_socket_rounds   — the SAME round protocol with TCP sockets as
+                            the transport (the multi-host mesh backend,
+                            spawned workers over loopback): reports/s
+                            through length-prefixed JSON frames, plus
+                            the Fig. 6 parity check so the bench run
+                            itself proves the transport preserves the
+                            paper's retune sequence;
   runtime_async_staleness — bounded-staleness pacing at k in {0,1,2,4}
                             under the SAME Fig. 6 scenario, with a
                             modeled 2 ms compute per worker step so the
@@ -68,6 +75,26 @@ def runtime_fig6_parity() -> Tuple[List[Dict], float]:
     return rows, 1.0 if p["match"] else 0.0
 
 
+def runtime_socket_rounds() -> Tuple[List[Dict], float]:
+    """Round throughput + Fig. 6 parity through the socket backend.
+    Derived is reports/s (gated by a conservative floor); the
+    ``fig6_match`` row is gated exactly — a transport that breaks the
+    180 -> 140 -> 100 sequence fails CI even if it is fast."""
+    from repro.runtime.parity import fig6_parity, run_runtime
+
+    result, _ = run_runtime(steps=40, manager="socket")
+    p = fig6_parity(manager="socket")
+    rows = [
+        {"metric": "rounds", "value": result.rounds},
+        {"metric": "mean_round_latency_us",
+         "value": round(result.mean_round_latency_s * 1e6, 1)},
+        {"metric": "reports_per_s", "value": round(result.reports_per_s, 1)},
+        {"metric": "fig6_match", "value": 1.0 if p["match"] else 0.0},
+        {"metric": "hosts", "value": dict(result.hosts)},
+    ]
+    return rows, round(result.reports_per_s, 1)
+
+
 def runtime_async_staleness() -> Tuple[List[Dict], float]:
     """Reports/s + retune propagation lag vs the staleness bound k
     under the Fig. 6 escalating-interference scenario. k=0 is the
@@ -104,4 +131,5 @@ def runtime_async_staleness() -> Tuple[List[Dict], float]:
 ALL = {"runtime_rounds": runtime_rounds,
        "runtime_retune_lag": runtime_retune_lag,
        "runtime_fig6_parity": runtime_fig6_parity,
+       "runtime_socket_rounds": runtime_socket_rounds,
        "runtime_async_staleness": runtime_async_staleness}

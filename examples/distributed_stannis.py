@@ -17,7 +17,14 @@
             workers never recompile (CheckpointAck.n_compiles == 1).
 
   PYTHONPATH=src python examples/distributed_stannis.py [--steps 12]
-      [--runtime process|local] [--skip-train]
+      [--runtime process|local|socket] [--staleness K] [--skip-train]
+
+``--runtime socket`` runs the same two phases with the coordinator and
+workers speaking length-prefixed frames over real TCP connections (the
+multi-host mesh backend); ``--staleness K`` runs both phases under
+bounded-staleness pacing (grants pipelined K rounds ahead). The CI
+matrix exercises every (runtime, staleness) cell under its own hard
+timeout so a transport-specific hang names its cell.
 """
 from __future__ import annotations
 
@@ -32,32 +39,52 @@ from repro.runtime import EventLoop, FaultAction, MANAGERS, specs_from_plan
 from repro.runtime.parity import fig6_parity
 
 
-def phase1_trace_parity(runtime: str) -> None:
-    print(f"— phase 1: Fig. 6 trace parity through {runtime} workers —")
-    p = fig6_parity(manager=runtime)
+def phase1_trace_parity(runtime: str, staleness: int) -> None:
+    print(f"— phase 1: Fig. 6 trace parity through {runtime} workers "
+          f"(staleness k={staleness}) —")
+    p = fig6_parity(manager=runtime, staleness=staleness)
     print(f"  sim     : {p['sim']}")
     print(f"  runtime : {p['runtime']}")
     assert p["match"], "runtime diverged from the simulator trace"
+    assert p["result"].retune_lags == [staleness + 1] * 2, \
+        f"retune lag {p['result'].retune_lags} != k+1={staleness + 1}"
     seq = [e[2] for e in p["runtime"]] + [p["runtime"][-1][3]]
     print(f"  retune sequence {' -> '.join(map(str, seq))}  "
           f"(paper §III-B worked example)  "
-          f"[{p['result'].reports_per_s:.0f} reports/s]")
+          f"[{p['result'].reports_per_s:.0f} reports/s, "
+          f"lag {p['result'].retune_lags} round(s)]")
+    if p["result"].hosts:
+        print(f"  cluster map: {p['result'].hosts}")
 
 
-def phase2_live_training(runtime: str, steps: int) -> None:
+def phase2_live_training(runtime: str, steps: int,
+                         staleness: int = 0) -> None:
     print(f"\n— phase 2: real jitted training in {runtime} workers, "
-          f"kill + rejoin —")
+          f"kill + rejoin (staleness k={staleness}) —")
     sm = SpeedModel(np.array([1.0, 2, 4, 8]), np.array([10.0, 18, 28, 30]))
     plan = solve({"a": (1, sm), "b": (1, sm)}, dataset_size=4096)
     cp = ControlPlane(plan, [SpeedDeclinePolicy()], liveness_timeout=3)
     specs = specs_from_plan(
         plan, train={"arch": "deepseek-7b", "seq_len": 32, "reduced": True})
     faults = []
-    if steps >= 10:
+    # under run-ahead the dead worker may have pre-delivered up to k
+    # reports, deferring silence-derived detection by at most k rounds —
+    # the restart must land after the latest possible failure round
+    # (kill + k + liveness_timeout) or the rejoin would mask the failure
+    # it is supposed to recover from; when the run is too short to fit
+    # that window (plus a round for the recover event), skip the fault
+    # injection rather than schedule one that cannot be detected
+    restart_floor = 3 + staleness + 3    # kill step + k + liveness
+    if steps >= restart_floor + 2:
+        restart = min(max(steps - 4, restart_floor), steps - 2)
         faults = [FaultAction(3, "kill", "b"),
-                  FaultAction(steps - 4, "restart", "b")]
+                  FaultAction(restart, "restart", "b")]
+    else:
+        print(f"  (steps={steps} too short for kill+rejoin at "
+              f"staleness {staleness}; skipping fault injection)")
     manager = MANAGERS[runtime]()
-    loop = EventLoop(cp, manager, round_timeout=120.0)
+    loop = EventLoop(cp, manager, round_timeout=120.0,
+                     staleness=staleness)
     try:
         manager.start(specs)
         res = loop.run(steps, faults=faults,
@@ -79,15 +106,18 @@ def phase2_live_training(runtime: str, steps: int) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--runtime", choices=("local", "process"),
+    ap.add_argument("--runtime", choices=("local", "process", "socket"),
                     default="process")
     ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="bounded-staleness bound k (0 = synchronous "
+                         "rendezvous)")
     ap.add_argument("--skip-train", action="store_true",
                     help="protocol/parity phase only (no jitted steps)")
     args = ap.parse_args()
-    phase1_trace_parity(args.runtime)
+    phase1_trace_parity(args.runtime, args.staleness)
     if not args.skip_train:
-        phase2_live_training(args.runtime, args.steps)
+        phase2_live_training(args.runtime, args.steps, args.staleness)
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ Wires the whole stack together the way a fleet deployment would:
         -> retune = new row mask + Eq. 1 re-split (no recompile)
         -> checkpoint/auto-resume; bus silence -> elastic mask-out.
 
-Three execution substrates, selected with ``--runtime``:
+Four execution substrates, selected with ``--runtime``:
 
   inproc   the historical single-process loop: real jitted steps, the
            "cluster" simulated at the REPORT level only (interference
@@ -19,7 +19,13 @@ Three execution substrates, selected with ``--runtime``:
   process  the Stannis runtime over REAL worker processes, each running
            the jitted train step at its group's live batch size and
            streaming reports back over a pipe. Faults are real: a killed
-           worker produces genuine bus silence.
+           worker produces genuine bus silence;
+  socket   the multi-host mesh backend: the coordinator listens on
+           ``--listen host:port`` and workers join over TCP — spawned
+           locally by default, or (with ``--external-workers``)
+           standalone ``python -m repro.launch.worker --connect``
+           processes on any machine. Same protocol, framed over the
+           network; a vanished worker is a socket EOF.
 
 ``--interfere`` grammar (comma-separated events):
   csd@20x0.5      capacity 0.5 from step 20, open-ended
@@ -410,12 +416,26 @@ def _run_distributed(args, cfg: TrainerConfig, sm: SpeedModel,
     plan = allocator.solve(_parse_groups(args.groups, sm), cfg.dataset_size)
     train_workers = (args.worker_train == "on"
                      or (args.worker_train == "auto"
-                         and args.runtime == "process"))
+                         and args.runtime in ("process", "socket")))
     train = ({"arch": args.arch, "seq_len": args.seq_len,
               "reduced": not args.full_size} if train_workers else None)
     cp = ControlPlane(plan, [policy_from_config(cfg.hypertune)],
                       cfg=cfg.hypertune, liveness_timeout=3)
-    manager = MANAGERS[args.runtime]()
+    if args.runtime == "socket":
+        from repro.runtime import SocketExecutionManager
+
+        manager = SocketExecutionManager(listen=args.listen,
+                                         spawn=not args.external_workers)
+        print(f"coordinator listening on {manager.endpoint}", flush=True)
+        if args.external_workers:
+            print("waiting for standalone workers — one per group, on "
+                  "any host:", flush=True)
+            for g in plan.batch_sizes():
+                print(f"  python -m repro.launch.worker "
+                      f"--connect {manager.advertised} --group {g}",
+                      flush=True)
+    else:
+        manager = MANAGERS[args.runtime]()
     # training workers jit-compile on their first granted step; a short
     # round deadline would read that compile stall as bus silence and
     # mask healthy groups out, so the auto default is generous
@@ -445,6 +465,9 @@ def _run_distributed(args, cfg: TrainerConfig, sm: SpeedModel,
     if res.staleness:
         print(f"  bounded staleness k={res.staleness}: "
               f"{res.stale_reports} stale report(s) dropped")
+    if res.hosts:
+        for g, where in sorted(res.hosts.items()):
+            print(f"  group {g}: {where}")
     for ack in res.checkpoint_acks[-len(plan.groups):]:
         print(f"  worker {ack.group}: step {ack.worker_step} "
               f"b={ack.batch_size} compiles={ack.n_compiles}")
@@ -463,10 +486,20 @@ def main() -> None:
                          "v=absolute img/s cap, !=dropout)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
-    ap.add_argument("--runtime", choices=("inproc", "local", "process"),
+    ap.add_argument("--runtime",
+                    choices=("inproc", "local", "process", "socket"),
                     default="inproc",
                     help="inproc: single-process loop; local: thread "
-                         "workers; process: real worker processes")
+                         "workers; process: real worker processes; "
+                         "socket: TCP mesh (multi-host capable)")
+    ap.add_argument("--listen", default="127.0.0.1:0", metavar="HOST:PORT",
+                    help="coordinator endpoint for --runtime socket "
+                         "(port 0 = ephemeral; bind 0.0.0.0 for real "
+                         "multi-host runs)")
+    ap.add_argument("--external-workers", action="store_true",
+                    help="with --runtime socket: spawn nothing and wait "
+                         "for standalone workers (python -m "
+                         "repro.launch.worker --connect) to join")
     ap.add_argument("--staleness", type=int, default=0,
                     help="bounded-staleness bound k for the runtime "
                          "coordinator: keep up to k rounds of grants in "
@@ -489,6 +522,11 @@ def main() -> None:
                  "process")
     if args.staleness < 0:
         ap.error("--staleness must be >= 0")
+    if args.runtime != "socket":
+        if args.external_workers:
+            ap.error("--external-workers requires --runtime socket")
+        if args.listen != "127.0.0.1:0":
+            ap.error("--listen requires --runtime socket")
 
     arch = get_arch(args.arch)
     if not args.full_size:

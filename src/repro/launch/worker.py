@@ -1,0 +1,106 @@
+"""Standalone Stannis worker: join a coordinator over TCP.
+
+The multi-host entry point. A worker process on any machine joins a
+coordinator (``repro.launch.train --runtime socket --listen``) knowing
+only the coordinator's endpoint and its own group name:
+
+    PYTHONPATH=src python -m repro.launch.worker \
+        --connect 10.0.0.2:5555 --group csd0
+
+Join handshake (DESIGN.md §12):
+
+  1. connect (with retries — the coordinator may still be binding);
+  2. send a join-request ``Hello`` carrying group, pid, hostname and
+     this side of the TCP connection (the coordinator's cluster map);
+  3. receive ``Welcome`` with the authoritative ``WorkerSpec`` — batch
+     size, speed tables, fault schedule, and the incarnation the
+     coordinator assigns. No shared filesystem, no pickled closures:
+     the spec is wire primitives, JSON-framed;
+  4. run the ordinary ``run_worker`` loop (which opens with its own
+     Hello, confirming the assigned incarnation) until Shutdown or
+     coordinator EOF.
+
+The SAME function (``connect_and_serve``) is the spawn target when
+``SocketExecutionManager`` launches workers itself for CI — a spawned
+local worker and a standalone remote one are byte-identical on the
+wire.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket as _socket
+import time
+from typing import Optional
+
+# parse_endpoint lives with the transport; re-exported here because the
+# CLI surface is where users first meet endpoints
+from repro.runtime.ipc.socket import SocketChannel, parse_endpoint
+from repro.runtime.messages import Hello, Welcome
+from repro.runtime.worker import WorkerSpec, run_worker
+
+__all__ = ["connect_and_serve", "main", "parse_endpoint"]
+
+
+def connect_and_serve(endpoint: str, group: str, incarnation: int = 0,
+                      retry_for: float = 30.0,
+                      hello_timeout: float = 60.0) -> None:
+    """Join the coordinator at ``endpoint`` and run the worker loop
+    until Shutdown / EOF. Spawn target AND standalone main body."""
+    host, port = parse_endpoint(endpoint)
+    sock = _connect_with_retries(host, port, retry_for)
+    chan = SocketChannel(sock)
+    try:
+        local = "%s:%d" % sock.getsockname()[:2]
+        chan.put(Hello(group, os.getpid(), 0, incarnation,
+                       host=_socket.gethostname(), endpoint=local))
+        if not chan.poll(hello_timeout):
+            raise TimeoutError(
+                f"worker {group!r}: no Welcome from {endpoint} within "
+                f"{hello_timeout:.0f}s")
+        msg = chan.get()
+        if not isinstance(msg, Welcome):
+            raise RuntimeError(
+                f"worker {group!r}: expected Welcome, got {msg.kind}")
+        spec = WorkerSpec.from_wire(msg.spec)
+    except Exception:
+        chan.close()
+        raise
+    run_worker(spec, chan)               # closes the channel itself
+
+
+def _connect_with_retries(host: str, port: int,
+                          retry_for: float) -> "_socket.socket":
+    deadline = time.monotonic() + retry_for
+    while True:
+        try:
+            return _socket.create_connection((host, port), timeout=10.0)
+        except OSError:
+            if time.monotonic() >= deadline:
+                raise
+            time.sleep(0.05)
+
+
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Standalone Stannis worker: join a coordinator "
+                    "over TCP (no shared filesystem needed)")
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT",
+                    help="coordinator endpoint (train.py --listen)")
+    ap.add_argument("--group", required=True,
+                    help="node-group name this worker serves (must "
+                         "match a group in the coordinator's plan)")
+    ap.add_argument("--incarnation", type=int, default=0,
+                    help="requested incarnation (the coordinator's "
+                         "Welcome is authoritative)")
+    ap.add_argument("--retry-for", type=float, default=30.0,
+                    help="seconds to retry the initial connect")
+    args = ap.parse_args(argv)
+    print(f"worker {args.group}: connecting to {args.connect}", flush=True)
+    connect_and_serve(args.connect, args.group, args.incarnation,
+                      retry_for=args.retry_for)
+    print(f"worker {args.group}: done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,9 +6,9 @@ speed reports and pushing retuned batch sizes back out. This package is
 that execution substrate (DESIGN.md §10):
 
   messages.py   typed coordinator<->worker wire protocol
-  ipc/          channels over multiprocessing Pipe / Queue
+  ipc/          channels over multiprocessing Pipe / Queue + TCP sockets
   worker.py     the worker loop (+ speed governor, real jitted steps)
-  managers/     thread- and process-based worker lifecycles
+  managers/     thread-, process- and socket-based worker lifecycles
   eventloop.py  the coordinator, owning the existing ControlPlane
   parity.py     sim/runtime trace-parity harness
 """
@@ -16,10 +16,10 @@ from repro.runtime.eventloop import (EventLoop, FaultAction,
                                      RetuneLagTracker, RoundStats,
                                      RuntimeResult, specs_from_plan)
 from repro.runtime.managers import (MANAGERS, ExecutionManager, LocalManager,
-                                    ProcessManager)
+                                    ProcessManager, SocketExecutionManager)
 from repro.runtime.messages import (CheckpointAck, CheckpointRequest, Goodbye,
                                     Hello, Message, Retune, Shutdown,
-                                    StepGrant, StepReportMsg)
+                                    StepGrant, StepReportMsg, Welcome)
 from repro.runtime.worker import (InterferenceSpec, SpeedGovernor,
                                   WorkerSpec, run_worker, worker_entry)
 
@@ -27,8 +27,9 @@ __all__ = [
     "EventLoop", "FaultAction", "RetuneLagTracker", "RoundStats",
     "RuntimeResult", "specs_from_plan",
     "MANAGERS", "ExecutionManager", "LocalManager", "ProcessManager",
+    "SocketExecutionManager",
     "CheckpointAck", "CheckpointRequest", "Goodbye", "Hello", "Message",
-    "Retune", "Shutdown", "StepGrant", "StepReportMsg",
+    "Retune", "Shutdown", "StepGrant", "StepReportMsg", "Welcome",
     "InterferenceSpec", "SpeedGovernor", "WorkerSpec", "run_worker",
     "worker_entry",
 ]

@@ -26,6 +26,14 @@ Per coordinator round the loop
      from the worker-echoed batch size, one pending entry per
      (group, decision step).
 
+The loop is transport-blind: a worker behind a thread pipe, a spawned
+process pipe, or a TCP socket on another host (DESIGN.md §12) receives
+the same StepGrants, Retune row-mask broadcasts and bounded-staleness
+pacing — host identity from the Hello handshake is carried through to
+``RuntimeResult.hosts`` (the cluster map), but never consulted by the
+control flow. That invariance is what the per-transport parity tests
+pin down.
+
 With ``staleness=0`` pacing is the strict rendezvous (grant -> report)
 of PR 2: a fully-live cluster runs with zero timeouts and the round
 sequence is deterministic — the same scenario replayed through
@@ -85,6 +93,9 @@ class RuntimeResult:
     staleness: int = 0
     stale_reports: int = 0               # below-floor arrivals discarded
     acks_dropped: int = 0                # checkpoint acks expired on timeout
+    # group -> worker location ("host@endpoint") from the Hello
+    # handshake: the cluster map on a multi-host (socket) mesh
+    hosts: Dict[str, str] = dataclasses.field(default_factory=dict)
 
     def event_tuples(self):
         return [(e.step, e.group, e.old_batch, e.new_batch, e.reason)
@@ -255,7 +266,8 @@ class EventLoop:
                              list(self._lags), list(self._ckpt_acks),
                              staleness=self.staleness,
                              stale_reports=self._stale_reports,
-                             acks_dropped=self._acks_dropped)
+                             acks_dropped=self._acks_dropped,
+                             hosts=self.manager.hosts())
 
     def shutdown(self) -> None:
         self.manager.shutdown()

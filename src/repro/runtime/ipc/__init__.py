@@ -1,8 +1,11 @@
 """IPC layer for the Stannis runtime: typed channels over
-``multiprocessing`` primitives (DESIGN.md §10)."""
+``multiprocessing`` primitives and TCP sockets (DESIGN.md §10, §12)."""
 from repro.runtime.ipc.base import Channel, ChannelClosed
 from repro.runtime.ipc.pipe import PipeChannel, pipe_pair
 from repro.runtime.ipc.queue import QueueChannel, queue_pair
+from repro.runtime.ipc.socket import (FrameTooLarge, SocketChannel,
+                                      socket_pair)
 
 __all__ = ["Channel", "ChannelClosed", "PipeChannel", "pipe_pair",
-           "QueueChannel", "queue_pair"]
+           "QueueChannel", "queue_pair", "FrameTooLarge", "SocketChannel",
+           "socket_pair"]

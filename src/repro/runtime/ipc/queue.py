@@ -2,10 +2,15 @@
 
 The alternative transport for setups where a duplex pipe is awkward
 (e.g. many-to-one fan-in, or a future cluster backend that replaces the
-queues with a broker). Semantics match :class:`PipeChannel` except that
-a dead peer cannot be detected from the transport itself — the runtime
-already treats that as ordinary silence, so nothing above this layer
-changes.
+queues with a broker). Semantics match :class:`PipeChannel` — including
+close/EOF: a ``multiprocessing.Queue`` has no transport-level peer-death
+signal, so ``close()`` enqueues an EOF *sentinel* that the peer's
+blocked ``get()`` receives and converts into :class:`ChannelClosed`.
+That keeps the liveness contract identical across all three transports
+(pipe, queue, socket): closing the coordinator side always surfaces as
+EOF to a blocked worker recv, never as an indefinite hang. (An
+SIGKILLed peer still cannot be detected here — it never runs ``close``
+— and the runtime already treats that as ordinary silence.)
 """
 from __future__ import annotations
 
@@ -16,6 +21,11 @@ from typing import Optional, Tuple
 from repro.runtime.ipc.base import Channel, ChannelClosed
 from repro.runtime.messages import Message, WireMessage
 
+# the EOF sentinel travels the queue like any wire tuple; the kind is
+# reserved (no Message subclass registers it) so it can never collide
+# with a real message
+_EOF_KIND = "__channel_eof__"
+
 
 class QueueChannel(Channel):
     def __init__(self, inbox: "multiprocessing.Queue",
@@ -24,30 +34,55 @@ class QueueChannel(Channel):
         self._outbox = outbox
         self._peeked: Optional[WireMessage] = None
         self._closed = False
+        self._peer_closed = False
 
     def put(self, message: Message) -> None:
         if self._closed:
             raise ChannelClosed("channel closed")
+        if self._peer_closed:
+            raise ChannelClosed("peer closed")
         self._outbox.put(message.to_wire())
 
     def poll(self, timeout: float = 0.0) -> bool:
-        if self._peeked is not None:
-            return True
+        if self._closed:
+            return False
+        if self._peeked is not None or self._peer_closed:
+            return True                  # EOF is delivered by get()
         try:
-            self._peeked = self._inbox.get(
+            wire = self._inbox.get(
                 timeout=timeout) if timeout else self._inbox.get_nowait()
-            return True
         except _queue.Empty:
             return False
+        if wire and wire[0] == _EOF_KIND:
+            # record EOF at peek time: a put() between this poll and the
+            # next get() must already raise, not enqueue into the void
+            self._peer_closed = True
+        else:
+            self._peeked = wire
+        return True
 
     def get(self) -> Message:
+        if self._closed:
+            raise ChannelClosed("channel closed")
+        if self._peer_closed:
+            raise ChannelClosed("peer closed (EOF)")
         if self._peeked is None:
-            self._peeked = self._inbox.get()
-        wire, self._peeked = self._peeked, None
+            wire = self._inbox.get()
+        else:
+            wire, self._peeked = self._peeked, None
+        if wire and wire[0] == _EOF_KIND:
+            self._peer_closed = True
+            raise ChannelClosed("peer closed (EOF)")
         return Message.from_wire(wire)
 
     def close(self) -> None:
+        if self._closed:
+            return
         self._closed = True
+        try:                             # wake a peer blocked in get()
+            self._outbox.put_nowait((_EOF_KIND, {}))
+        except (ValueError, OSError, _queue.Full):
+            pass                         # peer torn down already
 
 
 def queue_pair() -> Tuple[QueueChannel, QueueChannel]:

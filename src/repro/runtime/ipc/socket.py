@@ -1,0 +1,206 @@
+"""Socket-backed channel: length-prefixed frames over a TCP stream.
+
+The third transport (after Pipe and Queue), and the first that crosses a
+host boundary: both ends hold a connected ``socket.socket`` and every
+:class:`~repro.runtime.messages.Message` travels as one *frame* —
+
+    [4-byte big-endian payload length][JSON-encoded wire tuple]
+
+The wire tuples are already primitives-only (``messages.py`` was
+designed for exactly this), so JSON is a faithful encoding: a frame
+decoded on another host reconstructs the same dataclass the in-process
+transports deliver. TCP gives ordering and reliability; the framing
+layer restores message boundaries on top of the byte stream, coping
+with partial reads, frames split across ``recv()`` calls, and several
+frames arriving in one ``recv()``.
+
+Liveness contract (shared with PipeChannel, and — after the EOF
+sentinel fix — QueueChannel): a peer that goes away surfaces as
+:class:`ChannelClosed` from ``get()``; ``poll()`` reports a
+readable-but-EOF socket as True so the EOF is always *delivered*, never
+silently swallowed. An abrupt close mid-frame (peer died between two
+``send()``s) is also ChannelClosed — a truncated frame is never handed
+to the protocol layer. Frames above ``max_frame`` are rejected on both
+sides (:class:`FrameTooLarge`): a corrupt or hostile length prefix must
+not make the coordinator allocate gigabytes.
+"""
+from __future__ import annotations
+
+import json
+import select
+import socket as _socket
+import struct
+import time
+from collections import deque
+from typing import Deque, Optional, Tuple
+
+from repro.runtime.ipc.base import Channel, ChannelClosed
+from repro.runtime.messages import Message, WireMessage
+
+_HEADER = struct.Struct(">I")
+MAX_FRAME = 16 * 1024 * 1024             # 16 MiB: far above any message
+_RECV_CHUNK = 65536
+
+
+def parse_endpoint(text: str) -> Tuple[str, int]:
+    """``"host:port"`` -> (host, port). Bare ``":port"`` means all
+    interfaces (listen) / localhost (connect)."""
+    host, sep, port = text.rpartition(":")
+    if not sep or not port.isdigit():
+        raise ValueError(f"bad endpoint {text!r}: expected host:port")
+    return host or "127.0.0.1", int(port)
+
+
+class FrameTooLarge(ChannelClosed):
+    """A frame exceeded ``max_frame`` (send or receive side). Subclasses
+    ChannelClosed so the runtime treats the peer as gone — a stream with
+    a corrupt length prefix cannot be resynchronized."""
+
+
+def encode_frame(wire: WireMessage, max_frame: int = MAX_FRAME) -> bytes:
+    payload = json.dumps(wire, separators=(",", ":")).encode("utf-8")
+    if len(payload) > max_frame:
+        raise FrameTooLarge(
+            f"outgoing frame of {len(payload)} bytes exceeds the "
+            f"{max_frame}-byte limit")
+    return _HEADER.pack(len(payload)) + payload
+
+
+class SocketChannel(Channel):
+    def __init__(self, sock: "_socket.socket",
+                 max_frame: int = MAX_FRAME) -> None:
+        sock.settimeout(None)            # framing assumes blocking ops
+        try:
+            sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
+        except OSError:
+            pass                         # e.g. an AF_UNIX socketpair
+        self._sock: Optional["_socket.socket"] = sock
+        self.max_frame = max_frame
+        self._buf = bytearray()
+        self._ready: Deque[WireMessage] = deque()
+        self._eof = False
+        self._error: Optional[ChannelClosed] = None
+        self._closed = False
+
+    # -- send -----------------------------------------------------------
+    def put(self, message: Message) -> None:
+        if self._closed or self._sock is None:
+            raise ChannelClosed("channel closed")
+        if self._eof or self._error is not None:
+            # TCP happily buffers the first send after a peer close (the
+            # RST lands later); once EOF HAS been observed, sending is a
+            # protocol error and must say so, like a closed pipe does
+            raise ChannelClosed("peer closed")
+        frame = encode_frame(message.to_wire(), self.max_frame)
+        try:
+            self._sock.sendall(frame)
+        except OSError as e:
+            raise ChannelClosed(str(e)) from e
+
+    # -- receive --------------------------------------------------------
+    def poll(self, timeout: float = 0.0) -> bool:
+        if self._ready or self._eof or self._error is not None:
+            return True
+        if self._closed or self._sock is None:
+            return False
+        deadline = None if timeout <= 0 else time.monotonic() + timeout
+        while True:
+            wait = 0.0 if deadline is None else \
+                max(deadline - time.monotonic(), 0.0)
+            try:
+                readable, _, _ = select.select([self._sock], [], [], wait)
+            except (OSError, ValueError):
+                self._eof = True         # fd torn down under us
+                return True
+            if not readable:
+                return False
+            if self._recv_once():
+                return True
+            if deadline is not None and time.monotonic() >= deadline:
+                return bool(self._ready or self._eof
+                            or self._error is not None)
+
+    def get(self) -> Message:
+        while True:
+            if self._ready:
+                return Message.from_wire(self._ready.popleft())
+            if self._error is not None:
+                raise self._error
+            if self._eof:
+                raise ChannelClosed("EOF")
+            if self._closed or self._sock is None:
+                raise ChannelClosed("channel closed")
+            self._recv_once()            # blocking
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        sock, self._sock = self._sock, None
+        if sock is not None:
+            try:
+                sock.shutdown(_socket.SHUT_RDWR)
+            except OSError:
+                pass
+            sock.close()
+
+    # ------------------------------------------------------------------
+    def _recv_once(self) -> bool:
+        """One ``recv()`` into the reassembly buffer; decode whatever
+        complete frames it yields. Returns True when ``get`` would now
+        not block (a message, EOF, or a framing error is pending)."""
+        try:
+            chunk = self._sock.recv(_RECV_CHUNK)
+        except OSError as e:
+            self._error = ChannelClosed(str(e))
+            return True
+        if not chunk:
+            if self._buf:                # peer died mid-frame
+                self._error = ChannelClosed(
+                    f"peer closed mid-frame ({len(self._buf)} bytes "
+                    f"of an incomplete frame buffered)")
+            self._eof = True
+            return True
+        self._buf += chunk
+        self._drain_buffer()
+        return bool(self._ready or self._error is not None)
+
+    def _drain_buffer(self) -> None:
+        """Slice every complete frame out of the reassembly buffer."""
+        while True:
+            if len(self._buf) < _HEADER.size:
+                return
+            (length,) = _HEADER.unpack_from(self._buf)
+            if length > self.max_frame:
+                self._error = FrameTooLarge(
+                    f"incoming frame announces {length} bytes, above "
+                    f"the {self.max_frame}-byte limit")
+                self._buf.clear()
+                return
+            if len(self._buf) < _HEADER.size + length:
+                return                   # frame still split across recvs
+            payload = bytes(self._buf[_HEADER.size:_HEADER.size + length])
+            del self._buf[:_HEADER.size + length]
+            try:
+                wire = json.loads(payload.decode("utf-8"))
+            except (ValueError, UnicodeDecodeError) as e:
+                self._error = ChannelClosed(f"undecodable frame: {e}")
+                self._buf.clear()
+                return
+            self._ready.append(wire)
+
+
+def socket_pair(max_frame: int = MAX_FRAME
+                ) -> Tuple[SocketChannel, SocketChannel]:
+    """A connected (coordinator_end, worker_end) pair over a real TCP
+    loopback socket — the framing path under test is byte-identical to
+    a cross-host connection."""
+    listener = _socket.socket(_socket.AF_INET, _socket.SOCK_STREAM)
+    try:
+        listener.bind(("127.0.0.1", 0))
+        listener.listen(1)
+        client = _socket.create_connection(listener.getsockname())
+        server, _ = listener.accept()
+    finally:
+        listener.close()
+    return SocketChannel(server, max_frame), SocketChannel(client, max_frame)

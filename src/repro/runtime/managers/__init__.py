@@ -3,8 +3,11 @@ from repro.runtime.managers.base import (ExecutionManager, HandshakeTimeout,
                                          WorkerHandle)
 from repro.runtime.managers.local import LocalManager
 from repro.runtime.managers.process import ProcessManager
+from repro.runtime.managers.socket import SocketExecutionManager
 
-MANAGERS = {"local": LocalManager, "process": ProcessManager}
+MANAGERS = {"local": LocalManager, "process": ProcessManager,
+            "socket": SocketExecutionManager}
 
 __all__ = ["ExecutionManager", "HandshakeTimeout", "WorkerHandle",
-           "LocalManager", "ProcessManager", "MANAGERS"]
+           "LocalManager", "ProcessManager", "SocketExecutionManager",
+           "MANAGERS"]

@@ -8,13 +8,16 @@ remote host.
 
 Manager matrix:
 
-  ==============  =========  ==========  ======================
-  manager         substrate  kill        suspend/resume
-  ==============  =========  ==========  ======================
-  LocalManager    threads    channel     no (use spec.silence)
-                             close
-  ProcessManager  processes  SIGKILL     SIGSTOP / SIGCONT
-  ==============  =========  ==========  ======================
+  ======================  ============  ==========  ===================
+  manager                 substrate     kill        suspend/resume
+  ======================  ============  ==========  ===================
+  LocalManager            threads       channel     no (use
+                                        close       spec.silence)
+  ProcessManager          processes     SIGKILL     SIGSTOP / SIGCONT
+  SocketExecutionManager  TCP sockets;  SIGKILL /   SIGSTOP / SIGCONT
+                          spawned or    socket      (spawned workers
+                          remote procs  close=EOF   only)
+  ======================  ============  ==========  ===================
 """
 from __future__ import annotations
 
@@ -38,6 +41,15 @@ class WorkerHandle:
     alive: bool = True
     incarnation: int = 0
     pid: Optional[int] = None
+    host: str = ""                       # worker's hostname (Hello)
+    endpoint: str = ""                   # transport address, if any
+
+    def host_id(self) -> str:
+        """Human-readable worker location: ``host@endpoint``, ``host``,
+        or "" for an anonymous in-process worker."""
+        if self.host and self.endpoint:
+            return f"{self.host}@{self.endpoint}"
+        return self.host or self.endpoint
 
 
 class ExecutionManager(abc.ABC):
@@ -89,6 +101,14 @@ class ExecutionManager(abc.ABC):
     def live(self) -> Dict[str, WorkerHandle]:
         return {g: h for g, h in self.workers.items() if h.alive}
 
+    def hosts(self) -> Dict[str, str]:
+        """group -> worker location (``host@endpoint``), for every
+        worker that announced one in its Hello. On a multi-host mesh
+        this is the cluster map; in-process managers report the local
+        hostname."""
+        return {g: h.host_id() for g, h in self.workers.items()
+                if h.host_id()}
+
     def mark_dead(self, group: str) -> None:
         h = self.workers.get(group)
         if h is not None and h.alive:
@@ -124,3 +144,5 @@ class ExecutionManager(abc.ABC):
                 f"{handle.spec.group}: expected Hello, got {msg.kind}")
         handle.pid = msg.pid
         handle.incarnation = msg.incarnation
+        handle.host = msg.host or handle.host
+        handle.endpoint = msg.endpoint or handle.endpoint

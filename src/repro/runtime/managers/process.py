@@ -27,7 +27,41 @@ from repro.runtime.managers.base import ExecutionManager, WorkerHandle
 from repro.runtime.worker import WorkerSpec, worker_entry
 
 
-class ProcessManager(ExecutionManager):
+class SpawnedProcessFaults:
+    """Shared fault surface for managers whose workers are spawn-context
+    processes (``self._procs``: {group: Process}) — the SIGKILL + join,
+    SIGSTOP/SIGCONT, and join-then-force-stop teardown semantics live
+    here ONCE, for both the pipe (ProcessManager) and socket
+    (SocketExecutionManager) transports."""
+
+    _procs: dict
+
+    def _kill_proc(self, group: str) -> None:
+        proc = self._procs.get(group)
+        if proc is not None and proc.is_alive():
+            proc.kill()
+            proc.join(timeout=10.0)
+
+    def _signal_proc(self, group: str, sig: int) -> bool:
+        """Signal the group's spawned process if it exists; False when
+        the group has no local process (e.g. a standalone socket
+        worker, which the caller cannot signal)."""
+        proc = self._procs.get(group)
+        if proc is None:
+            return False
+        if proc.pid and proc.is_alive():
+            os.kill(proc.pid, sig)
+        return True
+
+    def _join_all(self) -> None:
+        for proc in self._procs.values():
+            proc.join(timeout=10.0)
+            if proc.is_alive():                  # wedged: force-stop
+                proc.kill()
+                proc.join(timeout=5.0)
+
+
+class ProcessManager(SpawnedProcessFaults, ExecutionManager):
     name = "process"
 
     def __init__(self, hello_timeout: float = 120.0) -> None:
@@ -46,25 +80,11 @@ class ProcessManager(ExecutionManager):
         return WorkerHandle(spec, PipeChannel(coord_conn))
 
     def kill(self, group: str) -> None:
-        proc = self._procs.get(group)
-        if proc is not None and proc.is_alive():
-            proc.kill()
-            proc.join(timeout=10.0)
+        self._kill_proc(group)
         self.mark_dead(group)
 
     def suspend(self, group: str) -> None:
-        proc = self._procs.get(group)
-        if proc is not None and proc.pid and proc.is_alive():
-            os.kill(proc.pid, signal.SIGSTOP)
+        self._signal_proc(group, signal.SIGSTOP)
 
     def resume(self, group: str) -> None:
-        proc = self._procs.get(group)
-        if proc is not None and proc.pid and proc.is_alive():
-            os.kill(proc.pid, signal.SIGCONT)
-
-    def _join_all(self) -> None:
-        for group, proc in self._procs.items():
-            proc.join(timeout=10.0)
-            if proc.is_alive():                  # wedged: force-stop
-                proc.kill()
-                proc.join(timeout=5.0)
+        self._signal_proc(group, signal.SIGCONT)

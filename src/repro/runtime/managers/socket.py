@@ -1,0 +1,175 @@
+"""Socket-based execution manager: the multi-host mesh backend.
+
+The coordinator owns one listening TCP socket; every worker — whether a
+spawn-context process this manager launches itself (CI mode), or a
+standalone ``python -m repro.launch.worker --connect host:port``
+process on another machine — dials in and completes the same
+rendezvous (DESIGN.md §12):
+
+  worker  -> coordinator   Hello    join request: group + host identity
+  coordinator -> worker    Welcome  the authoritative WorkerSpec (batch,
+                                    speed tables, fault schedule,
+                                    assigned incarnation)
+  worker  -> coordinator   Hello    run_worker's opening Hello, stamped
+                                    with the assigned incarnation
+                                    (consumed by the base-class
+                                    handshake, like every transport)
+
+Nothing above the Channel ABC changes: the EventLoop paces StepGrants,
+buckets reports and broadcasts Retune row-masks over a SocketChannel
+exactly as it does over a Pipe — which is the point. Fig. 6 parity and
+bounded-staleness semantics are transport invariants, proven again in
+tests/test_runtime_socket.py.
+
+Fault surface (spawn mode — the real thing, like ProcessManager):
+  * ``kill``    — SIGKILL. The kernel closes the worker's socket, the
+                  coordinator reads EOF: disconnect IS the failure
+                  signal, no message needed.
+  * ``suspend`` — SIGSTOP. The connection stays open but goes silent —
+                  the wedged-node failure mode only silence-derived
+                  liveness can see.
+  * ``restart`` — a NEW connection completes the rendezvous with an
+                  incremented incarnation (reconnect-with-new-
+                  incarnation); the predecessor's stale life is
+                  distinguishable by that incarnation everywhere.
+
+With ``spawn=False`` the manager launches nothing and waits for
+standalone workers to dial in — the genuine two-host mode (a
+``restart`` then blocks until a replacement worker connects, e.g. a
+supervisor relaunching ``repro.launch.worker`` on the dead host).
+"""
+from __future__ import annotations
+
+import multiprocessing
+import signal
+import socket as _socket
+import time
+from typing import Dict, Optional, Tuple
+
+from repro.runtime.ipc.socket import SocketChannel, parse_endpoint
+from repro.runtime.managers.base import (ExecutionManager, HandshakeTimeout,
+                                         WorkerHandle)
+from repro.runtime.managers.process import SpawnedProcessFaults
+from repro.runtime.messages import Hello, Welcome
+from repro.runtime.worker import WorkerSpec
+
+
+class SocketExecutionManager(SpawnedProcessFaults, ExecutionManager):
+    name = "socket"
+
+    def __init__(self, listen: str = "127.0.0.1:0", spawn: bool = True,
+                 hello_timeout: float = 120.0,
+                 advertise: Optional[str] = None) -> None:
+        """``listen`` is ``host:port`` (port 0 = ephemeral). ``spawn``
+        launches one local worker process per spec (CI mode); False
+        waits for standalone workers to connect. ``advertise`` is the
+        endpoint spawned workers dial (defaults to the bound address,
+        with wildcard hosts rewritten to loopback)."""
+        super().__init__(hello_timeout)
+        host, port = parse_endpoint(listen)
+        self._listener = _socket.socket(_socket.AF_INET,
+                                        _socket.SOCK_STREAM)
+        self._listener.setsockopt(_socket.SOL_SOCKET,
+                                  _socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(16)
+        bound_host, bound_port = self._listener.getsockname()[:2]
+        self.endpoint = f"{bound_host}:{bound_port}"
+        if advertise is not None:
+            self.advertised = advertise
+        elif bound_host in ("0.0.0.0", "::", ""):
+            self.advertised = f"{_socket.gethostname()}:{bound_port}"
+        else:
+            self.advertised = self.endpoint
+        self._spawn = spawn
+        self._ctx = multiprocessing.get_context("spawn")
+        self._procs: Dict[str, "multiprocessing.Process"] = {}
+        # connections whose join-Hello named a group we are not (yet)
+        # launching: kept until their spec's _launch claims them
+        self._parked: Dict[str, Tuple[SocketChannel, Hello]] = {}
+
+    # -- lifecycle ------------------------------------------------------
+    def _launch(self, spec: WorkerSpec) -> WorkerHandle:
+        if self._spawn:
+            from repro.launch.worker import connect_and_serve
+
+            proc = self._ctx.Process(
+                target=connect_and_serve,
+                args=(self.advertised, spec.group, spec.incarnation),
+                name=f"stannis-sock-{spec.group}", daemon=True)
+            proc.start()
+            self._procs[spec.group] = proc
+        chan, join = self._accept_group(spec.group)
+        chan.put(Welcome(spec.to_wire()))    # coordinator-authoritative
+        handle = WorkerHandle(spec, chan)
+        handle.host = join.host
+        handle.endpoint = join.endpoint
+        return handle
+
+    def _accept_group(self, group: str) -> Tuple[SocketChannel, Hello]:
+        """Accept connections until one's join-Hello names ``group``;
+        park the rest (standalone workers dial in in arbitrary order)."""
+        deadline = time.monotonic() + self.hello_timeout
+        while group not in self._parked:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise HandshakeTimeout(
+                    f"{group}: no worker connected to {self.endpoint} "
+                    f"within {self.hello_timeout:.0f}s")
+            self._listener.settimeout(remaining)
+            try:
+                sock, addr = self._listener.accept()
+            except _socket.timeout:
+                continue
+            except OSError as e:
+                raise HandshakeTimeout(f"{group}: listener died: {e}") \
+                    from e
+            chan = SocketChannel(sock)
+            # small per-connection Hello budget: a stray silent
+            # connection (port scanner, health check) must not starve
+            # genuine workers waiting in the listen backlog for the
+            # whole handshake deadline
+            hello_wait = min(5.0, max(deadline - time.monotonic(), 0.01))
+            if not chan.poll(hello_wait):
+                chan.close()             # connected but never said Hello
+                continue
+            try:
+                msg = chan.get()
+            except Exception:
+                chan.close()
+                continue
+            if not isinstance(msg, Hello):
+                chan.close()
+                continue
+            msg.endpoint = msg.endpoint or f"{addr[0]}:{addr[1]}"
+            old = self._parked.pop(msg.group, None)
+            if old is not None:
+                old[0].close()           # superseded duplicate join
+            self._parked[msg.group] = (chan, msg)
+        return self._parked.pop(group)
+
+    # -- fault injection (spawned-process semantics shared with
+    # ProcessManager via SpawnedProcessFaults) --------------------------
+    def kill(self, group: str) -> None:
+        self._kill_proc(group)           # kernel closes its socket: EOF
+        self.mark_dead(group)            # external worker: our close=EOF
+
+    def suspend(self, group: str) -> None:
+        if not self._signal_proc(group, signal.SIGSTOP):
+            raise NotImplementedError(
+                "socket manager cannot suspend standalone workers")
+
+    def resume(self, group: str) -> None:
+        if not self._signal_proc(group, signal.SIGCONT):
+            raise NotImplementedError(
+                "socket manager cannot resume standalone workers")
+
+    # -- teardown -------------------------------------------------------
+    def shutdown(self) -> None:
+        try:
+            super().shutdown()
+        finally:
+            for chan, _ in self._parked.values():
+                chan.close()
+            self._parked.clear()
+            self._listener.close()

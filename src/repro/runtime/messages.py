@@ -4,12 +4,15 @@ Every coordinator<->worker exchange is one of the dataclasses below,
 serialized as a ``(kind, field-dict)`` tuple of primitives. No closures,
 lambdas or live objects ever cross a process boundary — a spawn-context
 worker (which shares no memory with the coordinator) deserializes the
-same bytes a thread worker does, and a future socket transport could
-json-encode them unchanged.
+same bytes a thread worker does, and the socket transport
+(``ipc/socket.py``) JSON-encodes them unchanged into length-prefixed
+frames for cross-host runs.
 
 The protocol (one synchronous round):
 
   worker     -> coordinator   Hello          once, on (re)join
+  coordinator -> worker       Welcome        socket rendezvous only:
+                                             the authoritative WorkerSpec
   coordinator -> worker       StepGrant      paces the round (logical clock)
   worker     -> coordinator   StepReportMsg  one per granted round
   coordinator -> worker       Retune         broadcast after a plan change
@@ -57,13 +60,35 @@ class Message:
 class Hello(Message):
     """Worker announces itself (join / rejoin). ``incarnation`` counts
     restarts so the coordinator can tell a rejoined worker from a stale
-    late message of its previous life."""
+    late message of its previous life. ``host``/``endpoint`` carry the
+    worker's identity on a multi-host mesh (hostname and its side of
+    the transport, e.g. ``"10.0.0.7:51312"`` for a socket worker) —
+    empty for the in-process transports, where the identity is the
+    process itself."""
 
     kind: ClassVar[str] = "hello"
     group: str
     pid: int
     batch_size: int
     incarnation: int = 0
+    host: str = ""
+    endpoint: str = ""
+
+
+@register
+@dataclasses.dataclass
+class Welcome(Message):
+    """Coordinator's reply to a socket worker's join-request Hello: the
+    authoritative :class:`~repro.runtime.worker.WorkerSpec` as wire
+    primitives, including the incarnation the coordinator assigns.
+    Standalone workers (``python -m repro.launch.worker --connect``)
+    join knowing only their group name and learn everything else —
+    batch size, speed tables, fault schedule — from this message, so a
+    real multi-host run needs no shared filesystem. The in-process
+    transports never send it (their specs travel at spawn time)."""
+
+    kind: ClassVar[str] = "welcome"
+    spec: Dict
 
 
 @register

@@ -14,7 +14,11 @@ Parity claims (asserted in tests/test_runtime*.py and reported by
   * a worker kill/restart cycle through ``ProcessManager`` produces the
     same failure -> recover event pair (same steps, same batch sizes)
     as the simulator's ``Dropout`` path — liveness derived from genuine
-    IPC silence instead of modeled silence.
+    IPC silence instead of modeled silence;
+  * both claims hold bit-for-bit when the transport is a real TCP
+    socket (``manager="socket"``): the same scenario over length-
+    prefixed network frames, disconnect surfacing as EOF and restarts
+    reconnecting with a new incarnation (tests/test_runtime_socket.py).
 """
 from __future__ import annotations
 

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import socket as _socket
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -181,14 +182,20 @@ class TrainExecutor:
 
 
 def run_worker(spec: WorkerSpec, chan: Channel) -> None:
-    """The worker loop (thread and process entry point share it)."""
+    """The worker loop (thread and process entry point share it).
+
+    The TrainExecutor is built on the FIRST StepGrant, not before the
+    Hello: the handshake must never wait on model init / jit compile
+    (a manager's ``hello_timeout`` is a liveness bound, while the
+    compile stall is already covered by the coordinator's generous
+    ``round_timeout`` for training runs)."""
     gov = SpeedGovernor(spec.interference, spec.silence)
     sm = spec.speed_model()
-    executor = TrainExecutor(spec) if spec.train else None
+    executor: Optional[TrainExecutor] = None
     worker_step = 0
     try:
         chan.put(Hello(spec.group, os.getpid(), spec.batch_size,
-                       spec.incarnation))
+                       spec.incarnation, host=_socket.gethostname()))
         while True:
             msg = chan.get()
             if isinstance(msg, Shutdown):
@@ -204,6 +211,8 @@ def run_worker(spec: WorkerSpec, chan: Channel) -> None:
                     executor.n_compiles if executor else 0))
                 continue
             if isinstance(msg, StepGrant):
+                if executor is None and spec.train:
+                    executor = TrainExecutor(spec)
                 report = _one_step(spec, gov, sm, executor, msg.step)
                 worker_step += 1
                 if report is not None:

@@ -26,6 +26,7 @@ Acceptance anchors (ISSUE 4, bounded staleness):
 from __future__ import annotations
 
 import threading
+import time
 
 import pytest
 
@@ -36,7 +37,7 @@ from repro.runtime.ipc import ChannelClosed, pipe_pair, queue_pair
 from repro.runtime.managers.base import ExecutionManager, WorkerHandle
 from repro.runtime.messages import (CheckpointAck, CheckpointRequest, Goodbye,
                                     Hello, Message, Retune, Shutdown,
-                                    StepGrant, StepReportMsg)
+                                    StepGrant, StepReportMsg, Welcome)
 from repro.runtime.parity import (dropout_parity, fig6_parity, run_runtime,
                                   run_sim)
 from repro.runtime.worker import InterferenceSpec, SpeedGovernor, WorkerSpec
@@ -50,6 +51,9 @@ from repro.runtime.worker import InterferenceSpec, SpeedGovernor, WorkerSpec
 class TestMessages:
     @pytest.mark.parametrize("msg", [
         Hello("xeon0", 1234, 180, incarnation=2),
+        Hello("csd0", 99, 180, incarnation=1, host="node-a",
+              endpoint="10.0.0.7:51312"),
+        Welcome({"group": "csd0", "batch_size": 180, "capacity": 180}),
         StepGrant(7),
         StepGrant(7, staleness=3),
         StepReportMsg(7, "xeon0", 31.13, cpu_util=0.8, batch_size=180,
@@ -94,14 +98,70 @@ class TestChannels:
         assert a.get() == StepGrant(3)
         assert not a.poll(0.0)
 
-    def test_pipe_eof_raises_channel_closed(self):
-        a, b = pipe_pair()
+    @pytest.mark.parametrize("pair", [pipe_pair, queue_pair])
+    def test_eof_raises_channel_closed(self, pair):
+        """One liveness contract across transports (pipe AND queue —
+        sockets are covered in test_runtime_socket.py): closing one
+        side surfaces as readable EOF, then ChannelClosed from get()
+        and put()."""
+        a, b = pair()
         b.close()
         assert a.poll(1.0)                       # EOF is readable
         with pytest.raises(ChannelClosed):
             a.get()
         with pytest.raises(ChannelClosed):
             a.put(StepGrant(0))
+
+    def test_queue_close_wakes_blocked_peer_recv(self):
+        """Regression (ISSUE 5): the queue transport used to close
+        purely locally — a worker blocked in get() hung forever when
+        the coordinator went away. The EOF sentinel must wake it with
+        ChannelClosed, matching what a closed socket does."""
+        coord, worker = queue_pair()
+        outcome = []
+
+        def blocked_recv():
+            try:
+                worker.get()
+                outcome.append("message")
+            except ChannelClosed:
+                outcome.append("eof")
+
+        t = threading.Thread(target=blocked_recv, daemon=True)
+        t.start()
+        time.sleep(0.1)                  # ensure the recv is blocked
+        assert t.is_alive()
+        coord.close()
+        t.join(timeout=5.0)
+        assert not t.is_alive(), "peer recv never woke on close"
+        assert outcome == ["eof"]
+
+    def test_queue_poll_then_put_after_eof_raises(self):
+        """poll() may be what first observes the EOF sentinel — a put()
+        issued before the next get() must already raise instead of
+        enqueueing a message nobody will ever read (the pipe and socket
+        transports raise on this ordering too)."""
+        coord, worker = queue_pair()
+        coord.close()
+        assert worker.poll(1.0)          # EOF observed via poll
+        with pytest.raises(ChannelClosed):
+            worker.put(StepGrant(0))
+        with pytest.raises(ChannelClosed):
+            worker.get()
+
+    def test_queue_messages_before_close_still_delivered(self):
+        """The EOF sentinel queues BEHIND in-flight messages: a close
+        right after a send must not eat the send."""
+        coord, worker = queue_pair()
+        coord.put(StepGrant(4))
+        coord.close()
+        assert worker.get() == StepGrant(4)
+        with pytest.raises(ChannelClosed):
+            worker.get()
+        # EOF is sticky: poll keeps reporting readable, get keeps raising
+        assert worker.poll(0.0)
+        with pytest.raises(ChannelClosed):
+            worker.get()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,372 @@
+"""Stannis runtime over TCP sockets: the multi-host mesh backend.
+
+Acceptance anchors (ISSUE 5):
+  * the Fig. 6 escalating-interference scenario through the socket
+    backend yields the EXACT 180 -> 140 -> 100 retune sequence, with
+    sim/runtime trace parity at staleness 0 AND 2 — transport is a real
+    network socket, the event stream is bit-for-bit the simulator's;
+  * a worker kill/restart cycle through the socket manager produces the
+    same failure -> recover pair as the simulator's Dropout path, with
+    the restarted worker reconnecting under a NEW incarnation;
+  * a vanished peer surfaces as EOF (disconnect IS the failure signal);
+  * SocketChannel framing survives the byte-stream pathologies: partial
+    reads, frames split across recv() boundaries, several frames in one
+    recv(), oversized-frame rejection, abrupt close mid-frame;
+  * standalone workers (``python -m repro.launch.worker --connect``)
+    complete the same rendezvous with no shared filesystem.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import socket as _socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.allocator import solve
+from repro.core.control import ControlPlane, SpeedDeclinePolicy
+from repro.core.speed_model import SpeedModel
+from repro.launch.worker import connect_and_serve, parse_endpoint
+from repro.runtime import (EventLoop, FaultAction, SocketExecutionManager,
+                           specs_from_plan)
+from repro.runtime.ipc import ChannelClosed, FrameTooLarge, SocketChannel, \
+    socket_pair
+from repro.runtime.ipc.socket import _HEADER, encode_frame
+from repro.runtime.messages import Hello, Retune, StepGrant, StepReportMsg
+from repro.runtime.parity import dropout_parity, fig6_parity, run_runtime
+
+
+def _raw_pair():
+    """(SocketChannel, raw socket.socket) — the raw end lets tests
+    write arbitrary byte sequences at the framing layer."""
+    listener = _socket.socket(_socket.AF_INET, _socket.SOCK_STREAM)
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(1)
+    client = _socket.create_connection(listener.getsockname())
+    server, _ = listener.accept()
+    listener.close()
+    return SocketChannel(server), client
+
+
+# ---------------------------------------------------------------------------
+# framing edge cases (satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestSocketFraming:
+    def test_roundtrip_and_poll(self):
+        a, b = socket_pair()
+        try:
+            assert not a.poll(0.0)
+            b.put(StepGrant(3))
+            assert a.poll(1.0)
+            assert a.get() == StepGrant(3)
+            assert not a.poll(0.0)
+        finally:
+            a.close()
+            b.close()
+
+    def test_every_message_kind_roundtrips_over_json_frames(self):
+        a, b = socket_pair()
+        msgs = [
+            Hello("csd0", 77, 180, incarnation=2, host="node-a",
+                  endpoint="10.0.0.7:51312"),
+            StepGrant(7, staleness=3),
+            StepReportMsg(7, "csd0", 31.13, cpu_util=0.8, batch_size=180,
+                          wall_dt=0.5, loss=3.2),
+            Retune(9, {"csd0": 140, "host": 180}, group="csd0",
+                   reason="decline"),
+        ]
+        try:
+            for m in msgs:
+                b.put(m)
+            for m in msgs:
+                got = a.get()
+                assert got == m and type(got) is type(m)
+        finally:
+            a.close()
+            b.close()
+
+    def test_partial_reads_reassemble_one_frame(self):
+        """A frame trickling in byte-by-byte (header included) must
+        reassemble into exactly one message."""
+        chan, raw = _raw_pair()
+        try:
+            frame = encode_frame(StepGrant(11).to_wire())
+            for i in range(len(frame)):
+                raw.sendall(frame[i:i + 1])
+                time.sleep(0.001 if i < 6 else 0)  # stress header split
+            assert chan.poll(2.0)
+            assert chan.get() == StepGrant(11)
+            assert not chan.poll(0.0)
+        finally:
+            chan.close()
+            raw.close()
+
+    def test_messages_split_and_coalesced_across_recv_boundaries(self):
+        """Two frames sent as [frame1 + half of frame2][rest of frame2]:
+        the first recv yields one message plus a partial, the second
+        completes it — no bytes lost, no boundary invented."""
+        chan, raw = _raw_pair()
+        try:
+            f1 = encode_frame(StepGrant(1).to_wire())
+            f2 = encode_frame(
+                StepReportMsg(1, "g", 8.0, batch_size=8).to_wire())
+            cut = len(f2) // 2
+            raw.sendall(f1 + f2[:cut])
+            assert chan.poll(2.0)
+            assert chan.get() == StepGrant(1)
+            assert not chan.poll(0.05)           # second frame incomplete
+            raw.sendall(f2[cut:])
+            assert chan.poll(2.0)
+            assert chan.get() == StepReportMsg(1, "g", 8.0, batch_size=8)
+        finally:
+            chan.close()
+            raw.close()
+
+    def test_oversized_incoming_frame_rejected(self):
+        """A hostile/corrupt length prefix must not make the receiver
+        buffer gigabytes: the frame is rejected and the channel treated
+        as dead (FrameTooLarge is a ChannelClosed)."""
+        chan, raw = _raw_pair()
+        chan.max_frame = 64
+        try:
+            raw.sendall(_HEADER.pack(1 << 20) + b"x" * 128)
+            assert chan.poll(2.0)
+            with pytest.raises(FrameTooLarge):
+                chan.get()
+        finally:
+            chan.close()
+            raw.close()
+
+    def test_oversized_outgoing_frame_rejected(self):
+        a, b = socket_pair(max_frame=64)
+        try:
+            with pytest.raises(FrameTooLarge):
+                a.put(Retune(0, {f"g{i}": i for i in range(100)}))
+            a.put(StepGrant(0))                  # channel still usable
+            assert b.get() == StepGrant(0)
+        finally:
+            a.close()
+            b.close()
+
+    def test_abrupt_close_mid_frame_is_channel_closed(self):
+        """Peer dies between two sends of one frame: the truncated frame
+        must surface as ChannelClosed, never as a decoded message."""
+        chan, raw = _raw_pair()
+        try:
+            frame = encode_frame(StepGrant(5).to_wire())
+            raw.sendall(frame[:len(frame) - 3])
+            raw.close()
+            assert chan.poll(2.0)                # EOF is readable
+            with pytest.raises(ChannelClosed):
+                chan.get()
+        finally:
+            chan.close()
+
+    def test_undecodable_payload_is_channel_closed(self):
+        chan, raw = _raw_pair()
+        try:
+            raw.sendall(_HEADER.pack(4) + b"\xff\xfe\x00\x01")
+            assert chan.poll(2.0)
+            with pytest.raises(ChannelClosed):
+                chan.get()
+        finally:
+            chan.close()
+            raw.close()
+
+    def test_clean_eof_semantics_match_pipe(self):
+        a, b = socket_pair()
+        b.close()
+        assert a.poll(1.0)                       # EOF is readable
+        with pytest.raises(ChannelClosed):
+            a.get()
+        with pytest.raises(ChannelClosed):
+            a.put(StepGrant(0))
+        a.close()
+
+    def test_frame_wire_format_is_length_prefixed_json(self):
+        """The wire format is a public contract (standalone workers on
+        other hosts speak it): 4-byte big-endian length + UTF-8 JSON of
+        the (kind, fields) wire tuple."""
+        frame = encode_frame(StepGrant(7, staleness=2).to_wire())
+        (length,) = struct.unpack(">I", frame[:4])
+        assert length == len(frame) - 4
+        kind, fields = json.loads(frame[4:].decode("utf-8"))
+        assert kind == "grant"
+        assert fields == {"step": 7, "staleness": 2}
+
+
+# ---------------------------------------------------------------------------
+# trace parity through the socket backend (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+
+class TestSocketTraceParity:
+    @pytest.mark.parametrize("k", [0, 2])
+    def test_fig6_exact_sequence_at_staleness(self, k):
+        """The paper's 180 -> 140 -> 100 over a REAL network socket, at
+        the synchronous rendezvous (k=0) and under run-ahead (k=2):
+        event streams identical to ClusterSim(staleness=k), retunes
+        reaching the remote workers in exactly k+1 rounds."""
+        p = fig6_parity(manager="socket", staleness=k)
+        assert [(g, ob, nb, r) for (_, g, ob, nb, r) in p["runtime"]] == [
+            ("xeon0", 180, 140, "decline"),
+            ("xeon0", 140, 100, "decline"),
+        ]
+        assert p["match"], (p["sim"], p["runtime"])
+        assert p["result"].retune_lags == [k + 1, k + 1]
+        assert p["result"].stale_reports == 0
+
+    @pytest.mark.parametrize("k", [0, 2])
+    def test_kill_restart_matches_sim_dropout(self, k):
+        """SIGKILL closes the worker's socket — the coordinator reads
+        EOF, bus silence masks the group out, and the restarted worker
+        RECONNECTS (a brand-new TCP connection, new incarnation) at its
+        knee. At k=0 the events equal the sim Dropout pair exactly; at
+        k=2 pre-delivered run-ahead reports may defer detection by at
+        most k rounds (the bounded-staleness guarantee)."""
+        d = dropout_parity(manager="socket", fault_mode="kill",
+                           staleness=k)
+        events = d["runtime"]
+        assert [(g, r) for (_, g, _, _, r) in events] == \
+            [("xeon1", "failure"), ("xeon1", "recover")]
+        fail, recover = events
+        if k == 0:
+            assert d["match"], (d["sim"], d["runtime"])
+            assert fail == (7, "xeon1", 180, 0, "failure")
+        else:
+            assert 7 <= fail[0] <= 7 + k, events
+            assert fail[2:4] == (180, 0)
+        assert recover == (20, "xeon1", 0, 180, "recover")
+
+    def test_silence_dropout_matches_sim(self):
+        d = dropout_parity(manager="socket", fault_mode="silence")
+        assert d["match"], (d["sim"], d["runtime"])
+
+    def test_healthy_cluster_full_reports_and_cluster_map(self):
+        result, events = run_runtime(steps=15, manager="socket",
+                                     staleness=1)
+        assert events == []
+        assert result.reports_total == 15 * 3
+        assert all(s.n_reports == 3 for s in result.round_stats)
+        # the Hello handshake populated the cluster map: every group has
+        # a host identity with a real TCP endpoint
+        assert set(result.hosts) == {"xeon0", "xeon1", "xeon2"}
+        for where in result.hosts.values():
+            host, _, endpoint = where.partition("@")
+            assert host and ":" in endpoint
+
+
+# ---------------------------------------------------------------------------
+# manager: EOF liveness, reconnect incarnations, standalone workers
+# ---------------------------------------------------------------------------
+
+
+def _one_group_plan():
+    sm = SpeedModel(np.array([1.0, 4, 8]), np.array([2.0, 6, 8]))
+    return solve({"g": (1, sm)}, 512)
+
+
+class TestSocketManager:
+    def test_disconnect_surfaces_as_eof(self):
+        """Kill the worker process OUT FROM UNDER the manager (no
+        bookkeeping involved): the kernel closes its socket and the
+        coordinator-side channel must deliver ChannelClosed — the
+        liveness contract all three transports share."""
+        plan = _one_group_plan()
+        mgr = SocketExecutionManager()
+        try:
+            mgr.start(specs_from_plan(plan))
+            handle = mgr.workers["g"]
+            assert handle.pid and handle.pid != os.getpid()
+            os.kill(handle.pid, signal.SIGKILL)
+            deadline = time.monotonic() + 10.0
+            while time.monotonic() < deadline:
+                if handle.channel.poll(0.2):
+                    break
+            with pytest.raises(ChannelClosed):
+                while True:              # drain any pre-death reports
+                    handle.channel.get()
+        finally:
+            mgr.shutdown()
+
+    def test_restart_reconnects_with_new_incarnation(self):
+        """kill -> restart is a NEW TCP connection whose rendezvous
+        carries incarnation 1; the coordinator's bookkeeping and the
+        worker's own Hello agree on it."""
+        plan = _one_group_plan()
+        cp = ControlPlane(plan, [SpeedDeclinePolicy()], liveness_timeout=3)
+        mgr = SocketExecutionManager()
+        loop = EventLoop(cp, mgr, round_timeout=2.0)
+        try:
+            mgr.start(specs_from_plan(plan))
+            first_endpoint = mgr.workers["g"].endpoint
+            assert mgr.workers["g"].incarnation == 0
+            res = loop.run(12, faults=[FaultAction(2, "kill", "g"),
+                                       FaultAction(7, "restart", "g")])
+        finally:
+            loop.shutdown()
+        assert [e.reason for e in res.events] == ["failure", "recover"]
+        handle = mgr.workers["g"]
+        assert handle.incarnation == 1
+        assert handle.spec.incarnation == 1
+        # a genuinely new connection, not a reused one
+        assert handle.endpoint and handle.endpoint != first_endpoint
+
+    def test_standalone_worker_joins_by_endpoint_only(self):
+        """spawn=False: the manager launches nothing. A standalone
+        worker knowing ONLY host:port + group (the repro.launch.worker
+        contract — no shared filesystem, no inherited state) completes
+        the rendezvous and serves real rounds."""
+        plan = _one_group_plan()
+        cp = ControlPlane(plan, [SpeedDeclinePolicy()], liveness_timeout=3)
+        mgr = SocketExecutionManager(spawn=False, hello_timeout=30.0)
+        host, port = parse_endpoint(mgr.endpoint)
+        t = threading.Thread(
+            target=connect_and_serve,
+            args=(f"{host}:{port}", "g"), daemon=True)
+        t.start()
+        loop = EventLoop(cp, mgr, round_timeout=5.0)
+        try:
+            mgr.start(specs_from_plan(plan))
+            assert mgr.workers["g"].endpoint      # cluster-map identity
+            res = loop.run(5)
+        finally:
+            loop.shutdown()
+        t.join(timeout=10.0)
+        assert not t.is_alive()          # Shutdown reached the worker
+        assert res.reports_total == 5
+        assert res.events == []
+
+    def test_out_of_order_joins_are_parked(self):
+        """Two standalone workers dialing in in the WRONG order: the
+        rendezvous parks the early one and hands each spec its own
+        connection."""
+        sm = SpeedModel(np.array([1.0, 4, 8]), np.array([2.0, 6, 8]))
+        plan = solve({"a": (1, sm), "b": (1, sm)}, 512)
+        cp = ControlPlane(plan, [SpeedDeclinePolicy()])
+        mgr = SocketExecutionManager(spawn=False, hello_timeout=30.0)
+        threads = []
+        # start "b" first although start() will rendezvous "a" first
+        for group in ("b", "a"):
+            t = threading.Thread(target=connect_and_serve,
+                                 args=(mgr.endpoint, group), daemon=True)
+            t.start()
+            threads.append(t)
+            time.sleep(0.1)
+        loop = EventLoop(cp, mgr, round_timeout=5.0)
+        try:
+            mgr.start(specs_from_plan(plan))
+            assert set(mgr.workers) == {"a", "b"}
+            res = loop.run(4)
+        finally:
+            loop.shutdown()
+        for t in threads:
+            t.join(timeout=10.0)
+        assert res.reports_total == 4 * 2
