@@ -19,9 +19,11 @@ conservative (CI runners are slower and noisier than dev machines):
 they gate regressions an order of magnitude out, not run-to-run jitter.
 
 Besides the gate, ``--history BENCH_history.jsonl`` appends this run's
-headline metrics (reports/s for the pipe and socket transports, the
-async speedup, the gate verdict, commit/run identity from the GitHub
-env) to a JSONL trajectory file and prints the recorded trend — CI
+headline metrics (reports/s for the pipe and socket transports plus the
+socket json/k=0 compatibility row, the async speedup, the negotiated
+default wire codec and its report frame size, the gate verdict,
+commit/run identity from the GitHub env) to a JSONL trajectory file and
+prints the recorded trend — CI
 persists that file across runs via artifacts, so a regression shows as
 a *declining trajectory*, not just a floor breach (ROADMAP follow-up
 from PR 4).
@@ -101,7 +103,11 @@ def check(bench: Dict, floors: Dict) -> List[str]:
 HISTORY_METRICS = {
     "reports_per_s": "runtime_rounds.reports_per_s",
     "socket_reports_per_s": "runtime_socket_rounds.reports_per_s",
+    "json_sync_reports_per_s":
+        "runtime_socket_rounds.reports_per_s_json_sync",
     "async_speedup": "runtime_async_staleness.derived",
+    "codec": "wire_codec.default_codec",
+    "wire_bytes_per_frame": "wire_codec.default_bytes_per_frame",
 }
 
 
@@ -143,16 +149,25 @@ def append_and_print_history(path: str, bench: Dict, ok: bool,
     print(f"bench trajectory ({len(records)} run(s) recorded, "
           f"showing last {len(shown)}):")
     print(f"  {'run':>6} {'commit':<12} {'pipe rep/s':>11} "
-          f"{'sock rep/s':>11} {'async x':>8}  gate")
+          f"{'sock rep/s':>11} {'json k0':>9} {'async x':>8} "
+          f"{'codec':>7} {'B/frm':>5}  gate")
     for r in shown:
         def col(key, width, fmt="{:.1f}"):
             v = r.get(key)
-            return ("-" if v is None else fmt.format(float(v))).rjust(width)
+            if v is None:
+                return "-".rjust(width)
+            try:
+                return fmt.format(float(v)).rjust(width)
+            except (TypeError, ValueError):     # string-valued metric
+                return str(v).rjust(width)
         print(f"  {str(r.get('run') or '-'):>6} "
               f"{(r.get('commit') or '-'):<12} "
               f"{col('reports_per_s', 11)} "
               f"{col('socket_reports_per_s', 11)} "
-              f"{col('async_speedup', 8, '{:.3f}')}  "
+              f"{col('json_sync_reports_per_s', 9)} "
+              f"{col('async_speedup', 8, '{:.3f}')} "
+              f"{col('codec', 7)} "
+              f"{col('wire_bytes_per_frame', 5, '{:.0f}')}  "
               f"{'ok' if r.get('ok') else 'FAIL'}")
 
 

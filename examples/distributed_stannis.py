@@ -17,14 +17,18 @@
             workers never recompile (CheckpointAck.n_compiles == 1).
 
   PYTHONPATH=src python examples/distributed_stannis.py [--steps 12]
-      [--runtime process|local|socket] [--staleness K] [--skip-train]
+      [--runtime process|local|socket] [--staleness K]
+      [--codec auto|json|binary|msgpack] [--skip-train]
 
 ``--runtime socket`` runs the same two phases with the coordinator and
 workers speaking length-prefixed frames over real TCP connections (the
 multi-host mesh backend); ``--staleness K`` runs both phases under
-bounded-staleness pacing (grants pipelined K rounds ahead). The CI
-matrix exercises every (runtime, staleness) cell under its own hard
-timeout so a transport-specific hang names its cell.
+bounded-staleness pacing (grants pipelined K rounds ahead); ``--codec``
+caps the socket wire codec instead of letting the rendezvous negotiate
+the best one (``--codec json`` is the old-worker compatibility canary,
+DESIGN.md §13). The CI matrix exercises every (runtime, staleness)
+cell — plus the socket binary-codec and json-canary cells — under its
+own hard timeout so a transport-specific hang names its cell.
 """
 from __future__ import annotations
 
@@ -39,10 +43,14 @@ from repro.runtime import EventLoop, FaultAction, MANAGERS, specs_from_plan
 from repro.runtime.parity import fig6_parity
 
 
-def phase1_trace_parity(runtime: str, staleness: int) -> None:
+def phase1_trace_parity(runtime: str, staleness: int,
+                        mgr_kwargs: dict = {}) -> None:
     print(f"— phase 1: Fig. 6 trace parity through {runtime} workers "
-          f"(staleness k={staleness}) —")
-    p = fig6_parity(manager=runtime, staleness=staleness)
+          f"(staleness k={staleness}"
+          + (f", codec={mgr_kwargs['codec']}" if "codec" in mgr_kwargs
+             else "") + ") —")
+    p = fig6_parity(manager=runtime, staleness=staleness,
+                    manager_kwargs=mgr_kwargs)
     print(f"  sim     : {p['sim']}")
     print(f"  runtime : {p['runtime']}")
     assert p["match"], "runtime diverged from the simulator trace"
@@ -58,7 +66,8 @@ def phase1_trace_parity(runtime: str, staleness: int) -> None:
 
 
 def phase2_live_training(runtime: str, steps: int,
-                         staleness: int = 0) -> None:
+                         staleness: int = 0,
+                         mgr_kwargs: dict = {}) -> None:
     print(f"\n— phase 2: real jitted training in {runtime} workers, "
           f"kill + rejoin (staleness k={staleness}) —")
     sm = SpeedModel(np.array([1.0, 2, 4, 8]), np.array([10.0, 18, 28, 30]))
@@ -82,7 +91,7 @@ def phase2_live_training(runtime: str, steps: int,
     else:
         print(f"  (steps={steps} too short for kill+rejoin at "
               f"staleness {staleness}; skipping fault injection)")
-    manager = MANAGERS[runtime]()
+    manager = MANAGERS[runtime](**mgr_kwargs)
     loop = EventLoop(cp, manager, round_timeout=120.0,
                      staleness=staleness)
     try:
@@ -112,12 +121,25 @@ def main() -> None:
     ap.add_argument("--staleness", type=int, default=0,
                     help="bounded-staleness bound k (0 = synchronous "
                          "rendezvous)")
+    ap.add_argument("--codec", default="auto",
+                    choices=("auto", "json", "binary", "msgpack"),
+                    help="cap the socket wire codec (auto = negotiate "
+                         "the best both ends speak; json = the "
+                         "old-worker compatibility canary)")
     ap.add_argument("--skip-train", action="store_true",
                     help="protocol/parity phase only (no jitted steps)")
     args = ap.parse_args()
-    phase1_trace_parity(args.runtime, args.staleness)
+    mgr_kwargs = {}
+    if args.codec != "auto":
+        if args.runtime != "socket":
+            ap.error("--codec applies to --runtime socket only (the "
+                     "in-process transports exchange objects, not "
+                     "framed bytes)")
+        mgr_kwargs = {"codec": args.codec}
+    phase1_trace_parity(args.runtime, args.staleness, mgr_kwargs)
     if not args.skip_train:
-        phase2_live_training(args.runtime, args.steps, args.staleness)
+        phase2_live_training(args.runtime, args.steps, args.staleness,
+                             mgr_kwargs)
 
 
 if __name__ == "__main__":

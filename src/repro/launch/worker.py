@@ -35,6 +35,7 @@ from typing import Optional
 
 # parse_endpoint lives with the transport; re-exported here because the
 # CLI surface is where users first meet endpoints
+from repro.runtime.ipc.codec import supported
 from repro.runtime.ipc.socket import SocketChannel, parse_endpoint
 from repro.runtime.messages import Hello, Welcome
 from repro.runtime.worker import WorkerSpec, run_worker
@@ -52,8 +53,11 @@ def connect_and_serve(endpoint: str, group: str, incarnation: int = 0,
     chan = SocketChannel(sock)
     try:
         local = "%s:%d" % sock.getsockname()[:2]
+        # the join Hello carries this build's codec offer; the
+        # rendezvous itself is always json (DESIGN.md §13)
         chan.put(Hello(group, os.getpid(), 0, incarnation,
-                       host=_socket.gethostname(), endpoint=local))
+                       host=_socket.gethostname(), endpoint=local,
+                       codecs=supported()))
         if not chan.poll(hello_timeout):
             raise TimeoutError(
                 f"worker {group!r}: no Welcome from {endpoint} within "
@@ -62,6 +66,7 @@ def connect_and_serve(endpoint: str, group: str, incarnation: int = 0,
         if not isinstance(msg, Welcome):
             raise RuntimeError(
                 f"worker {group!r}: expected Welcome, got {msg.kind}")
+        chan.set_codec(msg.codec)        # coordinator's pick, from here on
         spec = WorkerSpec.from_wire(msg.spec)
     except Exception:
         chan.close()

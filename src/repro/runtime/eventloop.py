@@ -55,11 +55,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.allocator import BatchPlan
 from repro.core.control import ControlPlane, RetuneEvent, StepBuckets, \
     StepReport
-from repro.runtime.ipc import ChannelClosed
+from repro.runtime.ipc import ChannelClosed, wait_readable
+from repro.runtime.ipc.shm import (BulkUnavailable, ShmBulkReader,
+                                   inline_ref, resolve_bulk)
 from repro.runtime.managers.base import ExecutionManager
 from repro.runtime.messages import (CheckpointAck, CheckpointRequest, Goodbye,
-                                    Hello, Message, Retune, StepGrant,
-                                    StepReportMsg)
+                                    Hello, Message, ReportBatch, Retune,
+                                    StepGrant, StepReportMsg)
 from repro.runtime.worker import InterferenceSpec, WorkerSpec
 
 
@@ -219,6 +221,9 @@ class EventLoop:
         self._expected: Dict[int, Dict[str, int]] = {}
         self._granted_hi: Dict[str, int] = {}    # group -> highest granted
         self._stale_reports = 0
+        # lazy shm attach: only built when a CheckpointAck actually
+        # carries a shm bulk reference (same-host workers, DESIGN.md §13)
+        self._bulk: Optional[ShmBulkReader] = None
 
     # ------------------------------------------------------------------
     def run(self, rounds: int, faults: Sequence[FaultAction] = (),
@@ -270,7 +275,12 @@ class EventLoop:
                              hosts=self.manager.hosts())
 
     def shutdown(self) -> None:
-        self.manager.shutdown()
+        try:
+            self.manager.shutdown()
+        finally:
+            if self._bulk is not None:
+                self._bulk.close()
+                self._bulk = None
 
     # ------------------------------------------------------------------
     def _apply_faults(self, step: int, faults: Sequence[FaultAction]) -> None:
@@ -329,6 +339,10 @@ class EventLoop:
         resumed worker's backlog flush) are discarded as stale."""
         deadline = time.perf_counter() + self.round_timeout
         while True:
+            # bucket already complete (a run-ahead worker's batch landed
+            # during an earlier round's drain): zero syscalls this round
+            if not self._missing(step):
+                break
             progressed = self._pump(step)
             missing = self._missing(step)
             if not missing:
@@ -337,14 +351,15 @@ class EventLoop:
             if now >= deadline:
                 break
             if not progressed:
-                # event-driven wait: block on one owing worker's channel
-                # (releases the GIL, wakes the instant data lands)
-                # instead of sleeping a fixed quantum
-                handle = self.manager.workers[missing[0]]
-                try:
-                    handle.channel.poll(min(0.002, deadline - now))
-                except ChannelClosed:
-                    self.manager.mark_dead(missing[0])
+                # event-driven wait over EVERY owing worker at once: one
+                # select() wakes the instant any of them produces data
+                # (or EOFs). The old form blocked on missing[0] alone,
+                # serializing the wait on one worker while others sat
+                # readable — measurable at staleness > 0, where rounds
+                # complete out of order.
+                wait_readable(
+                    [self.manager.workers[n].channel for n in missing],
+                    deadline - now)
         self._expected.pop(step, None)
         return self._buckets.pop(step)
 
@@ -365,14 +380,31 @@ class EventLoop:
 
     def _pump(self, floor: Optional[int]) -> bool:
         """Drain every live worker's channel, routing messages. Returns
-        True when anything arrived."""
+        True when anything arrived.
+
+        The readiness sweep is ONE ``wait_readable(..., 0.0)`` (a single
+        select over every worker fd) rather than a per-channel
+        ``poll(0.0)`` — on the syscall-bound coordinator hot path the
+        N-per-sweep selects were measurable. Only ready channels are
+        then drained, in name order for determinism."""
         progressed = False
-        for name in sorted(self.manager.live()):
+        live = sorted(self.manager.live())
+        ready = wait_readable(
+            [self.manager.workers[n].channel for n in live], 0.0)
+        ready_ids = {id(c) for c in ready}
+        for name in live:
             handle = self.manager.workers[name]
+            chan = handle.channel
+            if id(chan) not in ready_ids:
+                continue
             try:
-                while handle.channel.poll(0.0):
-                    self._route(name, handle.channel.get(), floor)
+                while chan.poll(0.0):
+                    self._route(name, chan.get(), floor)
                     progressed = True
+                    # frames already reassembled in-process (several per
+                    # recv under coalescing) drain without re-selecting
+                    while chan.has_buffered():
+                        self._route(name, chan.get(), floor)
             except ChannelClosed:
                 self.manager.mark_dead(name)
                 progressed = True
@@ -389,7 +421,27 @@ class EventLoop:
                 return
             if not self._buckets.add(msg.step, name, msg):
                 self._stale_reports += 1
+        elif isinstance(msg, ReportBatch):
+            # a coalesced run-ahead window: bucket report by report, in
+            # order — semantics identical to k single frames
+            if floor is None:
+                return
+            for rep in msg.unpack():
+                if not self._buckets.add(rep.step, name, rep):
+                    self._stale_reports += 1
         elif isinstance(msg, CheckpointAck):
+            if msg.state is not None and msg.state and msg.state[0] == "shm":
+                # normalize the shm reference to inline bytes NOW, while
+                # the worker's ring still holds the chunk; consumers of
+                # RuntimeResult.checkpoint_acks only ever see the inline
+                # form (or None when the segment is already gone)
+                if self._bulk is None:
+                    self._bulk = ShmBulkReader()
+                try:
+                    msg.state = inline_ref(resolve_bulk(msg.state,
+                                                        self._bulk))
+                except BulkUnavailable:
+                    msg.state = None
             self._ckpt_acks.append(msg)
             pend = self._awaiting_acks.get(msg.step)
             if pend is not None:

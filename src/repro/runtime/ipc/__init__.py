@@ -1,11 +1,21 @@
 """IPC layer for the Stannis runtime: typed channels over
-``multiprocessing`` primitives and TCP sockets (DESIGN.md §10, §12)."""
-from repro.runtime.ipc.base import Channel, ChannelClosed
+``multiprocessing`` primitives and TCP sockets, pluggable wire codecs,
+and a shared-memory bulk plane (DESIGN.md §10, §12, §13)."""
+from repro.runtime.ipc.base import Channel, ChannelClosed, wait_readable
+from repro.runtime.ipc.codec import (CODECS, Codec, CodecError,
+                                     DEFAULT_CODEC, negotiate, supported)
 from repro.runtime.ipc.pipe import PipeChannel, pipe_pair
 from repro.runtime.ipc.queue import QueueChannel, queue_pair
+from repro.runtime.ipc.shm import (BulkUnavailable, ShmBulkPlane,
+                                   ShmBulkReader, bulk_bytes, publish_bulk,
+                                   resolve_bulk)
 from repro.runtime.ipc.socket import (FrameTooLarge, SocketChannel,
                                       socket_pair)
 
-__all__ = ["Channel", "ChannelClosed", "PipeChannel", "pipe_pair",
-           "QueueChannel", "queue_pair", "FrameTooLarge", "SocketChannel",
-           "socket_pair"]
+__all__ = ["Channel", "ChannelClosed", "wait_readable",
+           "Codec", "CodecError", "CODECS", "DEFAULT_CODEC", "negotiate",
+           "supported",
+           "PipeChannel", "pipe_pair", "QueueChannel", "queue_pair",
+           "BulkUnavailable", "ShmBulkPlane", "ShmBulkReader",
+           "bulk_bytes", "publish_bulk", "resolve_bulk",
+           "FrameTooLarge", "SocketChannel", "socket_pair"]

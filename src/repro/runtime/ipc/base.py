@@ -11,6 +11,9 @@ transport-specific exception.
 from __future__ import annotations
 
 import abc
+import select
+import time
+from typing import List, Sequence
 
 from repro.runtime.messages import Message
 
@@ -42,3 +45,67 @@ class Channel(abc.ABC):
     @abc.abstractmethod
     def close(self) -> None:
         """Close this end. Idempotent."""
+
+    # -- multi-channel readiness (used by wait_readable) ---------------
+    def fileno(self) -> int:
+        """An OS-selectable fd for this channel, or -1 when it has none
+        (then :func:`wait_readable` degrades to polling it)."""
+        return -1
+
+    def has_buffered(self) -> bool:
+        """True when a message (or a deliverable EOF) is ALREADY
+        buffered in this process — i.e. ``poll(0.0)`` would be True
+        without touching the OS."""
+        return False
+
+
+def wait_readable(channels: Sequence[Channel],
+                  timeout: float) -> List[Channel]:
+    """Wait until any of ``channels`` is readable; returns the ready
+    subset (possibly empty on timeout).
+
+    The coordinator's fan-in primitive: one ``select()`` over every
+    worker fd instead of polling channels one at a time — the
+    first-missing-channel poll loop this replaces serialized its wait
+    on one worker while others sat ready. Buffered messages win
+    immediately (transport reassembly buffers are invisible to
+    ``select``); channels with no fd (QueueChannel) are covered by a
+    short per-channel poll slice. Any select() failure (an fd torn down
+    mid-wait) conservatively reports ALL fd channels ready — callers
+    re-poll per channel anyway, and a dead channel must surface as
+    readable-EOF, never as an invisible hang."""
+    ready = [c for c in channels if c.has_buffered()]
+    if ready:
+        return ready
+    by_fd = {}
+    unpollable = []
+    for c in channels:
+        fd = c.fileno()
+        if fd >= 0:
+            by_fd[fd] = c
+        else:
+            unpollable.append(c)
+    deadline = time.monotonic() + max(timeout, 0.0)
+    # with fd-less channels in the mix the wait degrades to short
+    # slices so they are re-polled between selects / sleeps; an
+    # all-fd set (the common case) selects for the full timeout
+    slice_ = 0.002 if unpollable else max(timeout, 0.0)
+    while True:
+        remaining = max(deadline - time.monotonic(), 0.0)
+        wait = min(slice_, remaining)
+        if by_fd:
+            try:
+                readable, _, _ = select.select(list(by_fd), [], [], wait)
+            except (OSError, ValueError):
+                # torn-down fd mid-wait: report every fd channel ready —
+                # callers re-poll, and the dead one must surface as
+                # readable-EOF, never as an invisible hang
+                return list(by_fd.values())
+            ready = [by_fd[fd] for fd in readable]
+        else:
+            if wait:
+                time.sleep(wait)
+            ready = []
+        ready.extend(c for c in unpollable if c.poll(0.0))
+        if ready or remaining <= wait:
+            return ready

@@ -1,0 +1,318 @@
+"""Pluggable wire codecs for the Stannis transports (DESIGN.md §13).
+
+A :class:`Codec` turns one :data:`~repro.runtime.messages.WireMessage`
+tuple into frame-payload bytes and back. The framing layer (length
+prefix, reassembly, max-frame enforcement — ``ipc/socket.py``) is codec
+blind: it slices payloads out of the byte stream and hands them here.
+
+Three codecs:
+
+  ``json``     the compatibility baseline — UTF-8 JSON of the
+               ``(kind, field-dict)`` tuple, byte-identical to the
+               pre-codec wire format. Every peer speaks it; every
+               rendezvous starts in it.
+  ``binary``   struct-packed header ``[kind id u8][flags u8][body len
+               u32]`` + the message's field values as one flat tuple in
+               declared field order (``Message._fields``), packed by a
+               small self-contained type-tagged packer (no third-party
+               dependency).
+  ``msgpack``  the same header and flat tuple with the body packed by
+               ``msgpack`` — faster and denser, but optional: when the
+               module is missing the codec is simply not offered and
+               negotiation lands on ``binary``.
+
+The body encoding is self-describing via the header ``flags`` byte, so
+a ``msgpack``-capable peer decodes ``binary`` bodies and vice versa —
+but negotiation (:func:`negotiate`) still pins ONE codec per channel so
+golden-bytes tests can assert exact frames.
+
+Negotiation is coordinator-authoritative: the worker's Hello carries
+its preference-ordered offer (:func:`supported`), the coordinator
+intersects it with its own preference and announces the pick in
+Welcome. An empty offer (an old worker) or an unknown name degrades to
+``json`` — old workers keep joining a binary-default coordinator.
+"""
+from __future__ import annotations
+
+import abc
+import json
+import struct
+from typing import ClassVar, Dict, List, Optional
+
+from repro.runtime.messages import _REGISTRY, _WIRE_IDS, WireMessage
+
+try:                                     # optional, never required
+    import msgpack as _msgpack
+except ImportError:                      # pragma: no cover
+    _msgpack = None
+
+
+class CodecError(ValueError):
+    """A payload that cannot be decoded (or a value that cannot be
+    encoded) under this codec. The channel layer converts it into
+    ChannelClosed: a peer producing undecodable frames is as gone as a
+    disconnected one — the stream cannot be resynchronized."""
+
+
+class Codec(abc.ABC):
+    """One wire encoding: WireMessage tuple <-> frame payload bytes."""
+
+    name: ClassVar[str] = "base"
+
+    @abc.abstractmethod
+    def encode(self, wire: WireMessage) -> bytes:
+        """Frame payload for one wire tuple."""
+
+    @abc.abstractmethod
+    def decode(self, payload: bytes) -> WireMessage:
+        """Wire tuple from one frame payload. Raises CodecError."""
+
+
+class JsonCodec(Codec):
+    """The pre-codec wire format, unchanged: UTF-8 JSON of the
+    ``(kind, fields)`` tuple with compact separators."""
+
+    name = "json"
+
+    def encode(self, wire: WireMessage) -> bytes:
+        return json.dumps(wire, separators=(",", ":")).encode("utf-8")
+
+    def decode(self, payload: bytes) -> WireMessage:
+        try:
+            kind, fields = json.loads(payload.decode("utf-8"))
+        except (ValueError, TypeError, UnicodeDecodeError) as e:
+            raise CodecError(f"undecodable json frame: {e}") from e
+        if not isinstance(kind, str) or not isinstance(fields, dict):
+            raise CodecError(
+                f"json frame is not a (kind, fields) wire tuple: "
+                f"({type(kind).__name__}, {type(fields).__name__})")
+        if kind not in _REGISTRY:
+            raise CodecError(f"unknown message kind {kind!r}")
+        return kind, fields
+
+
+# -- binary codec -----------------------------------------------------------
+
+# [kind id u8][flags u8][body length u32] — kind ids live next to the
+# message registry (messages.py) so they cannot drift from it
+_BHEADER = struct.Struct(">BBI")
+_FLAG_MSGPACK = 0x01
+
+# type-tagged flatpack: the no-dependency body encoding. One tag byte
+# per value; containers carry a u32 count, strings/bytes a u32 length.
+_TAG_NONE = b"N"
+_TAG_TRUE = b"T"
+_TAG_FALSE = b"F"
+_TAG_INT = b"i"                          # i64, big-endian
+_TAG_FLOAT = b"f"                        # f64, big-endian
+_TAG_STR = b"s"
+_TAG_BYTES = b"b"
+_TAG_LIST = b"l"
+_TAG_DICT = b"d"
+_I64 = struct.Struct(">q")
+_F64 = struct.Struct(">d")
+_U32 = struct.Struct(">I")
+
+
+def _pack_value(out: List[bytes], value) -> None:
+    if value is None:
+        out.append(_TAG_NONE)
+    elif value is True:
+        out.append(_TAG_TRUE)
+    elif value is False:
+        out.append(_TAG_FALSE)
+    elif isinstance(value, int):
+        out.append(_TAG_INT + _I64.pack(value))
+    elif isinstance(value, float):
+        out.append(_TAG_FLOAT + _F64.pack(value))
+    elif isinstance(value, str):
+        raw = value.encode("utf-8")
+        out.append(_TAG_STR + _U32.pack(len(raw)) + raw)
+    elif isinstance(value, (bytes, bytearray)):
+        out.append(_TAG_BYTES + _U32.pack(len(value)) + bytes(value))
+    elif isinstance(value, (list, tuple)):
+        out.append(_TAG_LIST + _U32.pack(len(value)))
+        for item in value:
+            _pack_value(out, item)
+    elif isinstance(value, dict):
+        out.append(_TAG_DICT + _U32.pack(len(value)))
+        for k, v in value.items():
+            _pack_value(out, k)
+            _pack_value(out, v)
+    else:
+        raise CodecError(
+            f"flatpack cannot encode {type(value).__name__} "
+            f"(wire values must be primitives)")
+
+
+def flatpack(values: List) -> bytes:
+    out: List[bytes] = []
+    _pack_value(out, values)
+    return b"".join(out)
+
+
+class _Cursor:
+    __slots__ = ("buf", "pos")
+
+    def __init__(self, buf: bytes) -> None:
+        self.buf = buf
+        self.pos = 0
+
+    def take(self, n: int) -> bytes:
+        end = self.pos + n
+        if end > len(self.buf):
+            raise CodecError("flatpack body truncated")
+        chunk = self.buf[self.pos:end]
+        self.pos = end
+        return chunk
+
+
+def _unpack_value(cur: _Cursor):
+    tag = cur.take(1)
+    if tag == _TAG_NONE:
+        return None
+    if tag == _TAG_TRUE:
+        return True
+    if tag == _TAG_FALSE:
+        return False
+    if tag == _TAG_INT:
+        return _I64.unpack(cur.take(8))[0]
+    if tag == _TAG_FLOAT:
+        return _F64.unpack(cur.take(8))[0]
+    if tag == _TAG_STR:
+        (n,) = _U32.unpack(cur.take(4))
+        try:
+            return cur.take(n).decode("utf-8")
+        except UnicodeDecodeError as e:
+            raise CodecError(f"flatpack bad utf-8: {e}") from e
+    if tag == _TAG_BYTES:
+        (n,) = _U32.unpack(cur.take(4))
+        return cur.take(n)
+    if tag == _TAG_LIST:
+        (n,) = _U32.unpack(cur.take(4))
+        return [_unpack_value(cur) for _ in range(n)]
+    if tag == _TAG_DICT:
+        (n,) = _U32.unpack(cur.take(4))
+        return {_unpack_value(cur): _unpack_value(cur) for _ in range(n)}
+    raise CodecError(f"flatpack unknown tag {tag!r}")
+
+
+def flatunpack(body: bytes) -> List:
+    cur = _Cursor(body)
+    values = _unpack_value(cur)
+    if cur.pos != len(body):
+        raise CodecError(
+            f"flatpack trailing garbage: {len(body) - cur.pos} byte(s)")
+    if not isinstance(values, list):
+        raise CodecError("flatpack body is not a value list")
+    return values
+
+
+class BinaryCodec(Codec):
+    """Struct-packed header + flat field tuple body (DESIGN.md §13).
+
+    Encoding walks ``Message._fields`` in declared order; wire dicts
+    with omitted optional fields fall back to their registered defaults
+    so both codecs reconstruct identical messages. Decoding dispatches
+    on the header flags byte, so the two binary variants interoperate;
+    ``name`` still pins which body encoding THIS codec emits."""
+
+    name = "binary"
+    _use_msgpack = False
+
+    def encode(self, wire: WireMessage) -> bytes:
+        kind, fields = wire
+        cls = _REGISTRY.get(kind)
+        if cls is None:
+            raise CodecError(f"unknown message kind {kind!r}")
+        try:
+            values = [fields[n] if n in fields else cls._defaults[n]
+                      for n in cls._fields]
+        except KeyError as e:
+            raise CodecError(
+                f"{kind}: wire dict missing required field {e}") from e
+        if self._use_msgpack:
+            body = _msgpack.packb(values, use_bin_type=True)
+            flags = _FLAG_MSGPACK
+        else:
+            body = flatpack(values)
+            flags = 0
+        return _BHEADER.pack(cls.wire_id, flags, len(body)) + body
+
+    def decode(self, payload: bytes) -> WireMessage:
+        if len(payload) < _BHEADER.size:
+            raise CodecError(
+                f"binary frame of {len(payload)} bytes is shorter than "
+                f"the {_BHEADER.size}-byte header")
+        wire_id, flags, length = _BHEADER.unpack_from(payload)
+        body = payload[_BHEADER.size:]
+        if len(body) != length:
+            raise CodecError(
+                f"binary frame header announces a {length}-byte body "
+                f"but {len(body)} byte(s) follow")
+        cls = _WIRE_IDS.get(wire_id)
+        if cls is None:
+            raise CodecError(f"unknown wire id {wire_id}")
+        if flags & _FLAG_MSGPACK:
+            if _msgpack is None:
+                raise CodecError(
+                    "peer sent a msgpack body but msgpack is not "
+                    "installed here")
+            try:
+                values = _msgpack.unpackb(body, raw=False)
+            except Exception as e:
+                raise CodecError(f"undecodable msgpack body: {e}") from e
+        else:
+            values = flatunpack(body)
+        if not isinstance(values, list) or len(values) != len(cls._fields):
+            raise CodecError(
+                f"{cls.kind}: body carries "
+                f"{len(values) if isinstance(values, list) else '?'} "
+                f"value(s), schema has {len(cls._fields)} field(s)")
+        return cls.kind, dict(zip(cls._fields, values))
+
+
+class MsgpackCodec(BinaryCodec):
+    name = "msgpack"
+    _use_msgpack = True
+
+
+# -- registry + negotiation -------------------------------------------------
+
+CODECS: Dict[str, Codec] = {"json": JsonCodec(), "binary": BinaryCodec()}
+if _msgpack is not None:
+    CODECS["msgpack"] = MsgpackCodec()
+
+# negotiation preference, best first; json is the mandatory floor
+PREFERENCE = ("msgpack", "binary", "json")
+
+DEFAULT_CODEC = "msgpack" if _msgpack is not None else "binary"
+
+
+def supported() -> List[str]:
+    """This build's codec offer, preference-ordered (Hello.codecs)."""
+    return [n for n in PREFERENCE if n in CODECS]
+
+
+def negotiate(offered: List[str], prefer: Optional[str] = None) -> str:
+    """Coordinator-side pick: the best codec both ends speak.
+
+    ``prefer`` caps the choice (e.g. a ``--codec json`` canary cell
+    forces the baseline even against a binary-capable worker); unknown
+    offers are ignored, an empty or json-only offer (old worker) yields
+    ``"json"``."""
+    order = PREFERENCE if prefer is None else (prefer,)
+    usable = {n for n in (offered or ()) if n in CODECS}
+    for name in order:
+        if name in usable and name in CODECS:
+            return name
+    return "json"
+
+
+def get(name: str) -> Codec:
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise CodecError(
+            f"unknown codec {name!r} (available: "
+            f"{', '.join(sorted(CODECS))})") from None

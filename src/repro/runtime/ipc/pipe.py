@@ -40,6 +40,14 @@ class PipeChannel(Channel):
         except (EOFError, OSError) as e:
             raise ChannelClosed(str(e)) from e
 
+    def fileno(self) -> int:
+        if self._closed:
+            return -1
+        try:
+            return self._conn.fileno()
+        except (OSError, ValueError):
+            return -1
+
     def close(self) -> None:
         if not self._closed:
             self._closed = True

@@ -61,6 +61,12 @@ class QueueChannel(Channel):
             self._peeked = wire
         return True
 
+    def has_buffered(self) -> bool:
+        # no selectable fd (fileno stays -1): wait_readable covers this
+        # channel with poll slices; a peeked message or recorded EOF is
+        # ready without touching the queue
+        return self._peeked is not None or self._peer_closed
+
     def get(self) -> Message:
         if self._closed:
             raise ChannelClosed("channel closed")

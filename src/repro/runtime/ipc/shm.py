@@ -1,0 +1,216 @@
+"""Shared-memory bulk data plane (DESIGN.md §13).
+
+Control frames must stay small — that is the whole premise of the wire
+plane — but some payloads are bulk by nature: checkpoint state
+summaries today, parameter fan-in tomorrow. On a same-host pair the
+bytes never need to cross the socket at all: the worker appends them to
+its own shared-memory ring (:class:`ShmBulkPlane`) and the control
+frame carries only a *bulk reference* — name, offset, length, sequence
+number. The coordinator resolves the reference (:class:`ShmBulkReader`)
+by attaching the segment once and copying the chunk out. Cross-host (or
+when shared memory is unavailable) the same payload travels inline,
+base64-coded inside the control frame — callers never branch, they just
+:func:`publish_bulk` and :func:`resolve_bulk`.
+
+Ownership and lifetime rules (the part that keeps this safe):
+
+  * the WORKER owns its ring: it creates the segment, is the only
+    writer, and closes+unlinks it on exit. A SIGKILLed worker's segment
+    is reaped by its spawn context's resource tracker.
+  * the COORDINATOR only ever attaches read-only-by-convention and
+    copies chunks out immediately at resolve time; it never unlinks.
+    (The attach suppresses the tracker registration CPython would add
+    — bpo-38119 — so the segment is tracked exactly once, by its
+    writer, whether or not the two processes share a tracker.)
+  * a chunk is valid from publish until the writer's cursor laps it.
+    Every chunk is stamped ``[magic u32][length u32][seq u64]`` in the
+    ring itself; :meth:`ShmBulkReader.resolve` re-validates the stamp
+    against the reference, so a lapped (overwritten) chunk surfaces as
+    :class:`BulkUnavailable`, never as silently wrong bytes. Consumers
+    that must not lose payloads size the ring to cover their
+    publish-to-resolve window — for checkpoint acks (a few KiB every
+    ``checkpoint_every`` rounds against a 1 MiB default ring) the
+    window is thousands of rounds deep.
+
+Wire form of a bulk reference (JSON-safe, codec-agnostic):
+
+    None                                      no payload
+    ["inline", <base64 str>]                  bytes travel in the frame
+    ["shm", name, offset, length, seq]        bytes wait in the ring
+"""
+from __future__ import annotations
+
+import base64
+import struct
+from typing import List, Optional
+
+try:
+    from multiprocessing import shared_memory as _shared_memory
+except ImportError:                      # pragma: no cover
+    _shared_memory = None
+
+# per-chunk stamp, written at the chunk's offset ahead of the data
+_STAMP = struct.Struct(">IIQ")           # magic, length, seq
+_MAGIC = 0x53424C4B                      # "SBLK"
+
+DEFAULT_RING = 1 << 20                   # 1 MiB
+
+
+class BulkUnavailable(Exception):
+    """A shm bulk reference that cannot be resolved: segment gone, or
+    the chunk was lapped by the writer before it was read."""
+
+
+def shm_available() -> bool:
+    return _shared_memory is not None
+
+
+class ShmBulkPlane:
+    """Writer side: one process-private ring in a shared segment.
+
+    ``publish`` appends a chunk (wrapping at the end of the ring) and
+    returns its wire reference; payloads that cannot fit the ring at
+    all fall back to an inline reference transparently."""
+
+    def __init__(self, capacity: int = DEFAULT_RING) -> None:
+        if _shared_memory is None:
+            raise BulkUnavailable("multiprocessing.shared_memory missing")
+        self._shm = _shared_memory.SharedMemory(create=True, size=capacity)
+        self.capacity = self._shm.size   # kernel may round up
+        self._cursor = 0
+        self._seq = 0
+        self._closed = False
+
+    @property
+    def name(self) -> str:
+        return self._shm.name
+
+    def publish(self, data: bytes) -> List:
+        """Append one chunk; returns its wire reference (shm, or inline
+        when the payload cannot fit the ring)."""
+        if self._closed:
+            raise BulkUnavailable("bulk plane closed")
+        need = _STAMP.size + len(data)
+        if need > self.capacity:
+            return inline_ref(data)      # clean fallback, caller-blind
+        if self._cursor + need > self.capacity:
+            self._cursor = 0             # wrap: lap old chunks
+        off = self._cursor
+        self._seq += 1
+        buf = self._shm.buf
+        _STAMP.pack_into(buf, off, _MAGIC, len(data), self._seq)
+        buf[off + _STAMP.size:off + need] = data
+        self._cursor = off + need
+        return ["shm", self.name, off, len(data), self._seq]
+
+    def close(self) -> None:
+        """Owner teardown: close AND unlink (readers holding refs get
+        BulkUnavailable from then on)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._shm.close()
+        try:
+            self._shm.unlink()
+        except FileNotFoundError:        # pragma: no cover
+            pass
+
+
+class ShmBulkReader:
+    """Reader side: attaches segments by name (cached) and copies
+    chunks out, re-validating the in-ring stamp against the reference."""
+
+    def __init__(self) -> None:
+        self._segments = {}
+
+    def _attach(self, name: str):
+        seg = self._segments.get(name)
+        if seg is None:
+            if _shared_memory is None:
+                raise BulkUnavailable(
+                    "multiprocessing.shared_memory missing")
+            # attaching would register the segment with the resource
+            # tracker (bpo-38119), but the WRITER owns unlinking (see
+            # module docstring). Suppressing the register beats
+            # compensating with unregister afterwards: with spawned
+            # workers both processes share ONE tracker, and a second
+            # unregister (ours + the writer's unlink) makes the tracker
+            # print a KeyError traceback at teardown.
+            from multiprocessing import resource_tracker
+            _orig_register = resource_tracker.register
+            resource_tracker.register = lambda *a, **k: None
+            try:
+                seg = _shared_memory.SharedMemory(name=name)
+            except (FileNotFoundError, OSError) as e:
+                raise BulkUnavailable(
+                    f"shm segment {name!r} is gone: {e}") from e
+            finally:
+                resource_tracker.register = _orig_register
+            self._segments[name] = seg
+        return seg
+
+    def resolve(self, name: str, offset: int, length: int,
+                seq: int) -> bytes:
+        seg = self._attach(name)
+        end = offset + _STAMP.size + length
+        if offset < 0 or end > seg.size:
+            raise BulkUnavailable(
+                f"shm ref outside segment: [{offset}, {end}) of "
+                f"{seg.size}")
+        magic, stored_len, stored_seq = _STAMP.unpack_from(seg.buf, offset)
+        if magic != _MAGIC or stored_len != length or stored_seq != seq:
+            raise BulkUnavailable(
+                f"shm chunk at {offset} was lapped (stamp "
+                f"seq={stored_seq} len={stored_len}, ref seq={seq} "
+                f"len={length})")
+        return bytes(seg.buf[offset + _STAMP.size:end])
+
+    def close(self) -> None:
+        for seg in self._segments.values():
+            try:
+                seg.close()
+            except Exception:            # pragma: no cover
+                pass
+        self._segments.clear()
+
+
+# -- wire reference helpers -------------------------------------------------
+
+
+def inline_ref(data: bytes) -> List:
+    return ["inline", base64.b64encode(data).decode("ascii")]
+
+
+def publish_bulk(data: bytes, plane: Optional[ShmBulkPlane]) -> List:
+    """The one call sites use: ring when a plane is enabled, inline
+    otherwise — the reference shape hides the difference."""
+    if plane is not None:
+        try:
+            return plane.publish(data)
+        except BulkUnavailable:          # plane torn down under us
+            pass
+    return inline_ref(data)
+
+
+def resolve_bulk(ref: Optional[List],
+                 reader: Optional[ShmBulkReader] = None
+                 ) -> Optional[bytes]:
+    """Bulk reference -> raw bytes (None passes through). Raises
+    BulkUnavailable for an unresolvable shm reference."""
+    if ref is None:
+        return None
+    tag = ref[0]
+    if tag == "inline":
+        return base64.b64decode(ref[1])
+    if tag == "shm":
+        if reader is None:
+            raise BulkUnavailable("shm reference but no reader")
+        name, offset, length, seq = ref[1:]
+        return reader.resolve(name, int(offset), int(length), int(seq))
+    raise BulkUnavailable(f"unknown bulk reference tag {tag!r}")
+
+
+def bulk_bytes(ref: Optional[List]) -> Optional[bytes]:
+    """Decode an INLINE reference (the normalized form stored on
+    resolved CheckpointAcks) without a reader."""
+    return resolve_bulk(ref, None)

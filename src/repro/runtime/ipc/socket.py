@@ -4,15 +4,20 @@ The third transport (after Pipe and Queue), and the first that crosses a
 host boundary: both ends hold a connected ``socket.socket`` and every
 :class:`~repro.runtime.messages.Message` travels as one *frame* —
 
-    [4-byte big-endian payload length][JSON-encoded wire tuple]
+    [4-byte big-endian payload length][codec-encoded wire tuple]
 
-The wire tuples are already primitives-only (``messages.py`` was
-designed for exactly this), so JSON is a faithful encoding: a frame
-decoded on another host reconstructs the same dataclass the in-process
-transports deliver. TCP gives ordering and reliability; the framing
-layer restores message boundaries on top of the byte stream, coping
-with partial reads, frames split across ``recv()`` calls, and several
-frames arriving in one ``recv()``.
+The payload encoding is pluggable (``ipc/codec.py``, DESIGN.md §13):
+every channel starts in the ``json`` compatibility codec — byte-for-
+byte the historical wire format — and :meth:`SocketChannel.set_codec`
+switches it after the rendezvous negotiates one (struct-packed binary
+by default between new builds). The wire tuples are primitives-only
+(``messages.py`` was designed for exactly this), so every codec is a
+faithful encoding: a frame decoded on another host reconstructs the
+same dataclass the in-process transports deliver. TCP gives ordering
+and reliability; the framing layer restores message boundaries on top
+of the byte stream — codec-blind — coping with partial reads, frames
+split across ``recv()`` calls, and several frames arriving in one
+``recv()``.
 
 Liveness contract (shared with PipeChannel, and — after the EOF
 sentinel fix — QueueChannel): a peer that goes away surfaces as
@@ -26,15 +31,15 @@ not make the coordinator allocate gigabytes.
 """
 from __future__ import annotations
 
-import json
 import select
 import socket as _socket
 import struct
 import time
 from collections import deque
-from typing import Deque, Optional, Tuple
+from typing import Deque, Optional, Tuple, Union
 
 from repro.runtime.ipc.base import Channel, ChannelClosed
+from repro.runtime.ipc.codec import Codec, CodecError, get as get_codec
 from repro.runtime.messages import Message, WireMessage
 
 _HEADER = struct.Struct(">I")
@@ -42,13 +47,41 @@ MAX_FRAME = 16 * 1024 * 1024             # 16 MiB: far above any message
 _RECV_CHUNK = 65536
 
 
-def parse_endpoint(text: str) -> Tuple[str, int]:
+def parse_endpoint(text: str, allow_ephemeral: bool = False
+                   ) -> Tuple[str, int]:
     """``"host:port"`` -> (host, port). Bare ``":port"`` means all
-    interfaces (listen) / localhost (connect)."""
+    interfaces (listen) / localhost (connect). IPv6 literals must be
+    bracketed (``"[::1]:5555"``) — an unbracketed one is ambiguous
+    (every ``:`` is a candidate split) and rejected with a hint rather
+    than silently mangled. Ports outside [1, 65535] are rejected:
+    ``str.isdigit`` alone happily accepted ``:99999`` (and Unicode
+    digits ``int`` then choked on). ``allow_ephemeral`` admits port 0 —
+    meaningful only for a LISTEN endpoint (bind to an ephemeral port);
+    a connect target of 0 is always an error."""
     host, sep, port = text.rpartition(":")
-    if not sep or not port.isdigit():
+    if not sep:
         raise ValueError(f"bad endpoint {text!r}: expected host:port")
-    return host or "127.0.0.1", int(port)
+    if host.startswith("["):
+        if not host.endswith("]"):
+            raise ValueError(
+                f"bad endpoint {text!r}: unterminated [ipv6] bracket")
+        host = host[1:-1]
+        if ":" not in host:
+            raise ValueError(
+                f"bad endpoint {text!r}: brackets are for IPv6 "
+                f"literals, got {host!r}")
+    elif ":" in host:
+        raise ValueError(
+            f"bad endpoint {text!r}: IPv6 literals must be bracketed, "
+            f"e.g. [::1]:5555")
+    if not (port.isascii() and port.isdigit()):
+        raise ValueError(f"bad endpoint {text!r}: port {port!r} is not "
+                         f"a number")
+    port_num = int(port)
+    if not (1 <= port_num <= 65535 or (port_num == 0 and allow_ephemeral)):
+        raise ValueError(f"bad endpoint {text!r}: port {port_num} "
+                         f"outside [1, 65535]")
+    return host or "127.0.0.1", port_num
 
 
 class FrameTooLarge(ChannelClosed):
@@ -57,8 +90,11 @@ class FrameTooLarge(ChannelClosed):
     a corrupt length prefix cannot be resynchronized."""
 
 
-def encode_frame(wire: WireMessage, max_frame: int = MAX_FRAME) -> bytes:
-    payload = json.dumps(wire, separators=(",", ":")).encode("utf-8")
+def encode_frame(wire: WireMessage, max_frame: int = MAX_FRAME,
+                 codec: Union[str, Codec] = "json") -> bytes:
+    if isinstance(codec, str):
+        codec = get_codec(codec)
+    payload = codec.encode(wire)
     if len(payload) > max_frame:
         raise FrameTooLarge(
             f"outgoing frame of {len(payload)} bytes exceeds the "
@@ -68,7 +104,8 @@ def encode_frame(wire: WireMessage, max_frame: int = MAX_FRAME) -> bytes:
 
 class SocketChannel(Channel):
     def __init__(self, sock: "_socket.socket",
-                 max_frame: int = MAX_FRAME) -> None:
+                 max_frame: int = MAX_FRAME,
+                 codec: Union[str, Codec] = "json") -> None:
         sock.settimeout(None)            # framing assumes blocking ops
         try:
             sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
@@ -76,11 +113,32 @@ class SocketChannel(Channel):
             pass                         # e.g. an AF_UNIX socketpair
         self._sock: Optional["_socket.socket"] = sock
         self.max_frame = max_frame
+        self._codec = get_codec(codec) if isinstance(codec, str) else codec
         self._buf = bytearray()
         self._ready: Deque[WireMessage] = deque()
         self._eof = False
         self._error: Optional[ChannelClosed] = None
         self._closed = False
+
+    @property
+    def codec(self) -> str:
+        return self._codec.name
+
+    def set_codec(self, codec: Union[str, Codec]) -> None:
+        """Switch the payload encoding for every frame from here on —
+        both directions. Only safe at a protocol point where no frame
+        of the old codec can still be in flight toward us; the
+        rendezvous (strictly alternating until the Welcome) is exactly
+        such a point, and the only caller."""
+        self._codec = get_codec(codec) if isinstance(codec, str) else codec
+
+    def fileno(self) -> int:
+        """The underlying socket fd, for multi-channel readable-waits
+        (``ipc.base.wait_readable``). -1 once closed."""
+        return -1 if self._sock is None else self._sock.fileno()
+
+    def has_buffered(self) -> bool:
+        return bool(self._ready or self._eof or self._error is not None)
 
     # -- send -----------------------------------------------------------
     def put(self, message: Message) -> None:
@@ -91,7 +149,8 @@ class SocketChannel(Channel):
             # RST lands later); once EOF HAS been observed, sending is a
             # protocol error and must say so, like a closed pipe does
             raise ChannelClosed("peer closed")
-        frame = encode_frame(message.to_wire(), self.max_frame)
+        frame = encode_frame(message.to_wire(), self.max_frame,
+                             self._codec)
         try:
             self._sock.sendall(frame)
         except OSError as e:
@@ -182,15 +241,15 @@ class SocketChannel(Channel):
             payload = bytes(self._buf[_HEADER.size:_HEADER.size + length])
             del self._buf[:_HEADER.size + length]
             try:
-                wire = json.loads(payload.decode("utf-8"))
-            except (ValueError, UnicodeDecodeError) as e:
+                wire = self._codec.decode(payload)
+            except CodecError as e:
                 self._error = ChannelClosed(f"undecodable frame: {e}")
                 self._buf.clear()
                 return
             self._ready.append(wire)
 
 
-def socket_pair(max_frame: int = MAX_FRAME
+def socket_pair(max_frame: int = MAX_FRAME, codec: str = "json"
                 ) -> Tuple[SocketChannel, SocketChannel]:
     """A connected (coordinator_end, worker_end) pair over a real TCP
     loopback socket — the framing path under test is byte-identical to
@@ -203,4 +262,5 @@ def socket_pair(max_frame: int = MAX_FRAME
         server, _ = listener.accept()
     finally:
         listener.close()
-    return SocketChannel(server, max_frame), SocketChannel(client, max_frame)
+    return (SocketChannel(server, max_frame, codec),
+            SocketChannel(client, max_frame, codec))

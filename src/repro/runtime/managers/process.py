@@ -23,6 +23,7 @@ import os
 import signal
 
 from repro.runtime.ipc.pipe import PipeChannel
+from repro.runtime.ipc.shm import shm_available
 from repro.runtime.managers.base import ExecutionManager, WorkerHandle
 from repro.runtime.worker import WorkerSpec, worker_entry
 
@@ -70,6 +71,11 @@ class ProcessManager(SpawnedProcessFaults, ExecutionManager):
         self._procs = {}
 
     def _launch(self, spec: WorkerSpec) -> WorkerHandle:
+        if shm_available():
+            # spawned workers share this host by construction: bulk
+            # payloads (checkpoint state blobs) go through the
+            # shared-memory ring, not the pipe (DESIGN.md §13)
+            spec.bulk = "shm"
         coord_conn, worker_conn = self._ctx.Pipe()
         proc = self._ctx.Process(target=worker_entry,
                                  args=(spec.to_wire(), worker_conn),

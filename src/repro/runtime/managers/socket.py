@@ -46,6 +46,7 @@ import socket as _socket
 import time
 from typing import Dict, Optional, Tuple
 
+from repro.runtime.ipc.codec import negotiate
 from repro.runtime.ipc.socket import SocketChannel, parse_endpoint
 from repro.runtime.managers.base import (ExecutionManager, HandshakeTimeout,
                                          WorkerHandle)
@@ -59,14 +60,19 @@ class SocketExecutionManager(SpawnedProcessFaults, ExecutionManager):
 
     def __init__(self, listen: str = "127.0.0.1:0", spawn: bool = True,
                  hello_timeout: float = 120.0,
-                 advertise: Optional[str] = None) -> None:
+                 advertise: Optional[str] = None,
+                 codec: Optional[str] = None) -> None:
         """``listen`` is ``host:port`` (port 0 = ephemeral). ``spawn``
         launches one local worker process per spec (CI mode); False
         waits for standalone workers to connect. ``advertise`` is the
         endpoint spawned workers dial (defaults to the bound address,
-        with wildcard hosts rewritten to loopback)."""
+        with wildcard hosts rewritten to loopback). ``codec`` caps the
+        wire-codec negotiation (DESIGN.md §13): None picks the best
+        codec each joining worker offers (binary between new builds,
+        json for old workers); ``"json"`` forces the compatibility
+        baseline for every connection (the CI canary cell)."""
         super().__init__(hello_timeout)
-        host, port = parse_endpoint(listen)
+        host, port = parse_endpoint(listen, allow_ephemeral=True)
         self._listener = _socket.socket(_socket.AF_INET,
                                         _socket.SOCK_STREAM)
         self._listener.setsockopt(_socket.SOL_SOCKET,
@@ -82,6 +88,7 @@ class SocketExecutionManager(SpawnedProcessFaults, ExecutionManager):
         else:
             self.advertised = self.endpoint
         self._spawn = spawn
+        self.codec = codec
         self._ctx = multiprocessing.get_context("spawn")
         self._procs: Dict[str, "multiprocessing.Process"] = {}
         # connections whose join-Hello named a group we are not (yet)
@@ -100,7 +107,17 @@ class SocketExecutionManager(SpawnedProcessFaults, ExecutionManager):
             proc.start()
             self._procs[spec.group] = proc
         chan, join = self._accept_group(spec.group)
-        chan.put(Welcome(spec.to_wire()))    # coordinator-authoritative
+        # same-host workers (spawned, or a standalone that reports our
+        # hostname) may ship bulk payloads through the shared-memory
+        # plane; cross-host ones stay inline (DESIGN.md §13)
+        if join.host and join.host == _socket.gethostname():
+            spec.bulk = "shm"
+        # codec choice: best of the worker's Hello offer, capped by our
+        # configured preference; announced in the Welcome and switched
+        # to immediately after — the rendezvous itself is always json
+        chosen = negotiate(join.codecs, self.codec)
+        chan.put(Welcome(spec.to_wire(), codec=chosen))
+        chan.set_codec(chosen)
         handle = WorkerHandle(spec, chan)
         handle.host = join.host
         handle.endpoint = join.endpoint

@@ -24,30 +24,71 @@ The protocol (one synchronous round):
 A killed or suspended worker simply stops producing ``StepReportMsg`` —
 there is no failure message type. Liveness is *derived* from that
 silence by the control plane, exactly as on the simulator's bus.
+
+Wire shape: ``to_wire`` yields ``(kind, {field: value})`` built from a
+flat per-class field tuple (computed once at registration) — NOT
+``dataclasses.asdict``, which deep-copies every field recursively on
+every send and was measurable on the transport hot path. Field values
+are therefore shared, not copied: senders must treat a message as
+frozen once ``put`` — which every call site already did. Fields listed
+in ``wire_optional`` are omitted from the wire dict while they hold
+their default value, so a NEW protocol field (e.g. the codec
+negotiation fields below) never reaches an old peer that would reject
+the unknown key — tests/test_wire_codec.py pins the legacy shapes.
+
+``wire_id`` is the binary codec's one-byte kind id (DESIGN.md §13),
+registered here alongside the kind string so the id space and the
+class registry can never drift apart. Ids are a pinned public
+contract: never renumber, only append.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import ClassVar, Dict, Optional, Tuple, Type
+from typing import ClassVar, Dict, List, Optional, Tuple, Type
 
 _REGISTRY: Dict[str, Type["Message"]] = {}
+_WIRE_IDS: Dict[int, Type["Message"]] = {}
 
 WireMessage = Tuple[str, Dict]
 
 
 def register(cls: Type["Message"]) -> Type["Message"]:
+    if cls.wire_id in _WIRE_IDS:
+        raise ValueError(
+            f"wire_id {cls.wire_id} of {cls.__name__} already taken by "
+            f"{_WIRE_IDS[cls.wire_id].__name__}")
     _REGISTRY[cls.kind] = cls
+    _WIRE_IDS[cls.wire_id] = cls
+    # the flat wire schema, computed once: field order is the binary
+    # codec's tuple order, defaults let optional fields travel omitted
+    cls._fields = tuple(f.name for f in dataclasses.fields(cls))
+    cls._defaults = {
+        f.name: (f.default_factory() if f.default_factory
+                 is not dataclasses.MISSING else f.default)
+        for f in dataclasses.fields(cls) if f.name in cls.wire_optional}
     return cls
 
 
 @dataclasses.dataclass
 class Message:
-    """Base wire message. Subclasses set a unique ``kind`` ClassVar."""
+    """Base wire message. Subclasses set a unique ``kind`` ClassVar and
+    a unique one-byte ``wire_id``."""
 
     kind: ClassVar[str] = "base"
+    wire_id: ClassVar[int] = 0
+    # fields omitted from the wire dict while at their default — ONLY
+    # for fields added after a wire shape became a public contract
+    wire_optional: ClassVar[frozenset] = frozenset()
+    _fields: ClassVar[Tuple[str, ...]] = ()
+    _defaults: ClassVar[Dict] = {}
 
     def to_wire(self) -> WireMessage:
-        return (self.kind, dataclasses.asdict(self))
+        if self.wire_optional:
+            return (self.kind,
+                    {n: getattr(self, n) for n in self._fields
+                     if n not in self._defaults
+                     or getattr(self, n) != self._defaults[n]})
+        return (self.kind, {n: getattr(self, n) for n in self._fields})
 
     @staticmethod
     def from_wire(wire: WireMessage) -> "Message":
@@ -64,15 +105,25 @@ class Hello(Message):
     worker's identity on a multi-host mesh (hostname and its side of
     the transport, e.g. ``"10.0.0.7:51312"`` for a socket worker) —
     empty for the in-process transports, where the identity is the
-    process itself."""
+    process itself.
+
+    ``codecs`` is the codec offer (DESIGN.md §13): the wire-codec names
+    this worker can speak, preference-ordered. Omitted from the wire
+    while empty, so an old worker's Hello and a new worker's Hello to
+    an old coordinator are both the legacy shape — an empty offer means
+    "json only", which is how old workers keep joining a binary-default
+    coordinator."""
 
     kind: ClassVar[str] = "hello"
+    wire_id: ClassVar[int] = 1
+    wire_optional: ClassVar[frozenset] = frozenset({"codecs"})
     group: str
     pid: int
     batch_size: int
     incarnation: int = 0
     host: str = ""
     endpoint: str = ""
+    codecs: List[str] = dataclasses.field(default_factory=list)
 
 
 @register
@@ -85,10 +136,22 @@ class Welcome(Message):
     join knowing only their group name and learn everything else —
     batch size, speed tables, fault schedule — from this message, so a
     real multi-host run needs no shared filesystem. The in-process
-    transports never send it (their specs travel at spawn time)."""
+    transports never send it (their specs travel at spawn time).
+
+    ``codec`` is the coordinator's pick from the worker's Hello offer
+    (DESIGN.md §13). The rendezvous itself is always spoken in json —
+    the compatibility baseline — and BOTH ends switch to the chosen
+    codec immediately after this message: the coordinator right after
+    sending it, the worker right after receiving it, so the channel is
+    never ambiguous mid-stream (the protocol is strictly alternating
+    until here). Omitted while "json" so a worker that never offered
+    (an old build) receives the exact legacy Welcome shape."""
 
     kind: ClassVar[str] = "welcome"
+    wire_id: ClassVar[int] = 2
+    wire_optional: ClassVar[frozenset] = frozenset({"codec"})
     spec: Dict
+    codec: str = "json"
 
 
 @register
@@ -111,6 +174,7 @@ class StepGrant(Message):
     far ahead of the control plane it may be running."""
 
     kind: ClassVar[str] = "grant"
+    wire_id: ClassVar[int] = 3
     step: int
     staleness: int = 0
 
@@ -125,6 +189,7 @@ class StepReportMsg(Message):
     step time when the worker executes a jitted step."""
 
     kind: ClassVar[str] = "report"
+    wire_id: ClassVar[int] = 4
     step: int
     group: str
     speed: float
@@ -137,12 +202,46 @@ class StepReportMsg(Message):
 
 @register
 @dataclasses.dataclass
+class ReportBatch(Message):
+    """k coalesced :class:`StepReportMsg` in one frame (DESIGN.md §13).
+
+    Under bounded-staleness run-ahead a worker holding several granted
+    rounds used to answer them as k separate frames back-to-back — k
+    syscalls and k frame headers for reports the coordinator would
+    bucket individually anyway. The worker loop now drains its whole
+    grant backlog first and ships ONE batch; the coordinator unpacks it
+    into :class:`~repro.core.control.telemetry.StepBuckets` report by
+    report, in order, so ordering / staleness-floor / incarnation
+    semantics are exactly those of k single frames. At staleness 0 a
+    worker never holds more than one pending report and this message
+    never appears on the wire — which is why the synchronous parity
+    traces are bit-for-bit unchanged.
+
+    ``reports`` is wire-flat: one value list per report, in
+    ``StepReportMsg`` field order (no per-report key repetition)."""
+
+    kind: ClassVar[str] = "reports"
+    wire_id: ClassVar[int] = 10
+    reports: List[List] = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def pack(cls, msgs: List[StepReportMsg]) -> "ReportBatch":
+        return cls([[getattr(m, n) for n in StepReportMsg._fields]
+                    for m in msgs])
+
+    def unpack(self) -> List[StepReportMsg]:
+        return [StepReportMsg(*values) for values in self.reports]
+
+
+@register
+@dataclasses.dataclass
 class Retune(Message):
     """Plan change pushed to every live worker: the full new per-group
     batch map (workers pick their own entry and flip their row mask —
     no recompilation, DESIGN.md §2)."""
 
     kind: ClassVar[str] = "retune"
+    wire_id: ClassVar[int] = 5
     step: int
     batch_sizes: Dict[str, int]
     group: str = ""                      # group that triggered the change
@@ -153,6 +252,7 @@ class Retune(Message):
 @dataclasses.dataclass
 class CheckpointRequest(Message):
     kind: ClassVar[str] = "ckpt_req"
+    wire_id: ClassVar[int] = 6
     step: int
 
 
@@ -160,20 +260,33 @@ class CheckpointRequest(Message):
 @dataclasses.dataclass
 class CheckpointAck(Message):
     """Worker-side state summary. ``n_compiles`` proves the no-recompile
-    retune invariant end-to-end (it must stay at 1 across retunes)."""
+    retune invariant end-to-end (it must stay at 1 across retunes).
+
+    ``state`` is the bulk state blob as a *bulk reference* (DESIGN.md
+    §13): ``["inline", <base64 str>]`` for cross-host peers, or
+    ``["shm", name, offset, length, seq]`` pointing into the worker's
+    shared-memory ring for a same-host coordinator — the control frame
+    stays small either way. The event loop resolves it to raw bytes
+    (``repro.runtime.ipc.shm.resolve_bulk``) before the ack is stored,
+    so consumers of ``RuntimeResult.checkpoint_acks`` always see the
+    inline form. Omitted from the wire while None (legacy shape)."""
 
     kind: ClassVar[str] = "ckpt_ack"
+    wire_id: ClassVar[int] = 7
+    wire_optional: ClassVar[frozenset] = frozenset({"state"})
     step: int
     group: str
     worker_step: int
     batch_size: int
     n_compiles: int = 0
+    state: Optional[List] = None
 
 
 @register
 @dataclasses.dataclass
 class Shutdown(Message):
     kind: ClassVar[str] = "shutdown"
+    wire_id: ClassVar[int] = 8
     reason: str = "done"
 
 
@@ -181,5 +294,6 @@ class Shutdown(Message):
 @dataclasses.dataclass
 class Goodbye(Message):
     kind: ClassVar[str] = "goodbye"
+    wire_id: ClassVar[int] = 9
     group: str
     worker_step: int

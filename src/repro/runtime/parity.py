@@ -60,19 +60,22 @@ def run_runtime(interferences: Sequence = (), dropouts: Sequence = (),
                 round_timeout: float = 1.0,
                 train: Optional[dict] = None,
                 staleness: int = 0,
-                step_delay_s: float = 0.0
+                step_delay_s: float = 0.0,
+                manager_kwargs: Optional[dict] = None
                 ) -> Tuple[RuntimeResult, List[EventTuple]]:
     """The scenario through live workers. ``dropouts`` become worker-side
     silence windows (deterministic everywhere, threads included);
     ``faults`` instead injects REAL kills/suspends via the manager.
     ``staleness`` is the bounded-staleness bound k — 0 is the strict
-    synchronous rendezvous, k>=1 lets workers run k rounds ahead."""
+    synchronous rendezvous, k>=1 lets workers run k rounds ahead.
+    ``manager_kwargs`` go to the manager constructor (e.g.
+    ``{"codec": "json"}`` to force the socket compatibility codec)."""
     plan = stannis_3node_plan()
     cp = ControlPlane(plan, [SpeedDeclinePolicy()],
                       liveness_timeout=liveness_timeout)
     specs = specs_from_plan(plan, interferences, dropouts, train=train,
                             step_delay_s=step_delay_s)
-    mgr = MANAGERS[manager]()
+    mgr = MANAGERS[manager](**(manager_kwargs or {}))
     loop = EventLoop(cp, mgr, round_timeout=round_timeout,
                      staleness=staleness)
     try:
@@ -90,7 +93,8 @@ def run_runtime(interferences: Sequence = (), dropouts: Sequence = (),
 
 def fig6_parity(manager: str = "local", steps: int = 45,
                 train: Optional[dict] = None,
-                staleness: int = 0) -> dict:
+                staleness: int = 0,
+                manager_kwargs: Optional[dict] = None) -> dict:
     """Escalating Gzip interference: the paper's 180 -> 140 -> 100.
     With ``staleness=k`` both paths run the bounded-staleness mode —
     the retune decisions land at the SAME steps (stale reports are not
@@ -101,7 +105,8 @@ def fig6_parity(manager: str = "local", steps: int = 45,
                          staleness=staleness)
     result, rt_events = run_runtime(fig6_escalating_interference(),
                                     steps=steps, manager=manager,
-                                    train=train, staleness=staleness)
+                                    train=train, staleness=staleness,
+                                    manager_kwargs=manager_kwargs)
     return {"sim": sim_events, "runtime": rt_events,
             "match": sim_events == rt_events, "result": result}
 
@@ -109,7 +114,8 @@ def fig6_parity(manager: str = "local", steps: int = 45,
 def dropout_parity(manager: str = "local", fail: int = 5, rejoin: int = 20,
                    steps: int = 40, fault_mode: str = "silence",
                    group: str = "xeon1", round_timeout: float = 0.25,
-                   staleness: int = 0) -> dict:
+                   staleness: int = 0,
+                   manager_kwargs: Optional[dict] = None) -> dict:
     """Failure -> mask-out -> rejoin, sim Dropout vs a live fault.
 
     fault_mode: "silence" (worker alive but mute — deterministic on any
@@ -141,6 +147,6 @@ def dropout_parity(manager: str = "local", fail: int = 5, rejoin: int = 20,
     result, rt_events = run_runtime(
         dropouts=dropouts, steps=steps, manager=manager,
         liveness_timeout=3, faults=faults, round_timeout=round_timeout,
-        staleness=staleness)
+        staleness=staleness, manager_kwargs=manager_kwargs)
     return {"sim": sim_events, "runtime": rt_events,
             "match": sim_events == rt_events, "result": result}

@@ -28,11 +28,13 @@ imports it lazily.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import json
 import os
 import socket as _socket
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -40,9 +42,14 @@ from repro.core.interference import (govern_speed, window_capacity,
                                      window_speed_cap)
 from repro.core.speed_model import SpeedModel
 from repro.runtime.ipc import Channel, ChannelClosed
+from repro.runtime.ipc.shm import (BulkUnavailable, ShmBulkPlane,
+                                   publish_bulk, shm_available)
 from repro.runtime.messages import (CheckpointAck, CheckpointRequest, Goodbye,
-                                    Hello, Message, Retune, Shutdown,
-                                    StepGrant, StepReportMsg)
+                                    Hello, Message, ReportBatch, Retune,
+                                    Shutdown, StepGrant, StepReportMsg)
+
+# speed samples kept worker-side for the checkpoint state blob
+_SPEED_HISTORY = 256
 
 
 @dataclasses.dataclass
@@ -70,6 +77,13 @@ class WorkerSpec:
     that long per granted step, releasing the GIL, so thread-worker
     benchmarks exhibit the genuine compute/coordination overlap that
     bounded-staleness pacing exists to exploit.
+
+    ``bulk`` selects the bulk data path (DESIGN.md §13): ``"shm"`` lets
+    the worker publish bulk payloads (checkpoint state blobs) through a
+    shared-memory ring instead of inline in the control frame —
+    managers set it for workers they know share the coordinator's host;
+    ``"inline"`` (the default, and the cross-host fallback) keeps every
+    byte in the frame.
     """
 
     group: str
@@ -85,13 +99,18 @@ class WorkerSpec:
     seed: int = 0
     incarnation: int = 0
     step_delay_s: float = 0.0
+    bulk: str = "inline"
 
     def to_wire(self) -> Dict:
         return dataclasses.asdict(self)
 
     @classmethod
     def from_wire(cls, wire: Dict) -> "WorkerSpec":
-        wire = dict(wire)
+        # drop unknown keys: a NEWER coordinator's Welcome may carry
+        # spec fields this build predates — they are tuning hints, not
+        # contract, and must not break the join
+        names = {f.name for f in dataclasses.fields(cls)}
+        wire = {k: v for k, v in wire.items() if k in names}
         wire["interference"] = [InterferenceSpec(**iv)
                                 for iv in wire.get("interference", [])]
         wire["silence"] = [tuple(w) for w in wire.get("silence", [])]
@@ -188,17 +207,57 @@ def run_worker(spec: WorkerSpec, chan: Channel) -> None:
     Hello: the handshake must never wait on model init / jit compile
     (a manager's ``hello_timeout`` is a liveness bound, while the
     compile stall is already covered by the coordinator's generous
-    ``round_timeout`` for training runs)."""
+    ``round_timeout`` for training runs).
+
+    Report coalescing (DESIGN.md §13): under bounded-staleness pacing
+    several grants sit queued in the channel at once; instead of
+    answering each with its own frame, the loop holds finished reports
+    in ``pending`` while MORE input is already queued (``poll(0.0)``)
+    and flushes once the backlog is drained — one ReportBatch frame for
+    the whole run-ahead window. The flush also happens before answering
+    any non-grant message, so a CheckpointAck can never overtake the
+    reports of rounds the worker already ran. At staleness 0 the input
+    queue is empty after every grant, each report flushes alone as a
+    plain StepReportMsg, and the wire is byte-identical to the
+    pre-coalescing protocol — which is what keeps the synchronous
+    parity traces exact."""
     gov = SpeedGovernor(spec.interference, spec.silence)
     sm = spec.speed_model()
     executor: Optional[TrainExecutor] = None
     worker_step = 0
+    pending: List[StepReportMsg] = []
+    speed_history: Deque[float] = collections.deque(maxlen=_SPEED_HISTORY)
+    bulk_plane: Optional[ShmBulkPlane] = None
+    speed_memo: Dict[float, float] = {}  # batch -> curve speed (pure fn)
+
+    def flush() -> None:
+        if not pending:
+            return
+        if len(pending) == 1:
+            chan.put(pending[0])
+        else:
+            chan.put(ReportBatch.pack(pending))
+        pending.clear()
+
     try:
         chan.put(Hello(spec.group, os.getpid(), spec.batch_size,
                        spec.incarnation, host=_socket.gethostname()))
         while True:
+            if pending and not chan.poll(0.0):
+                flush()                  # backlog drained: ship the batch
             msg = chan.get()
+            if isinstance(msg, StepGrant):        # hot path first
+                if executor is None and spec.train:
+                    executor = TrainExecutor(spec)
+                report = _one_step(spec, gov, sm, executor, msg.step,
+                                   speed_memo)
+                worker_step += 1
+                if report is not None:
+                    speed_history.append(report.speed)
+                    pending.append(report)
+                continue
             if isinstance(msg, Shutdown):
+                flush()
                 chan.put(Goodbye(spec.group, worker_step))
                 break
             if isinstance(msg, Retune):
@@ -206,26 +265,37 @@ def run_worker(spec: WorkerSpec, chan: Channel) -> None:
                     msg.batch_sizes.get(spec.group, spec.batch_size))
                 continue
             if isinstance(msg, CheckpointRequest):
+                flush()                  # reports precede their ack
+                if bulk_plane is None and spec.bulk == "shm" \
+                        and shm_available():
+                    try:
+                        bulk_plane = ShmBulkPlane()
+                    except (BulkUnavailable, OSError):
+                        spec.bulk = "inline"     # degrade, don't retry
+                state = json.dumps({
+                    "group": spec.group,
+                    "worker_step": worker_step,
+                    "batch_size": spec.batch_size,
+                    "n_compiles": executor.n_compiles if executor else 0,
+                    "speed_history": list(speed_history),
+                }, separators=(",", ":")).encode("utf-8")
                 chan.put(CheckpointAck(
                     msg.step, spec.group, worker_step, spec.batch_size,
-                    executor.n_compiles if executor else 0))
+                    executor.n_compiles if executor else 0,
+                    state=publish_bulk(state, bulk_plane)))
                 continue
-            if isinstance(msg, StepGrant):
-                if executor is None and spec.train:
-                    executor = TrainExecutor(spec)
-                report = _one_step(spec, gov, sm, executor, msg.step)
-                worker_step += 1
-                if report is not None:
-                    chan.put(report)
     except ChannelClosed:
         pass                                     # coordinator gone: exit
     finally:
+        if bulk_plane is not None:
+            bulk_plane.close()
         chan.close()
 
 
 def _one_step(spec: WorkerSpec, gov: SpeedGovernor, sm: SpeedModel,
-              executor: Optional[TrainExecutor],
-              step: int) -> Optional[StepReportMsg]:
+              executor: Optional[TrainExecutor], step: int,
+              speed_memo: Optional[Dict[float, float]] = None
+              ) -> Optional[StepReportMsg]:
     """Execute (maybe) and report (maybe) one granted round.
 
     Report semantics mirror the simulator exactly (same float ops, same
@@ -236,19 +306,41 @@ def _one_step(spec: WorkerSpec, gov: SpeedGovernor, sm: SpeedModel,
       b > 0    -> speed(b) × capacity, min absolute cap; cpu_util is the
                   capacity fraction. With a TrainExecutor the raw speed
                   is the real measured b/dt instead of the curve.
-    """
+
+    ``speed_memo`` caches the pure curve lookup ``sm.speed(b)`` per
+    batch size (the np.interp call was a measurable slice of the
+    report-only step on the protocol hot path). The quiet-worker exit —
+    no interference windows, no silence — short-circuits the window
+    evaluation with the literal values the helpers return for an empty
+    schedule (capacity 1.0, no cap), so the emitted floats are
+    bit-identical to the slow path."""
     loss = wall_dt = None
     if executor is not None and spec.batch_size > 0:
         loss, wall_dt = executor.run_step(spec.batch_size)
     elif spec.step_delay_s > 0.0:
         time.sleep(spec.step_delay_s)    # modeled compute (GIL released)
-    if gov.silenced(step):
+    if speed_memo is None:
+        speed_memo = {}
+    quiet = not gov.windows and not gov.silence
+    if not quiet and gov.silenced(step):
         return None
     if spec.batch_size == 0:
-        return StepReportMsg(step, spec.group, sm.speed(sm.knee()),
+        knee = sm.knee()
+        if knee not in speed_memo:
+            speed_memo[knee] = sm.speed(knee)
+        return StepReportMsg(step, spec.group, speed_memo[knee],
                              cpu_util=0.0, batch_size=0)
-    raw = (spec.batch_size / wall_dt if wall_dt is not None
-           else sm.speed(spec.batch_size))
+    if wall_dt is not None:
+        raw = spec.batch_size / wall_dt
+    else:
+        raw = speed_memo.get(spec.batch_size)
+        if raw is None:
+            raw = speed_memo[spec.batch_size] = \
+                sm.speed(spec.batch_size)
+    if quiet:
+        return StepReportMsg(step, spec.group, raw * 1.0,
+                             cpu_util=1.0, batch_size=spec.batch_size,
+                             wall_dt=wall_dt, loss=loss)
     return StepReportMsg(step, spec.group, gov.govern(raw, step),
                          cpu_util=gov.capacity(step),
                          batch_size=spec.batch_size,

@@ -1,0 +1,668 @@
+"""The binary wire plane (ISSUE 6): codecs, negotiation, coalescing,
+and the shared-memory bulk path.
+
+Acceptance anchors:
+  * every message kind round-trips through every registered codec, and
+    the frame BYTES of each codec are pinned (golden tests) — the wire
+    is a public contract across coordinator/worker version skew;
+  * the legacy wire shapes are pinned: new optional fields (Hello.codecs,
+    Welcome.codec, CheckpointAck.state) are omitted at their defaults,
+    so an old peer never sees an unknown key;
+  * codec negotiation is proven end to end: a JSON-only worker (an old
+    build that never offers) joins a binary-default coordinator and the
+    channel stays on the json baseline;
+  * report coalescing: a run-ahead backlog flushes as ONE ReportBatch
+    frame; at staleness 0 the wire is byte-identical to the
+    pre-coalescing protocol (plain StepReportMsg per round);
+  * the shm bulk plane resolves published chunks, detects lapped ones
+    (BulkUnavailable, never silently wrong bytes), and degrades to
+    inline refs when the payload cannot fit;
+  * framing pathologies (split/merged/truncated frames, oversized
+    length prefixes) surface as ChannelClosed/FrameTooLarge under the
+    binary codec exactly as they do under json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # pragma: no cover
+    from _hypo import given, settings, st
+
+from repro.core.allocator import solve
+from repro.core.control import ControlPlane, SpeedDeclinePolicy
+from repro.core.speed_model import SpeedModel
+from repro.runtime import EventLoop, specs_from_plan
+from repro.runtime.ipc import (BulkUnavailable, CODECS, ChannelClosed,
+                               DEFAULT_CODEC, FrameTooLarge, ShmBulkPlane,
+                               ShmBulkReader, SocketChannel, bulk_bytes,
+                               pipe_pair, publish_bulk, resolve_bulk,
+                               socket_pair)
+from repro.runtime.ipc.codec import (CodecError, flatpack, flatunpack,
+                                     negotiate, supported)
+from repro.runtime.ipc.shm import inline_ref, shm_available
+from repro.runtime.ipc.socket import _HEADER, encode_frame, parse_endpoint
+from repro.runtime.managers.process import ProcessManager
+from repro.runtime.managers.socket import SocketExecutionManager
+from repro.runtime.messages import (_REGISTRY, CheckpointAck,
+                                    CheckpointRequest, Goodbye, Hello,
+                                    Message, ReportBatch, Retune, Shutdown,
+                                    StepGrant, StepReportMsg, Welcome)
+from repro.runtime.parity import run_runtime
+from repro.runtime.worker import WorkerSpec, run_worker
+
+
+def _one_of_every_kind():
+    """A representative instance of EVERY registered message kind —
+    asserted exhaustive so a new message cannot dodge codec coverage."""
+    msgs = [
+        Hello("csd0", 4242, 180, incarnation=2, host="node-a",
+              endpoint="10.0.0.7:51312", codecs=["msgpack", "json"]),
+        Welcome({"group": "csd0", "batch_size": 180, "capacity": 256},
+                codec="binary"),
+        StepGrant(7, staleness=3),
+        StepReportMsg(7, "csd0", 31.13, cpu_util=0.8, power_w=95.0,
+                      batch_size=180, wall_dt=0.5, loss=3.2),
+        ReportBatch.pack([StepReportMsg(1, "g", 8.0, batch_size=8),
+                          StepReportMsg(2, "g", 8.5, batch_size=8)]),
+        Retune(9, {"csd0": 140, "host": 180}, group="csd0",
+               reason="decline"),
+        CheckpointRequest(12),
+        CheckpointAck(12, "csd0", 12, 140, n_compiles=1,
+                      state=["inline", "aGk="]),
+        Shutdown("done"),
+        Goodbye("csd0", 12),
+    ]
+    assert {type(m).kind for m in msgs} == set(_REGISTRY)
+    return msgs
+
+
+# ---------------------------------------------------------------------------
+# codec round trips + golden frame bytes (the wire is a public contract)
+# ---------------------------------------------------------------------------
+
+
+class TestCodecRoundTrip:
+    @pytest.mark.parametrize("name", sorted(CODECS))
+    def test_every_kind_roundtrips(self, name):
+        codec = CODECS[name]
+        for m in _one_of_every_kind():
+            got = Message.from_wire(codec.decode(codec.encode(m.to_wire())))
+            assert got == m and type(got) is type(m), (name, m)
+
+    def test_cross_codec_decode(self):
+        """The two binary variants share the header and dispatch on the
+        flags byte: each decodes the other's frames (negotiation still
+        pins ONE codec per channel — this is the skew safety net)."""
+        if "msgpack" not in CODECS:
+            pytest.skip("msgpack not installed")
+        m = StepReportMsg(7, "g", 31.13, batch_size=180)
+        for enc, dec in (("binary", "msgpack"), ("msgpack", "binary")):
+            wire = CODECS[dec].decode(CODECS[enc].encode(m.to_wire()))
+            assert Message.from_wire(wire) == m
+
+    @pytest.mark.parametrize("name", sorted(CODECS))
+    def test_truncated_payload_raises_codec_error(self, name):
+        """EVERY strict prefix of a valid payload must raise CodecError
+        — a truncated frame is never decoded into a message."""
+        codec = CODECS[name]
+        payload = codec.encode(StepGrant(7, staleness=2).to_wire())
+        for cut in range(len(payload)):
+            with pytest.raises(CodecError):
+                codec.decode(payload[:cut])
+
+    def test_binary_trailing_garbage_rejected(self):
+        codec = CODECS["binary"]
+        payload = codec.encode(StepGrant(7).to_wire())
+        with pytest.raises(CodecError):
+            codec.decode(payload + b"\x00")
+
+    def test_binary_unknown_wire_id_rejected(self):
+        with pytest.raises(CodecError):
+            CODECS["binary"].decode(struct.pack(">BBI", 250, 0, 0))
+
+    def test_binary_wrong_arity_rejected(self):
+        """A body whose value count disagrees with the kind's schema is
+        a protocol error, not a half-filled message."""
+        body = flatpack([7])             # grant has 2 fields
+        frame = struct.pack(">BBI", StepGrant.wire_id, 0, len(body)) + body
+        with pytest.raises(CodecError):
+            CODECS["binary"].decode(frame)
+
+    def test_flatpack_rejects_non_primitives(self):
+        with pytest.raises(CodecError):
+            flatpack([object()])
+
+
+class TestGoldenBytes:
+    """Exact frame bytes per codec: peers on other hosts (and other
+    versions) parse these — any byte change is a protocol break."""
+
+    GRANT = StepGrant(7, staleness=2)
+
+    def test_json_frame(self):
+        frame = encode_frame(self.GRANT.to_wire(), codec="json")
+        payload = b'["grant",{"step":7,"staleness":2}]'
+        assert frame == _HEADER.pack(len(payload)) + payload
+
+    def test_binary_frame(self):
+        body = (b"l\x00\x00\x00\x02"                       # list of 2
+                b"i\x00\x00\x00\x00\x00\x00\x00\x07"       # step = 7
+                b"i\x00\x00\x00\x00\x00\x00\x00\x02")      # staleness = 2
+        frame = CODECS["binary"].encode(self.GRANT.to_wire())
+        assert frame == struct.pack(">BBI", 3, 0, len(body)) + body
+
+    def test_msgpack_frame(self):
+        if "msgpack" not in CODECS:
+            pytest.skip("msgpack not installed")
+        frame = CODECS["msgpack"].encode(self.GRANT.to_wire())
+        assert frame == struct.pack(">BBI", 3, 1, 3) + b"\x92\x07\x02"
+
+    def test_wire_ids_are_pinned(self):
+        """The one-byte kind ids are a public contract: never renumber."""
+        assert {cls.kind: cls.wire_id for cls in _REGISTRY.values()} == {
+            "hello": 1, "welcome": 2, "grant": 3, "report": 4,
+            "retune": 5, "ckpt_req": 6, "ckpt_ack": 7, "shutdown": 8,
+            "goodbye": 9, "reports": 10,
+        }
+
+
+class TestLegacyWireShapes:
+    """Optional-field omission pins (DESIGN.md §13): an old peer must
+    receive byte-identical legacy shapes from a new build."""
+
+    def test_hello_without_offer_is_legacy_shape(self):
+        kind, fields = Hello("g", 1, 180).to_wire()
+        assert "codecs" not in fields
+        assert fields == {"group": "g", "pid": 1, "batch_size": 180,
+                          "incarnation": 0, "host": "", "endpoint": ""}
+        kind, fields = Hello("g", 1, 180, codecs=["json"]).to_wire()
+        assert fields["codecs"] == ["json"]
+
+    def test_welcome_json_pick_is_legacy_shape(self):
+        assert Welcome({"group": "g"}).to_wire() == \
+            ("welcome", {"spec": {"group": "g"}})
+        assert Welcome({"group": "g"}, codec="binary").to_wire()[1][
+            "codec"] == "binary"
+
+    def test_ckpt_ack_without_state_is_legacy_shape(self):
+        kind, fields = CheckpointAck(3, "g", 3, 140, 1).to_wire()
+        assert "state" not in fields
+
+    def test_grant_shape_unchanged(self):
+        assert StepGrant(7, staleness=2).to_wire() == \
+            ("grant", {"step": 7, "staleness": 2})
+
+    def test_to_wire_shares_not_copies(self):
+        """to_wire is a flat field walk, NOT dataclasses.asdict: nested
+        containers are shared by reference (senders treat messages as
+        frozen once put) — the deep copy per send was the hot-path cost
+        this PR removed."""
+        r = Retune(1, {"a": 2})
+        assert r.to_wire()[1]["batch_sizes"] is r.batch_sizes
+
+
+# ---------------------------------------------------------------------------
+# property fuzz (skips cleanly where hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+_scalars = st.one_of(
+    st.none(), st.booleans(),
+    st.integers(min_value=-(2 ** 63), max_value=2 ** 63 - 1),
+    st.floats(allow_nan=False),
+    st.text(max_size=32))
+_values = st.recursive(
+    _scalars,
+    lambda kids: st.one_of(
+        st.lists(kids, max_size=4),
+        st.dictionaries(st.text(max_size=8), kids, max_size=4)),
+    max_leaves=24)
+
+
+class TestCodecFuzz:
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(_values, max_size=8))
+    def test_flatpack_roundtrip(self, values):
+        assert flatunpack(flatpack(values)) == values
+
+    @settings(max_examples=100, deadline=None)
+    @given(step=st.integers(min_value=0, max_value=2 ** 31),
+           group=st.text(max_size=16),
+           speed=st.floats(allow_nan=False, allow_infinity=False),
+           batch=st.integers(min_value=0, max_value=10 ** 6))
+    def test_report_roundtrips_under_every_codec(self, step, group,
+                                                 speed, batch):
+        m = StepReportMsg(step, group, speed, batch_size=batch)
+        for codec in CODECS.values():
+            got = Message.from_wire(codec.decode(codec.encode(m.to_wire())))
+            assert got == m, codec.name
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.binary(max_size=64))
+    def test_arbitrary_bytes_never_decode_silently_wrong(self, blob):
+        """Random bytes either raise CodecError or decode into a
+        registered (kind, dict) wire tuple — never crash with anything
+        else, never yield a malformed tuple."""
+        for codec in CODECS.values():
+            try:
+                kind, fields = codec.decode(blob)
+            except CodecError:
+                continue
+            assert kind in _REGISTRY and isinstance(fields, dict)
+
+
+# ---------------------------------------------------------------------------
+# framing under the binary codecs (json pathologies live in
+# test_runtime_socket.py — these prove codec-blind framing stays true)
+# ---------------------------------------------------------------------------
+
+
+def _raw_pair(codec="binary"):
+    import socket as _socket
+
+    listener = _socket.socket(_socket.AF_INET, _socket.SOCK_STREAM)
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(1)
+    client = _socket.create_connection(listener.getsockname())
+    server, _ = listener.accept()
+    listener.close()
+    return SocketChannel(server, codec=codec), client
+
+
+class TestBinaryFraming:
+    @pytest.mark.parametrize("name", sorted(CODECS))
+    def test_split_and_merged_frames(self, name):
+        """One frame dribbled byte-by-byte, then two frames in a single
+        send: message boundaries come from the length prefix, not from
+        recv() boundaries — for every codec."""
+        chan, raw = _raw_pair(codec=name)
+        try:
+            f1 = encode_frame(StepGrant(11).to_wire(), codec=name)
+            for i in range(len(f1)):
+                raw.sendall(f1[i:i + 1])
+            assert chan.poll(2.0)
+            assert chan.get() == StepGrant(11)
+            f2 = encode_frame(StepGrant(12).to_wire(), codec=name)
+            f3 = encode_frame(
+                StepReportMsg(12, "g", 9.0, batch_size=8).to_wire(),
+                codec=name)
+            raw.sendall(f2 + f3)
+            assert chan.get() == StepGrant(12)
+            assert chan.get() == StepReportMsg(12, "g", 9.0, batch_size=8)
+        finally:
+            chan.close()
+            raw.close()
+
+    def test_truncated_mid_header_is_channel_closed(self):
+        chan, raw = _raw_pair()
+        try:
+            raw.sendall(b"\x00\x00")     # half a length prefix
+            raw.close()
+            assert chan.poll(2.0)
+            with pytest.raises(ChannelClosed):
+                chan.get()
+        finally:
+            chan.close()
+
+    def test_truncated_mid_payload_is_channel_closed(self):
+        chan, raw = _raw_pair()
+        try:
+            frame = encode_frame(StepGrant(5).to_wire(), codec="binary")
+            raw.sendall(frame[:-3])
+            raw.close()
+            assert chan.poll(2.0)
+            with pytest.raises(ChannelClosed):
+                chan.get()
+        finally:
+            chan.close()
+
+    def test_oversized_frame_rejected_under_binary(self):
+        chan, raw = _raw_pair()
+        chan.max_frame = 64
+        try:
+            raw.sendall(_HEADER.pack(1 << 20) + b"x" * 128)
+            assert chan.poll(2.0)
+            with pytest.raises(FrameTooLarge):
+                chan.get()
+        finally:
+            chan.close()
+            raw.close()
+
+    def test_wrong_codec_frames_are_channel_closed(self):
+        """A peer that failed to switch codecs after the rendezvous
+        produces undecodable frames — the channel treats it as gone
+        rather than guessing."""
+        chan, raw = _raw_pair(codec="binary")
+        try:
+            raw.sendall(encode_frame(StepGrant(1).to_wire(), codec="json"))
+            assert chan.poll(2.0)
+            with pytest.raises(ChannelClosed):
+                chan.get()
+        finally:
+            chan.close()
+            raw.close()
+
+    def test_socket_pair_speaks_negotiated_codec_bidirectionally(self):
+        a, b = socket_pair(codec="binary")
+        try:
+            a.put(StepGrant(3, staleness=1))
+            assert b.get() == StepGrant(3, staleness=1)
+            b.put(StepReportMsg(3, "g", 7.5, batch_size=4))
+            assert a.get() == StepReportMsg(3, "g", 7.5, batch_size=4)
+        finally:
+            a.close()
+            b.close()
+
+
+# ---------------------------------------------------------------------------
+# negotiation: unit rules + the old-worker compatibility claim, live
+# ---------------------------------------------------------------------------
+
+
+class TestNegotiation:
+    def test_rules(self):
+        assert negotiate([]) == "json"               # old worker: no offer
+        assert negotiate(None) == "json"
+        assert negotiate(["json"]) == "json"
+        assert negotiate(["binary", "json"]) == "binary"
+        assert negotiate(["made-up"]) == "json"      # unknown: ignored
+        assert negotiate(supported()) == DEFAULT_CODEC
+        # prefer caps the pick (the --codec json canary)
+        assert negotiate(supported(), prefer="json") == "json"
+
+    def test_supported_always_offers_json_floor(self):
+        offer = supported()
+        assert offer[-1] == "json" and offer[0] == DEFAULT_CODEC
+
+    def test_json_only_worker_joins_binary_default_coordinator(self):
+        """The compatibility acceptance test: a hand-rolled legacy
+        worker whose Hello carries NO codec offer (the exact pre-codec
+        bytes) joins a default coordinator, the channel stays json, and
+        real rounds complete."""
+        sm = SpeedModel(np.array([1.0, 4, 8]), np.array([2.0, 6, 8]))
+        plan = solve({"g": (1, sm)}, 512)
+        cp = ControlPlane(plan, [SpeedDeclinePolicy()])
+        mgr = SocketExecutionManager(spawn=False, hello_timeout=30.0)
+
+        def legacy_worker():
+            import socket as _socket
+            host, port = parse_endpoint(mgr.endpoint)
+            chan = SocketChannel(
+                _socket.create_connection((host, port)))
+            # codecs=[] is omitted on the wire: the legacy Hello shape
+            chan.put(Hello("g", os.getpid(), 0, codecs=[]))
+            msg = chan.get()
+            assert isinstance(msg, Welcome)
+            assert msg.codec == "json"   # coordinator negotiated down
+            # a legacy build never calls set_codec — and never needs to
+            run_worker(WorkerSpec.from_wire(msg.spec), chan)
+
+        t = threading.Thread(target=legacy_worker, daemon=True)
+        t.start()
+        loop = EventLoop(cp, mgr, round_timeout=5.0)
+        try:
+            mgr.start(specs_from_plan(plan))
+            assert mgr.workers["g"].channel.codec == "json"
+            res = loop.run(5)
+        finally:
+            loop.shutdown()
+        t.join(timeout=10.0)
+        assert not t.is_alive()
+        assert res.reports_total == 5 and res.events == []
+
+    def test_spawned_workers_negotiate_the_default_codec(self):
+        sm = SpeedModel(np.array([1.0, 4, 8]), np.array([2.0, 6, 8]))
+        plan = solve({"g": (1, sm)}, 512)
+        cp = ControlPlane(plan, [SpeedDeclinePolicy()])
+        mgr = SocketExecutionManager()
+        loop = EventLoop(cp, mgr, round_timeout=5.0)
+        try:
+            mgr.start(specs_from_plan(plan))
+            assert mgr.workers["g"].channel.codec == DEFAULT_CODEC
+            res = loop.run(4)
+        finally:
+            loop.shutdown()
+        assert res.reports_total == 4
+
+    def test_coordinator_codec_cap_forces_json(self):
+        """The --codec json canary path: a binary-capable worker against
+        a json-capped coordinator stays on the baseline."""
+        result, events = run_runtime(steps=4, manager="socket",
+                                     manager_kwargs={"codec": "json"})
+        assert events == [] and result.reports_total == 4 * 3
+
+
+# ---------------------------------------------------------------------------
+# report coalescing (the worker loop's flush semantics, deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _worker_spec(**kw):
+    return WorkerSpec("g", 8, 8, speed_batches=[1.0, 8.0],
+                      speed_speeds=[2.0, 8.0], **kw)
+
+
+class TestReportCoalescing:
+    def test_batch_pack_unpack_roundtrip(self):
+        msgs = [StepReportMsg(i, "g", 8.0 + i, cpu_util=1.0, batch_size=8)
+                for i in range(5)]
+        assert ReportBatch.pack(msgs).unpack() == msgs
+
+    def test_sync_rounds_never_batch(self):
+        """Strict alternation (staleness 0): every grant is answered by
+        a PLAIN StepReportMsg frame — the pre-coalescing wire, which is
+        what keeps the k=0 parity traces byte-for-byte."""
+        coord, worker_end = pipe_pair()
+        t = threading.Thread(target=run_worker,
+                             args=(_worker_spec(), worker_end), daemon=True)
+        t.start()
+        try:
+            assert isinstance(coord.get(), Hello)
+            for step in range(3):
+                coord.put(StepGrant(step))
+                msg = coord.get()
+                assert type(msg) is StepReportMsg and msg.step == step
+            coord.put(Shutdown())
+            assert isinstance(coord.get(), Goodbye)
+        finally:
+            coord.close()
+            t.join(timeout=10.0)
+        assert not t.is_alive()
+
+    def test_runahead_backlog_flushes_as_one_batch(self):
+        """Grants queued ahead of the worker (the run-ahead window)
+        coalesce into a single ReportBatch frame, reports in grant
+        order."""
+        coord, worker_end = pipe_pair()
+        for step in range(4):            # backlog BEFORE the loop starts
+            coord.put(StepGrant(step, staleness=3))
+        t = threading.Thread(target=run_worker,
+                             args=(_worker_spec(), worker_end), daemon=True)
+        t.start()
+        try:
+            assert isinstance(coord.get(), Hello)
+            msg = coord.get()
+            assert type(msg) is ReportBatch
+            reports = msg.unpack()
+            assert [r.step for r in reports] == [0, 1, 2, 3]
+            assert all(r.batch_size == 8 for r in reports)
+            coord.put(Shutdown())
+            assert isinstance(coord.get(), Goodbye)
+        finally:
+            coord.close()
+            t.join(timeout=10.0)
+        assert not t.is_alive()
+
+    def test_checkpoint_ack_never_overtakes_reports(self):
+        """A CheckpointRequest queued behind grants flushes the pending
+        reports FIRST: the ack describes a worker state whose reports
+        have already been delivered."""
+        coord, worker_end = pipe_pair()
+        for step in range(3):
+            coord.put(StepGrant(step, staleness=2))
+        coord.put(CheckpointRequest(2))
+        t = threading.Thread(target=run_worker,
+                             args=(_worker_spec(), worker_end), daemon=True)
+        t.start()
+        try:
+            assert isinstance(coord.get(), Hello)
+            batch = coord.get()
+            assert type(batch) is ReportBatch and len(batch.reports) == 3
+            ack = coord.get()
+            assert isinstance(ack, CheckpointAck)
+            assert ack.worker_step == 3
+            coord.put(Shutdown())
+            assert isinstance(coord.get(), Goodbye)
+        finally:
+            coord.close()
+            t.join(timeout=10.0)
+        assert not t.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# shared-memory bulk plane
+# ---------------------------------------------------------------------------
+
+needs_shm = pytest.mark.skipif(not shm_available(),
+                               reason="multiprocessing.shared_memory missing")
+
+
+class TestShmBulk:
+    def test_inline_ref_roundtrip(self):
+        assert bulk_bytes(inline_ref(b"hello")) == b"hello"
+        assert bulk_bytes(None) is None
+        assert resolve_bulk(None) is None
+
+    def test_unknown_tag_raises(self):
+        with pytest.raises(BulkUnavailable):
+            resolve_bulk(["carrier-pigeon", "x"])
+
+    def test_shm_ref_without_reader_raises(self):
+        with pytest.raises(BulkUnavailable):
+            resolve_bulk(["shm", "nope", 0, 1, 1], None)
+
+    @needs_shm
+    def test_publish_resolve_roundtrip(self):
+        plane = ShmBulkPlane(capacity=4096)
+        reader = ShmBulkReader()
+        try:
+            data = os.urandom(512)
+            ref = plane.publish(data)
+            assert ref[0] == "shm" and ref[1] == plane.name
+            assert resolve_bulk(ref, reader) == data
+            # a second resolve of a live chunk still works (copy-out)
+            assert resolve_bulk(ref, reader) == data
+        finally:
+            reader.close()
+            plane.close()
+
+    @needs_shm
+    def test_lapped_chunk_is_bulk_unavailable(self):
+        """The ring wraps and overwrites: the OLD reference must fail
+        loudly (stamp mismatch), never return the new chunk's bytes."""
+        plane = ShmBulkPlane(capacity=4096)
+        reader = ShmBulkReader()
+        try:
+            big = plane.capacity * 2 // 3
+            old_ref = plane.publish(b"a" * big)
+            new_ref = plane.publish(b"b" * big)   # wraps, laps the first
+            with pytest.raises(BulkUnavailable):
+                resolve_bulk(old_ref, reader)
+            assert resolve_bulk(new_ref, reader) == b"b" * big
+        finally:
+            reader.close()
+            plane.close()
+
+    @needs_shm
+    def test_oversized_payload_degrades_to_inline(self):
+        plane = ShmBulkPlane(capacity=4096)
+        try:
+            data = b"x" * (plane.capacity + 1)
+            ref = plane.publish(data)
+            assert ref[0] == "inline"
+            assert bulk_bytes(ref) == data
+        finally:
+            plane.close()
+
+    @needs_shm
+    def test_vanished_segment_is_bulk_unavailable(self):
+        plane = ShmBulkPlane(capacity=4096)
+        ref = plane.publish(b"gone soon")
+        plane.close()                    # owner unlinks
+        reader = ShmBulkReader()
+        try:
+            with pytest.raises(BulkUnavailable):
+                resolve_bulk(ref, reader)
+        finally:
+            reader.close()
+
+    @needs_shm
+    def test_publish_bulk_falls_back_after_plane_close(self):
+        plane = ShmBulkPlane(capacity=4096)
+        plane.close()
+        ref = publish_bulk(b"data", plane)
+        assert ref[0] == "inline" and bulk_bytes(ref) == b"data"
+
+    @needs_shm
+    def test_checkpoint_state_travels_by_shm_end_to_end(self):
+        """Process workers publish checkpoint state through the ring;
+        the coordinator resolves refs at receive time and normalizes
+        acks to the inline form — consumers never see an shm ref."""
+        sm = SpeedModel(np.array([1.0, 4, 8]), np.array([2.0, 6, 8]))
+        plan = solve({"g": (1, sm)}, 512)
+        cp = ControlPlane(plan, [SpeedDeclinePolicy()])
+        mgr = ProcessManager()
+        loop = EventLoop(cp, mgr, round_timeout=30.0)
+        try:
+            mgr.start(specs_from_plan(plan))
+            assert mgr.workers["g"].spec.bulk == "shm"
+            res = loop.run(6, checkpoint_every=3)
+        finally:
+            loop.shutdown()
+        assert res.checkpoint_acks
+        for ack in res.checkpoint_acks:
+            assert ack.state is not None and ack.state[0] == "inline"
+            state = json.loads(bulk_bytes(ack.state))
+            assert state["group"] == "g"
+            assert state["worker_step"] == ack.worker_step
+            assert state["speed_history"]
+
+
+# ---------------------------------------------------------------------------
+# parse_endpoint (satellite: port range + IPv6 brackets)
+# ---------------------------------------------------------------------------
+
+
+class TestParseEndpoint:
+    def test_valid_forms(self):
+        assert parse_endpoint("10.0.0.2:5555") == ("10.0.0.2", 5555)
+        assert parse_endpoint(":5555") == ("127.0.0.1", 5555)
+        assert parse_endpoint("[::1]:5555") == ("::1", 5555)
+        assert parse_endpoint("[fe80::1%eth0]:80") == ("fe80::1%eth0", 80)
+
+    def test_ephemeral_port_is_listen_only(self):
+        assert parse_endpoint(":0", allow_ephemeral=True) == \
+            ("127.0.0.1", 0)
+        with pytest.raises(ValueError):
+            parse_endpoint(":0")
+
+    @pytest.mark.parametrize("bad", [
+        "nonsense",                      # no port separator
+        "host:99999",                    # above 65535
+        "host:-1",                       # sign is not a digit
+        "host:٥٥٥٥",                     # unicode digits int() chokes on
+        "host:",                         # empty port
+        "::1:5555",                      # unbracketed IPv6: ambiguous
+        "[::1:5555",                     # unterminated bracket
+        "[plainhost]:5555",              # brackets without an IPv6 literal
+    ])
+    def test_rejected_forms(self, bad):
+        with pytest.raises(ValueError):
+            parse_endpoint(bad)
