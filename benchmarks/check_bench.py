@@ -108,6 +108,8 @@ HISTORY_METRICS = {
     "async_speedup": "runtime_async_staleness.derived",
     "codec": "wire_codec.default_codec",
     "wire_bytes_per_frame": "wire_codec.default_bytes_per_frame",
+    "round_p99_us": "runtime_rounds.round_latency_p99_us",
+    "trace_overhead": "trace_overhead.derived",
 }
 
 
@@ -150,7 +152,7 @@ def append_and_print_history(path: str, bench: Dict, ok: bool,
           f"showing last {len(shown)}):")
     print(f"  {'run':>6} {'commit':<12} {'pipe rep/s':>11} "
           f"{'sock rep/s':>11} {'json k0':>9} {'async x':>8} "
-          f"{'codec':>7} {'B/frm':>5}  gate")
+          f"{'codec':>7} {'B/frm':>5} {'p99 us':>8} {'trace x':>8}  gate")
     for r in shown:
         def col(key, width, fmt="{:.1f}"):
             v = r.get(key)
@@ -167,7 +169,9 @@ def append_and_print_history(path: str, bench: Dict, ok: bool,
               f"{col('json_sync_reports_per_s', 9)} "
               f"{col('async_speedup', 8, '{:.3f}')} "
               f"{col('codec', 7)} "
-              f"{col('wire_bytes_per_frame', 5, '{:.0f}')}  "
+              f"{col('wire_bytes_per_frame', 5, '{:.0f}')} "
+              f"{col('round_p99_us', 8)} "
+              f"{col('trace_overhead', 8, '{:.3f}')}  "
               f"{'ok' if r.get('ok') else 'FAIL'}")
 
 

@@ -39,18 +39,39 @@ import numpy as np
 from repro.core.allocator import solve
 from repro.core.control import ControlPlane, SpeedDeclinePolicy
 from repro.core.speed_model import SpeedModel
+from repro.obs import MetricsRegistry
 from repro.runtime import EventLoop, FaultAction, MANAGERS, specs_from_plan
 from repro.runtime.parity import fig6_parity
 
 
+def _round_stats_line(metrics: MetricsRegistry) -> str:
+    """Round/lag stats straight from the run's registry (DESIGN.md §14)
+    — the single numeric source of truth, not re-derived ad hoc."""
+    lat = metrics.get("coord.round_latency_s")
+    parts = []
+    if lat is not None and lat.count:
+        parts.append(f"round p50={lat.quantile(0.5) * 1e3:.2f}ms "
+                     f"p99={lat.quantile(0.99) * 1e3:.2f}ms")
+    lag = metrics.get("coord.retune_effect_lag_rounds")
+    if lag is not None and lag.count:
+        parts.append(f"retune effect lag p50={lag.quantile(0.5):.0f} "
+                     f"rounds")
+    reps = metrics.get("coord.reports")
+    if reps is not None:
+        parts.append(f"reports={reps.value}")
+    return "  " + " | ".join(parts) if parts else ""
+
+
 def phase1_trace_parity(runtime: str, staleness: int,
-                        mgr_kwargs: dict = {}) -> None:
+                        mgr_kwargs: dict = {}, tracer=None) -> None:
     print(f"— phase 1: Fig. 6 trace parity through {runtime} workers "
           f"(staleness k={staleness}"
           + (f", codec={mgr_kwargs['codec']}" if "codec" in mgr_kwargs
              else "") + ") —")
+    metrics = MetricsRegistry()
     p = fig6_parity(manager=runtime, staleness=staleness,
-                    manager_kwargs=mgr_kwargs)
+                    manager_kwargs=mgr_kwargs, tracer=tracer,
+                    metrics=metrics)
     print(f"  sim     : {p['sim']}")
     print(f"  runtime : {p['runtime']}")
     assert p["match"], "runtime diverged from the simulator trace"
@@ -59,22 +80,24 @@ def phase1_trace_parity(runtime: str, staleness: int,
     seq = [e[2] for e in p["runtime"]] + [p["runtime"][-1][3]]
     print(f"  retune sequence {' -> '.join(map(str, seq))}  "
           f"(paper §III-B worked example)  "
-          f"[{p['result'].reports_per_s:.0f} reports/s, "
-          f"lag {p['result'].retune_lags} round(s)]")
+          f"[lag {p['result'].retune_lags} round(s)]")
+    print(_round_stats_line(metrics))
     if p["result"].hosts:
         print(f"  cluster map: {p['result'].hosts}")
 
 
 def phase2_live_training(runtime: str, steps: int,
                          staleness: int = 0,
-                         mgr_kwargs: dict = {}) -> None:
+                         mgr_kwargs: dict = {}, tracer=None) -> None:
     print(f"\n— phase 2: real jitted training in {runtime} workers, "
           f"kill + rejoin (staleness k={staleness}) —")
     sm = SpeedModel(np.array([1.0, 2, 4, 8]), np.array([10.0, 18, 28, 30]))
     plan = solve({"a": (1, sm), "b": (1, sm)}, dataset_size=4096)
     cp = ControlPlane(plan, [SpeedDeclinePolicy()], liveness_timeout=3)
+    metrics = MetricsRegistry()
     specs = specs_from_plan(
-        plan, train={"arch": "deepseek-7b", "seq_len": 32, "reduced": True})
+        plan, train={"arch": "deepseek-7b", "seq_len": 32, "reduced": True},
+        obs=tracer is not None)
     faults = []
     # under run-ahead the dead worker may have pre-delivered up to k
     # reports, deferring silence-derived detection by at most k rounds —
@@ -93,7 +116,7 @@ def phase2_live_training(runtime: str, steps: int,
               f"staleness {staleness}; skipping fault injection)")
     manager = MANAGERS[runtime](**mgr_kwargs)
     loop = EventLoop(cp, manager, round_timeout=120.0,
-                     staleness=staleness)
+                     staleness=staleness, tracer=tracer, metrics=metrics)
     try:
         manager.start(specs)
         res = loop.run(steps, faults=faults,
@@ -102,6 +125,7 @@ def phase2_live_training(runtime: str, steps: int,
         loop.shutdown()
     print(f"  {res.rounds} rounds, {res.reports_total} reports, "
           f"plan changes: {res.event_tuples()}")
+    print(_round_stats_line(metrics))
     if faults:
         reasons = [e.reason for e in res.events]
         assert "failure" in reasons, "kill was not detected via silence"
@@ -128,6 +152,9 @@ def main() -> None:
                          "old-worker compatibility canary)")
     ap.add_argument("--skip-train", action="store_true",
                     help="protocol/parity phase only (no jitted steps)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write both phases' merged run timeline as "
+                         "Chrome trace-event JSON (Perfetto-loadable)")
     args = ap.parse_args()
     mgr_kwargs = {}
     if args.codec != "auto":
@@ -136,10 +163,21 @@ def main() -> None:
                      "in-process transports exchange objects, not "
                      "framed bytes)")
         mgr_kwargs = {"codec": args.codec}
-    phase1_trace_parity(args.runtime, args.staleness, mgr_kwargs)
-    if not args.skip_train:
-        phase2_live_training(args.runtime, args.steps, args.staleness,
-                             mgr_kwargs)
+    tracer = None
+    if args.trace:
+        from repro.obs import ChromeTraceSink, Tracer
+        tracer = Tracer(source="coord",
+                        sinks=[ChromeTraceSink(args.trace)])
+    try:
+        phase1_trace_parity(args.runtime, args.staleness, mgr_kwargs,
+                            tracer=tracer)
+        if not args.skip_train:
+            phase2_live_training(args.runtime, args.steps, args.staleness,
+                                 mgr_kwargs, tracer=tracer)
+    finally:
+        if tracer is not None:
+            tracer.close()
+            print(f"trace written to {args.trace}")
 
 
 if __name__ == "__main__":

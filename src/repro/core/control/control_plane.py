@@ -26,18 +26,26 @@ from typing import Dict, List, Optional, Sequence
 from repro.core import allocator
 from repro.core.allocator import BatchPlan
 from repro.core.control.policies import (CpuUtilPolicy, Decision,
-                                         EnergyAwarePolicy, Eq3TablePolicy,
-                                         HyperTuneConfig, SpeedDeclinePolicy,
-                                         TuningPolicy)
+                                         EnergyAwarePolicy, Eq2Trigger,
+                                         Eq3TablePolicy, HyperTuneConfig,
+                                         SpeedDeclinePolicy, TuningPolicy)
 from repro.core.control.telemetry import (StepReport, TelemetryBus,
                                           normalize_reports)
+from repro.obs import NULL_TRACER
 
 
 @dataclasses.dataclass
 class RetuneEvent:
     """One applied plan change. ``reason`` is "decline" | "recover" |
     "energy" | "failure". Moved here from ``repro.core.controller``
-    (which re-exports it)."""
+    (which re-exports it).
+
+    ``rationale`` (DESIGN.md §14) is the structured WHY behind the
+    decision: which policy fired, which rule, and the observed vs
+    Eq. 2-required speed at decision time (computed BEFORE the plan
+    mutates, so the numbers are the ones the policy actually saw).
+    Diagnostic only — it never travels on the wire and is excluded from
+    ``event_tuples`` comparisons, so sim/runtime parity is untouched."""
 
     step: int
     group: str
@@ -45,6 +53,7 @@ class RetuneEvent:
     new_batch: int
     reason: str
     plan: BatchPlan
+    rationale: Optional[Dict] = None
 
 
 def policy_from_config(cfg: HyperTuneConfig) -> TuningPolicy:
@@ -76,6 +85,10 @@ class ControlPlane:
         self.events: List[RetuneEvent] = []
         self.indices: List[Dict[str, float]] = []
         self._silence_failed: Dict[str, bool] = {}
+        # coordinator trace hook (DESIGN.md §14): the event loop swaps
+        # in its Tracer; NULL_TRACER is falsy, so the default costs one
+        # dead branch per applied retune
+        self.tracer = NULL_TRACER
 
     # ------------------------------------------------------------------
     # per-step entry points
@@ -105,8 +118,13 @@ class ControlPlane:
             for policy in self.policies:
                 decision = policy.decide(step, self.plan, reps)
                 if decision is not None:
-                    event = self._apply(step, decision.group,
-                                        decision.new_batch, decision.reason)
+                    # rationale BEFORE _apply: required_speed reads the
+                    # pre-mutation plan — the numbers the policy saw
+                    event = self._apply(
+                        step, decision.group, decision.new_batch,
+                        decision.reason,
+                        rationale=self._policy_rationale(
+                            policy, decision, reps))
                     break
         # diagnostics: per-step Eq. 2 indices from the first policy
         # exposing them (mirrors the historical controller.indices);
@@ -126,16 +144,19 @@ class ControlPlane:
     # ------------------------------------------------------------------
     # elastic path
     # ------------------------------------------------------------------
-    def mark_failed(self, step: int, group: str) -> RetuneEvent:
+    def mark_failed(self, step: int, group: str,
+                    rationale: Optional[Dict] = None) -> RetuneEvent:
         """A group disappeared (pre-emption / crash): b_g -> 0 masks its
         rows; Eq. 1 re-splits the dataset so no samples are starved."""
         g = next(g for g in self.plan.groups if g.name == group)
-        return self._apply(step, g.name, 0, "failure")
+        return self._apply(step, g.name, 0, "failure", rationale=rationale)
 
-    def mark_rejoined(self, step: int, group: str) -> RetuneEvent:
+    def mark_rejoined(self, step: int, group: str,
+                      rationale: Optional[Dict] = None) -> RetuneEvent:
         g = next(g for g in self.plan.groups if g.name == group)
         bs = int(g.speed_model.knee())
-        return self._apply(step, g.name, min(bs, g.capacity), "recover")
+        return self._apply(step, g.name, min(bs, g.capacity), "recover",
+                           rationale=rationale)
 
     def _maybe_rejoin(self, step: int,
                       reports: Dict[str, StepReport]
@@ -146,7 +167,9 @@ class ControlPlane:
         for name in reports:
             if self._silence_failed.get(name):
                 self._silence_failed[name] = False
-                return self.mark_rejoined(step, name)
+                return self.mark_rejoined(
+                    step, name,
+                    rationale={"policy": "liveness", "rule": "rejoin"})
         return None
 
     def _check_liveness(self, step: int) -> Optional[RetuneEvent]:
@@ -162,17 +185,41 @@ class ControlPlane:
             if step - last >= self.liveness_timeout and \
                     not self._silence_failed.get(g.name):
                 self._silence_failed[g.name] = True
-                return self.mark_failed(step, g.name)
+                return self.mark_failed(
+                    step, g.name,
+                    rationale={"policy": "liveness", "rule": "bus_silence",
+                               "silent_rounds": step - last})
         return None
 
     # ------------------------------------------------------------------
-    def _apply(self, step: int, group: str, new_bs: int,
-               reason: str) -> RetuneEvent:
+    def _policy_rationale(self, policy: TuningPolicy, decision: Decision,
+                          reps: Dict[str, StepReport]) -> Dict:
+        """The structured WHY for a policy decision, from the
+        pre-mutation plan: which policy, which rule, and observed vs
+        Eq. 2-required speed for the group it fired on."""
+        r = reps.get(decision.group)
+        return {
+            "policy": getattr(policy, "name", type(policy).__name__),
+            "rule": decision.reason,
+            "observed_speed": r.speed if r is not None else None,
+            "required_speed": Eq2Trigger.required_speed(
+                self.plan, decision.group),
+        }
+
+    def _apply(self, step: int, group: str, new_bs: int, reason: str,
+               rationale: Optional[Dict] = None) -> RetuneEvent:
         g = next(g for g in self.plan.groups if g.name == group)
         old = g.batch_size
         self.plan = allocator.retune(self.plan, {group: new_bs}, min_batch=0)
-        ev = RetuneEvent(step, group, old, new_bs, reason, self.plan)
+        ev = RetuneEvent(step, group, old, new_bs, reason, self.plan,
+                         rationale)
         self.events.append(ev)
+        if self.tracer:
+            args = {"step": step, "group": group, "old_batch": old,
+                    "new_batch": new_bs, "reason": reason}
+            if rationale:
+                args.update(rationale)
+            self.tracer.instant("control", "retune", args)
         for policy in self.policies:
             policy.plan_applied(self.plan, group, reason)
         return ev

@@ -23,6 +23,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional
 
+from repro.obs import NULL_TRACER
+
+# subscriber failures recorded per bus, bounded so a subscriber that
+# throws every step cannot grow memory for the whole run
+_MAX_SUBSCRIBER_ERRORS = 256
+
 
 @dataclasses.dataclass
 class StepReport:
@@ -79,19 +85,37 @@ class TelemetryBus:
     (the control plane) calls :meth:`drain` once per step and gets the
     latest report per group. ``last_seen`` survives drains — liveness is
     derived from it rather than from a separate heartbeat message type.
+
+    Subscribers are OBSERVERS: an exception raised by one must never
+    take down the publisher (the coordinator round) or starve the
+    subscribers after it. ``publish`` isolates each call — failures are
+    recorded in :attr:`errors` (bounded) and as ``error/subscriber``
+    trace events when a tracer is attached, and never re-raised.
     """
 
     def __init__(self) -> None:
         self._pending: Dict[str, StepReport] = {}
         self._last_seen: Dict[str, int] = {}
         self._subscribers: List[Callable[[StepReport], None]] = []
+        self.errors: List[Dict] = []
+        self.tracer = NULL_TRACER
 
     # -- producer side --------------------------------------------------
     def publish(self, report: StepReport) -> None:
         self._pending[report.group] = report
         self._last_seen[report.group] = report.step
         for fn in self._subscribers:
-            fn(report)
+            try:
+                fn(report)
+            except Exception as exc:          # noqa: BLE001 — observer fence
+                detail = {"group": report.group, "step": report.step,
+                          "subscriber": getattr(fn, "__qualname__",
+                                                None) or repr(fn),
+                          "error": repr(exc)}
+                if len(self.errors) < _MAX_SUBSCRIBER_ERRORS:
+                    self.errors.append(detail)
+                if self.tracer:
+                    self.tracer.instant("error", "subscriber", detail)
 
     def publish_step(self, step: int, reports) -> None:
         """Publish a whole step's worth of (possibly legacy) reports."""
@@ -138,6 +162,11 @@ class StepBuckets:
     def __init__(self) -> None:
         self._buckets: Dict[int, Dict[str, object]] = {}
         self._floor = 0
+        # depth observer (DESIGN.md §14): called with the number of
+        # partially-assembled rounds after every mutation — the
+        # coordinator wires it to a ``coord.bucket_depth`` gauge. None
+        # (the default) keeps add/pop free of any observability cost.
+        self.on_depth: Optional[Callable[[int], None]] = None
 
     @property
     def floor(self) -> int:
@@ -149,6 +178,8 @@ class StepBuckets:
         if step < self._floor:
             return False
         self._buckets.setdefault(step, {}).setdefault(group, payload)
+        if self.on_depth is not None:
+            self.on_depth(len(self._buckets))
         return True
 
     def peek(self, step: int) -> Dict[str, object]:
@@ -162,6 +193,8 @@ class StepBuckets:
         self._floor = max(self._floor, step + 1)
         for s in [s for s in self._buckets if s < self._floor]:
             del self._buckets[s]
+        if self.on_depth is not None:
+            self.on_depth(len(self._buckets))
         return out
 
     def pending_steps(self) -> List[int]:

@@ -59,6 +59,8 @@ from repro.core.control import (ControlPlane, HyperTuneConfig, StepReport,
 from repro.core.speed_model import SpeedModel, probe
 from repro.data.pipeline import HeteroPipeline
 from repro.models.model_factory import aux_inputs, build_model
+from repro.obs import (LOG, ChromeTraceSink, EventLog, MetricsRegistry,
+                       Tracer)
 from repro.optim.optimizer import AdamW, OptConfig
 
 
@@ -250,9 +252,13 @@ class HeteroTrainer:
             if self.cfg.ckpt_every and self.step % self.cfg.ckpt_every == 0:
                 self.save()
             if self.cfg.log_every and self.step % self.cfg.log_every == 0:
-                print(f"step {self.step:5d} loss {loss:.4f} "
-                      f"gb {plan.global_batch} "
-                      f"({rec.throughput:.1f} samp/s)", flush=True)
+                LOG.info("train_step",
+                         f"step {self.step:5d} loss {loss:.4f} "
+                         f"gb {plan.global_batch} "
+                         f"({rec.throughput:.1f} samp/s)",
+                         step=self.step, loss=loss,
+                         global_batch=plan.global_batch,
+                         throughput=rec.throughput)
         if self.ckpt:
             self.save()
             self.ckpt.wait()
@@ -404,15 +410,27 @@ def events_report_fn(interferences, dropouts) -> Optional[Callable]:
 def _run_distributed(args, cfg: TrainerConfig, sm: SpeedModel,
                      interferences, dropouts) -> None:
     """Drive training through the Stannis runtime (repro.runtime): a
-    coordinator EventLoop + thread or process workers over typed IPC."""
+    coordinator EventLoop + thread or process workers over typed IPC.
+
+    Diagnostics route through an :class:`EventLog` (DESIGN.md §14):
+    human-readable lines on stderr, the same events into the trace sink
+    when ``--trace`` is on. The lines scripts consume — the socket
+    coordinator's "listening on" line, the per-group join commands and
+    the cluster map — stay on stdout, unchanged."""
     from repro.runtime import EventLoop, MANAGERS, specs_from_plan
 
+    tracer = (Tracer(source="coord", sinks=[ChromeTraceSink(args.trace)])
+              if args.trace else None)
+    metrics = (MetricsRegistry() if args.trace or args.metrics_every
+               else None)
+    log = EventLog(tracer)
     if cfg.ckpt_dir or args.resume:
         # runtime CheckpointAcks are state summaries, not on-disk
         # snapshots (param fan-in is a ROADMAP open item)
-        print("warning: --ckpt-dir/--resume are inproc-only; the "
-              f"{args.runtime} runtime does not persist checkpoints yet",
-              flush=True)
+        log.warn("ckpt_unsupported",
+                 "warning: --ckpt-dir/--resume are inproc-only; the "
+                 f"{args.runtime} runtime does not persist checkpoints yet",
+                 runtime=args.runtime)
     plan = allocator.solve(_parse_groups(args.groups, sm), cfg.dataset_size)
     train_workers = (args.worker_train == "on"
                      or (args.worker_train == "auto"
@@ -442,35 +460,56 @@ def _run_distributed(args, cfg: TrainerConfig, sm: SpeedModel,
     round_timeout = (args.round_timeout if args.round_timeout is not None
                      else (120.0 if train_workers else 5.0))
     loop = EventLoop(cp, manager, round_timeout=round_timeout,
-                     staleness=args.staleness)
-    print(f"runtime={args.runtime} workers={plan.batch_sizes()} "
-          f"train_in_workers={train_workers} staleness={args.staleness}")
+                     staleness=args.staleness, tracer=tracer,
+                     metrics=metrics, metrics_every=args.metrics_every)
+    log.info("runtime_start",
+             f"runtime={args.runtime} workers={plan.batch_sizes()} "
+             f"train_in_workers={train_workers} staleness={args.staleness}",
+             runtime=args.runtime, staleness=args.staleness,
+             train_in_workers=train_workers)
     try:
         # start() inside the try: a handshake failure on worker N must
         # still tear down workers 0..N-1
         manager.start(specs_from_plan(plan, interferences, dropouts,
-                                      train=train, seed=cfg.seed))
+                                      train=train, seed=cfg.seed,
+                                      obs=tracer is not None))
         res = loop.run(args.steps, checkpoint_every=10)
     finally:
         loop.shutdown()
-    print(f"done: {res.rounds} rounds, {res.reports_total} reports "
-          f"({res.reports_per_s:.0f} reports/s, "
-          f"{res.mean_round_latency_s * 1e3:.1f} ms/round), "
-          f"{len(res.events)} plan changes")
+        if tracer is not None:
+            tracer.close()
+    log.info("runtime_done",
+             f"done: {res.rounds} rounds, {res.reports_total} reports "
+             f"({res.reports_per_s:.0f} reports/s, "
+             f"{res.mean_round_latency_s * 1e3:.1f} ms/round), "
+             f"{len(res.events)} plan changes",
+             rounds=res.rounds, reports=res.reports_total,
+             retunes=len(res.events))
     for e in res.events:
-        print(f"  retune @ round {e.step}: {e.group}:"
-              f"{e.old_batch}->{e.new_batch} ({e.reason})")
+        log.info("retune",
+                 f"  retune @ round {e.step}: {e.group}:"
+                 f"{e.old_batch}->{e.new_batch} ({e.reason})")
     if res.retune_lags:
-        print(f"  retune propagation lag: {res.retune_lags} round(s)")
+        log.info("retune_lags",
+                 f"  retune propagation lag: {res.retune_lags} round(s)")
     if res.staleness:
-        print(f"  bounded staleness k={res.staleness}: "
-              f"{res.stale_reports} stale report(s) dropped")
+        log.info("staleness",
+                 f"  bounded staleness k={res.staleness}: "
+                 f"{res.stale_reports} stale report(s) dropped")
     if res.hosts:
+        # the cluster map is a script-consumed contract: stdout
         for g, where in sorted(res.hosts.items()):
             print(f"  group {g}: {where}")
     for ack in res.checkpoint_acks[-len(plan.groups):]:
-        print(f"  worker {ack.group}: step {ack.worker_step} "
-              f"b={ack.batch_size} compiles={ack.n_compiles}")
+        log.info("worker_final",
+                 f"  worker {ack.group}: step {ack.worker_step} "
+                 f"b={ack.batch_size} compiles={ack.n_compiles}")
+    if metrics is not None:
+        log.info("metrics_summary", metrics.summary_line("[metrics] "))
+    if args.trace:
+        log.info("trace_written",
+                 f"trace written to {args.trace} — summarize with: "
+                 f"python -m repro.launch.obs summarize {args.trace}")
 
 
 def main() -> None:
@@ -513,6 +552,15 @@ def main() -> None:
                     default="auto",
                     help="run real jitted steps inside runtime workers "
                          "(auto: on for --runtime process)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the run timeline (coordinator + worker "
+                         "spans, retune rationale) as Chrome trace-event "
+                         "JSON — open in https://ui.perfetto.dev or "
+                         "summarize with python -m repro.launch.obs")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="print a one-line metrics summary (round "
+                         "latency quantiles, report/retune counters) "
+                         "every N coordinator rounds")
     args = ap.parse_args()
     if args.staleness and args.runtime == "inproc":
         # the inproc loop has no grant pipeline to run ahead on —
@@ -522,6 +570,11 @@ def main() -> None:
                  "process")
     if args.staleness < 0:
         ap.error("--staleness must be >= 0")
+    if args.runtime == "inproc" and (args.trace or args.metrics_every):
+        ap.error("--trace/--metrics-every instrument the runtime "
+                 "coordinator; use --runtime local, process or socket")
+    if args.metrics_every < 0:
+        ap.error("--metrics-every must be >= 0")
     if args.runtime != "socket":
         if args.external_workers:
             ap.error("--external-workers requires --runtime socket")
@@ -543,7 +596,8 @@ def main() -> None:
                                  np.array([1.0, 2, 4])))}, 64)
     bootstrap = HeteroTrainer(arch, boot_plan, cfg)
     sm = bootstrap.probe_speed_model()
-    print(f"probe: knee={sm.knee()} vmax={sm.vmax:.2f} samp/s")
+    LOG.info("probe", f"probe: knee={sm.knee()} vmax={sm.vmax:.2f} samp/s",
+             knee=float(sm.knee()), vmax=float(sm.vmax))
 
     if args.runtime != "inproc":
         _run_distributed(args, cfg, sm, interferences, dropouts)
@@ -554,13 +608,16 @@ def main() -> None:
     trainer.params = bootstrap.params        # reuse init
     if args.resume:
         if trainer.resume():
-            print(f"resumed at step {trainer.step}")
+            LOG.info("resume", f"resumed at step {trainer.step}",
+                     step=trainer.step)
     recs = trainer.run(report_fn=events_report_fn(interferences, dropouts))
     retunes = [r for r in recs if r.retune]
-    print(f"done: {len(recs)} steps, {len(retunes)} retunes, "
-          f"final loss {recs[-1].loss:.4f}")
+    LOG.info("inproc_done",
+             f"done: {len(recs)} steps, {len(retunes)} retunes, "
+             f"final loss {recs[-1].loss:.4f}",
+             steps=len(recs), retunes=len(retunes), loss=recs[-1].loss)
     for r in retunes:
-        print(f"  retune @ step {r.step}: {r.retune}")
+        LOG.info("retune", f"  retune @ step {r.step}: {r.retune}")
 
 
 if __name__ == "__main__":

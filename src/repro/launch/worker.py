@@ -33,6 +33,7 @@ import socket as _socket
 import time
 from typing import Optional
 
+from repro.obs import LOG
 # parse_endpoint lives with the transport; re-exported here because the
 # CLI surface is where users first meet endpoints
 from repro.runtime.ipc.codec import supported
@@ -101,10 +102,14 @@ def main(argv: Optional[list] = None) -> None:
     ap.add_argument("--retry-for", type=float, default=30.0,
                     help="seconds to retry the initial connect")
     args = ap.parse_args(argv)
-    print(f"worker {args.group}: connecting to {args.connect}", flush=True)
+    # diagnostics go to stderr (DESIGN.md §14) — stdout stays free for
+    # anything a wrapping script captures
+    LOG.info("worker_connect",
+             f"worker {args.group}: connecting to {args.connect}",
+             group=args.group, endpoint=args.connect)
     connect_and_serve(args.connect, args.group, args.incarnation,
                       retry_for=args.retry_for)
-    print(f"worker {args.group}: done", flush=True)
+    LOG.info("worker_done", f"worker {args.group}: done", group=args.group)
 
 
 if __name__ == "__main__":

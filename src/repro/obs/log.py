@@ -1,0 +1,53 @@
+"""EventLog: the diagnostic ``print()`` replacement (DESIGN.md §14).
+
+Launch-layer diagnostics used to be bare ``print()`` calls on stdout —
+unparseable, unmergeable with the run timeline, and mixed in with the
+lines scripts actually consume (the coordinator's join commands and
+cluster map). An :class:`EventLog` splits the two audiences: the
+human-readable line goes to *stderr*, and the same event — name +
+structured fields — goes to the trace sink when one is attached, so a
+captured trace carries the launch narrative alongside the spans.
+
+``LOG`` is the module-level default (stderr, no tracer) for call sites
+that have no tracer in scope (the standalone worker CLI, the inproc
+trainer). Lines that are a script-consumed contract — the coordinator's
+"listening on" line, the per-group join commands, the cluster map —
+stay on stdout at their call sites and never route through here.
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.obs.trace import NULL_TRACER
+
+__all__ = ["EventLog", "LOG"]
+
+
+class EventLog:
+    def __init__(self, tracer=None, stream=None) -> None:
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._stream = stream
+
+    @property
+    def stream(self):
+        # resolve lazily: tests that monkeypatch sys.stderr see it
+        return self._stream if self._stream is not None else sys.stderr
+
+    def info(self, name: str, message: str, **fields) -> None:
+        print(message, file=self.stream, flush=True)
+        if self.tracer:
+            self.tracer.instant("log", name, fields or None)
+
+    def warn(self, name: str, message: str, **fields) -> None:
+        print(message, file=self.stream, flush=True)
+        if self.tracer:
+            fields["level"] = "warn"
+            self.tracer.instant("log", name, fields)
+
+    def event(self, name: str, **fields) -> None:
+        """Machine-readable only: no stderr line."""
+        if self.tracer:
+            self.tracer.instant("log", name, fields or None)
+
+
+LOG = EventLog()

@@ -1,0 +1,170 @@
+"""Counters, gauges and log-bucketed histograms (DESIGN.md §14).
+
+The :class:`MetricsRegistry` is the run's single numeric source of
+truth: the coordinator records round latency, per-worker grant->report
+lag, retune decision->effect lag, frame/byte counts per codec,
+ReportBatch sizes, shm hits vs inline fallbacks and fault events into
+it, and benches / examples / the ``--metrics-every`` printer all read
+the SAME registry instead of re-deriving stats ad hoc.
+
+Histograms are log-bucketed (base ``2**0.25``, ~±9% relative error per
+bucket): ``record`` is one ``math.log`` + a dict increment — cheap
+enough for the report hot path — and quantiles come from the bucket
+counts, clamped to the observed min/max so p0/p100 are exact. No
+third-party dependency, no locks (the coordinator loop and each worker
+are single-threaded over their own registry).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry"]
+
+_LOG_BASE = 2.0 ** 0.25
+_LN_BASE = math.log(_LOG_BASE)
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def snapshot(self) -> Dict:
+        return {"type": "counter", "value": self.value}
+
+
+class Gauge:
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = v
+
+    def snapshot(self) -> Dict:
+        return {"type": "gauge", "value": self.value}
+
+
+class Histogram:
+    """Log-bucketed histogram over positive values (zero and negative
+    land in a dedicated underflow bucket, reported as 0.0)."""
+
+    __slots__ = ("counts", "zero", "count", "total", "vmin", "vmax")
+
+    def __init__(self) -> None:
+        self.counts: Dict[int, int] = {}
+        self.zero = 0                    # v <= 0 arrivals
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+    def record(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        if v < self.vmin:
+            self.vmin = v
+        if v > self.vmax:
+            self.vmax = v
+        if v <= 0.0:
+            self.zero += 1
+            return
+        idx = int(math.floor(math.log(v) / _LN_BASE))
+        self.counts[idx] = self.counts.get(idx, 0) + 1
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Approximate q-quantile (q in [0, 1]) from the buckets: the
+        geometric midpoint of the bucket the rank falls in, clamped to
+        the observed [min, max]."""
+        if not self.count:
+            return 0.0
+        if q <= 0.0:
+            return self.vmin
+        if q >= 1.0:
+            return self.vmax
+        rank = q * self.count
+        seen = self.zero
+        if rank <= seen:
+            return max(min(0.0, self.vmax), self.vmin)
+        for idx in sorted(self.counts):
+            seen += self.counts[idx]
+            if rank <= seen:
+                mid = _LOG_BASE ** (idx + 0.5)
+                return min(max(mid, self.vmin), self.vmax)
+        return self.vmax
+
+    def snapshot(self) -> Dict:
+        return {"type": "histogram", "count": self.count,
+                "mean": self.mean,
+                "p50": self.quantile(0.50), "p99": self.quantile(0.99),
+                "min": self.vmin if self.count else 0.0,
+                "max": self.vmax if self.count else 0.0}
+
+
+class MetricsRegistry:
+    """Name -> metric, get-or-create. Names are dot-paths
+    (``coord.round_latency_s``, ``wire.bytes_out.binary``, ...)."""
+
+    def __init__(self) -> None:
+        self._metrics: Dict[str, object] = {}
+
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls()
+        elif not isinstance(m, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as "
+                f"{type(m).__name__}, requested {cls.__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def get(self, name: str) -> Optional[object]:
+        return self._metrics.get(name)
+
+    def names(self) -> List[str]:
+        return sorted(self._metrics)
+
+    def snapshot(self) -> Dict[str, Dict]:
+        return {name: m.snapshot()
+                for name, m in sorted(self._metrics.items())}
+
+    def summary_line(self, prefix: str = "") -> str:
+        """One compact human line for periodic printing
+        (``--metrics-every``): round latency quantiles + headline
+        counters."""
+        parts: List[Tuple[str, str]] = []
+        lat = self._metrics.get("coord.round_latency_s")
+        if isinstance(lat, Histogram) and lat.count:
+            parts.append(("round", f"p50={lat.quantile(0.5) * 1e3:.1f}ms "
+                                   f"p99={lat.quantile(0.99) * 1e3:.1f}ms"))
+        for key, label in (("coord.reports", "reports"),
+                           ("coord.retunes", "retunes"),
+                           ("coord.stale_reports", "stale")):
+            m = self._metrics.get(key)
+            if isinstance(m, Counter) and m.value:
+                parts.append((label, str(m.value)))
+        depth = self._metrics.get("coord.bucket_depth")
+        if isinstance(depth, Gauge):
+            parts.append(("buckets", f"{depth.value:g}"))
+        body = " ".join(f"{k}={v}" if " " not in v else f"{k}[{v}]"
+                        for k, v in parts) or "no samples yet"
+        return f"{prefix}{body}"

@@ -55,6 +55,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.allocator import BatchPlan
 from repro.core.control import ControlPlane, RetuneEvent, StepBuckets, \
     StepReport
+from repro.obs import LOG, NULL_TRACER
 from repro.runtime.ipc import ChannelClosed, wait_readable
 from repro.runtime.ipc.shm import (BulkUnavailable, ShmBulkReader,
                                    inline_ref, resolve_bulk)
@@ -98,6 +99,10 @@ class RuntimeResult:
     # group -> worker location ("host@endpoint") from the Hello
     # handshake: the cluster map on a multi-host (socket) mesh
     hosts: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # the run's MetricsRegistry when one was attached (DESIGN.md §14):
+    # benches and examples read round/lag stats from HERE instead of
+    # re-deriving them from round_stats ad hoc
+    metrics: Optional[object] = None
 
     def event_tuples(self):
         return [(e.step, e.group, e.old_batch, e.new_batch, e.reason)
@@ -170,11 +175,13 @@ def specs_from_plan(plan: BatchPlan,
                     dropouts: Sequence = (),
                     train: Optional[Dict] = None,
                     seed: int = 0,
-                    step_delay_s: float = 0.0) -> List[WorkerSpec]:
+                    step_delay_s: float = 0.0,
+                    obs: bool = False) -> List[WorkerSpec]:
     """One WorkerSpec per plan group, carrying its benchmark table and
     its slice of the fault schedule. ``interferences``/``dropouts`` are
     the simulator's dataclasses — the runtime and ``ClusterSim`` consume
-    the SAME scenario description (trace parity by construction)."""
+    the SAME scenario description (trace parity by construction).
+    ``obs`` turns on worker-side tracing (DESIGN.md §14)."""
     specs = []
     for g in plan.groups:
         ivs = [InterferenceSpec(iv.start_step, iv.end_step, iv.capacity,
@@ -189,7 +196,7 @@ def specs_from_plan(plan: BatchPlan,
             speed_speeds=[float(s) for s in g.speed_model.speeds],
             interference=ivs, silence=sil,
             train=dict(train) if train else None, seed=seed,
-            step_delay_s=step_delay_s))
+            step_delay_s=step_delay_s, obs=obs))
     return specs
 
 
@@ -198,13 +205,32 @@ class EventLoop:
                  manager: ExecutionManager,
                  round_timeout: float = 1.0,
                  staleness: int = 0,
-                 ack_timeout: Optional[float] = None) -> None:
+                 ack_timeout: Optional[float] = None,
+                 tracer=None,
+                 metrics=None,
+                 metrics_every: int = 0) -> None:
         if staleness < 0:
             raise ValueError(f"staleness must be >= 0, got {staleness}")
         self.control_plane = control_plane
         self.manager = manager
         self.round_timeout = round_timeout
         self.staleness = int(staleness)
+        # observability plane (DESIGN.md §14). NULL_TRACER is falsy, so
+        # every `if self.tracer:` below is a dead branch when disabled —
+        # the untraced hot path allocates and times NOTHING extra, which
+        # is what keeps the Fig. 6 parity gates identical traced/untraced.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics
+        self.metrics_every = int(metrics_every)
+        self._obs = bool(self.tracer) or metrics is not None
+        # (group, step) -> grant send time, for grant->report latency
+        self._grant_ts: Dict[Tuple[str, int], float] = {}
+        if self.tracer:
+            # hand the coordinator tracer to the control plane and the
+            # bus so retune decisions / subscriber errors land in the
+            # same timeline
+            control_plane.tracer = self.tracer
+            control_plane.bus.tracer = self.tracer
         # checkpoint acks outlive their round; give them a longer leash
         self.ack_timeout = (ack_timeout if ack_timeout is not None
                             else 4.0 * round_timeout)
@@ -216,6 +242,10 @@ class EventLoop:
         self._lag = RetuneLagTracker(min_lag=self.staleness + 1)
         self._lags: List[int] = []
         self._buckets = StepBuckets()
+        if metrics is not None:
+            # live depth of the out-of-order assembly: how many rounds
+            # sit partially collected at once (≈ staleness window)
+            self._buckets.on_depth = metrics.gauge("coord.bucket_depth").set
         # per step: {group: incarnation granted} — a report is only owed
         # by the worker life the grant was actually delivered to
         self._expected: Dict[int, Dict[str, int]] = {}
@@ -232,12 +262,17 @@ class EventLoop:
         cp = self.control_plane
         stats: List[RoundStats] = []
         reports_total = 0
+        obs = self._obs
+        tr = self.tracer
+        mx = self.metrics
         t_run = time.perf_counter()
         for step in range(rounds):
             t0 = time.perf_counter()
             self._apply_faults(step, faults)
             self._grant_ahead(step, rounds)
+            tg = time.perf_counter() if obs else t0
             reports = self._collect_round(step)
+            tc = time.perf_counter() if obs else t0
             reports_total += len(reports)
             for msg in reports.values():
                 cp.bus.publish(StepReport(step, msg.group, msg.speed,
@@ -246,7 +281,19 @@ class EventLoop:
                 lag = self._lag.match(step, msg.group, msg.batch_size)
                 if lag is not None:
                     self._lags.append(lag)
+                    if obs:
+                        # decision->effect: the worker's echoed batch
+                        # size proves the retune landed, `lag` rounds on
+                        if tr:
+                            tr.instant("control", "retune_effect",
+                                       {"group": msg.group, "step": step,
+                                        "lag_rounds": lag})
+                        if mx is not None:
+                            mx.histogram(
+                                "coord.retune_effect_lag_rounds"
+                            ).record(lag)
             event = cp.poll(step)
+            td = time.perf_counter() if obs else t0
             if event is not None:
                 self._broadcast_retune(step, event)
                 if on_retune:
@@ -260,19 +307,41 @@ class EventLoop:
                     self._ack_deadlines[step] = \
                         time.perf_counter() + self.ack_timeout
             self._expire_acks()
+            t_end = time.perf_counter()
+            if obs:
+                if tr:
+                    tr.complete("round", "grant", t0, tg - t0)
+                    tr.complete("round", "collect", tg, tc - tg,
+                                {"reports": len(reports)})
+                    tr.complete("round", "decide", tc, td - tc)
+                    tr.complete("round", "broadcast", td, t_end - td)
+                    tr.complete("round", "round", t0, t_end - t0,
+                                {"step": step, "reports": len(reports)})
+                if mx is not None:
+                    mx.histogram("coord.round_latency_s").record(t_end - t0)
+                    mx.counter("coord.reports").inc(len(reports))
+                    if event is not None:
+                        mx.counter("coord.retunes").inc()
+                    if self.metrics_every and \
+                            (step + 1) % self.metrics_every == 0:
+                        LOG.info("metrics", mx.summary_line(
+                            prefix=f"[metrics] round {step}: "))
             stats.append(RoundStats(
-                step, len(reports), time.perf_counter() - t0,
+                step, len(reports), t_end - t0,
                 None if event is None else
                 f"{event.group}:{event.old_batch}->{event.new_batch}"
                 f" ({event.reason})"))
         self._drain_acks()
+        if mx is not None:
+            self._scrape_wire_stats()
         return RuntimeResult(rounds, list(cp.events), stats,
                              time.perf_counter() - t_run, reports_total,
                              list(self._lags), list(self._ckpt_acks),
                              staleness=self.staleness,
                              stale_reports=self._stale_reports,
                              acks_dropped=self._acks_dropped,
-                             hosts=self.manager.hosts())
+                             hosts=self.manager.hosts(),
+                             metrics=mx)
 
     def shutdown(self) -> None:
         try:
@@ -287,6 +356,11 @@ class EventLoop:
         for f in faults:
             if f.step != step:
                 continue
+            if self.tracer:
+                self.tracer.instant("fault", f.action,
+                                    {"group": f.group, "step": step})
+            if self.metrics is not None:
+                self.metrics.counter(f"coord.faults.{f.action}").inc()
             if f.action == "kill":
                 self.manager.kill(f.group)
             elif f.action == "suspend":
@@ -325,10 +399,12 @@ class EventLoop:
                 try:
                     handle.channel.put(StepGrant(s, self.staleness))
                 except ChannelClosed:
-                    self.manager.mark_dead(name)
+                    self._note_eof(name)
                     break
                 self._granted_hi[name] = s
                 self._expected.setdefault(s, {})[name] = handle.incarnation
+                if self._obs:
+                    self._grant_ts[(name, s)] = time.perf_counter()
 
     # -- collection -----------------------------------------------------
     def _collect_round(self, step: int) -> Dict[str, StepReportMsg]:
@@ -406,9 +482,18 @@ class EventLoop:
                     while chan.has_buffered():
                         self._route(name, chan.get(), floor)
             except ChannelClosed:
-                self.manager.mark_dead(name)
+                self._note_eof(name)
                 progressed = True
         return progressed
+
+    def _note_eof(self, name: str) -> None:
+        """A worker's channel hit EOF: it died (or was killed). Derived
+        liveness handles the consequences; here we just mark and trace."""
+        self.manager.mark_dead(name)
+        if self.tracer:
+            self.tracer.instant("fault", "worker_eof", {"group": name})
+        if self.metrics is not None:
+            self.metrics.counter("coord.faults.eof").inc()
 
     def _route(self, name: str, msg: Message,
                floor: Optional[int]) -> None:
@@ -419,17 +504,41 @@ class EventLoop:
         if isinstance(msg, StepReportMsg):
             if floor is None:
                 return
+            if self._obs:
+                now = time.perf_counter()
+                self._note_grant_latency(name, msg.step, now)
+                self._ingest_obs(name, msg.obs, now)
             if not self._buckets.add(msg.step, name, msg):
                 self._stale_reports += 1
+                if self.metrics is not None:
+                    self.metrics.counter("coord.stale_reports").inc()
         elif isinstance(msg, ReportBatch):
             # a coalesced run-ahead window: bucket report by report, in
             # order — semantics identical to k single frames
             if floor is None:
                 return
-            for rep in msg.unpack():
+            reps = msg.unpack()
+            if self._obs:
+                now = time.perf_counter()
+                for rep in reps:
+                    self._note_grant_latency(name, rep.step, now)
+                self._ingest_obs(name, msg.obs, now)
+                if self.metrics is not None:
+                    self.metrics.histogram(
+                        "coord.report_batch_size").record(len(reps))
+            for rep in reps:
                 if not self._buckets.add(rep.step, name, rep):
                     self._stale_reports += 1
+                    if self.metrics is not None:
+                        self.metrics.counter("coord.stale_reports").inc()
         elif isinstance(msg, CheckpointAck):
+            if self._obs:
+                self._ingest_obs(name, msg.obs, time.perf_counter())
+                if self.metrics is not None and msg.state is not None \
+                        and msg.state:
+                    self.metrics.counter(
+                        "coord.shm.bulk_hits" if msg.state[0] == "shm"
+                        else "coord.shm.inline").inc()
             if msg.state is not None and msg.state and msg.state[0] == "shm":
                 # normalize the shm reference to inline bytes NOW, while
                 # the worker's ring still holds the chunk; consumers of
@@ -442,6 +551,9 @@ class EventLoop:
                                                         self._bulk))
                 except BulkUnavailable:
                     msg.state = None
+                    if self.metrics is not None:
+                        self.metrics.counter(
+                            "coord.shm.bulk_unavailable").inc()
             self._ckpt_acks.append(msg)
             pend = self._awaiting_acks.get(msg.step)
             if pend is not None:
@@ -453,6 +565,41 @@ class EventLoop:
             self.manager.mark_dead(name)
         elif isinstance(msg, Hello):
             pass                         # late duplicate; handshake owns it
+
+    # -- observability helpers (DESIGN.md §14) --------------------------
+    def _note_grant_latency(self, name: str, step: int, now: float) -> None:
+        """grant->report latency per worker: time from the grant leaving
+        the coordinator to its report arriving back."""
+        t = self._grant_ts.pop((name, step), None)
+        if t is not None and self.metrics is not None:
+            self.metrics.histogram(
+                f"coord.grant_report_latency_s.{name}").record(now - t)
+
+    def _ingest_obs(self, name: str, obs_events, now: float) -> None:
+        """Merge a worker's piggybacked trace-event batch into the
+        coordinator timeline, keyed ``group#incarnation`` so a restarted
+        worker gets its own clock epoch."""
+        if not obs_events or not self.tracer:
+            return
+        handle = self.manager.workers.get(name)
+        inc = handle.incarnation if handle is not None else 0
+        self.tracer.ingest(f"{name}#{inc}", obs_events, now)
+
+    def _scrape_wire_stats(self) -> None:
+        """Fold per-channel frame/byte counters (transports that keep
+        them, e.g. the socket plane) into the registry, keyed by the
+        channel's negotiated codec."""
+        mx = self.metrics
+        for handle in self.manager.workers.values():
+            stats_fn = getattr(handle.channel, "wire_stats", None)
+            if stats_fn is None:
+                continue
+            ws = stats_fn()
+            codec = ws.get("codec", "json")
+            for key in ("frames_out", "bytes_out", "frames_in", "bytes_in"):
+                n = int(ws.get(key, 0))
+                if n:
+                    mx.counter(f"wire.{key}.{codec}").inc(n)
 
     # -- checkpoint acks ------------------------------------------------
     def _expire_acks(self,

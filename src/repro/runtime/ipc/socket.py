@@ -119,10 +119,24 @@ class SocketChannel(Channel):
         self._eof = False
         self._error: Optional[ChannelClosed] = None
         self._closed = False
+        # frame/byte accounting (DESIGN.md §14): plain int increments on
+        # the existing send/decode paths — always on, no observability
+        # object in the loop. ``wire_stats`` snapshots them per codec.
+        self.frames_out = 0
+        self.bytes_out = 0
+        self.frames_in = 0
+        self.bytes_in = 0
 
     @property
     def codec(self) -> str:
         return self._codec.name
+
+    def wire_stats(self) -> dict:
+        """Snapshot of the channel's frame/byte counters, keyed for the
+        coordinator's metrics scrape."""
+        return {"codec": self._codec.name,
+                "frames_out": self.frames_out, "bytes_out": self.bytes_out,
+                "frames_in": self.frames_in, "bytes_in": self.bytes_in}
 
     def set_codec(self, codec: Union[str, Codec]) -> None:
         """Switch the payload encoding for every frame from here on —
@@ -155,6 +169,8 @@ class SocketChannel(Channel):
             self._sock.sendall(frame)
         except OSError as e:
             raise ChannelClosed(str(e)) from e
+        self.frames_out += 1
+        self.bytes_out += len(frame)
 
     # -- receive --------------------------------------------------------
     def poll(self, timeout: float = 0.0) -> bool:
@@ -246,6 +262,8 @@ class SocketChannel(Channel):
                 self._error = ChannelClosed(f"undecodable frame: {e}")
                 self._buf.clear()
                 return
+            self.frames_in += 1
+            self.bytes_in += _HEADER.size + length
             self._ready.append(wire)
 
 

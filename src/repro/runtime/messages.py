@@ -186,10 +186,18 @@ class StepReportMsg(Message):
     :class:`repro.core.control.telemetry.StepReport`). ``batch_size`` is
     the batch the worker ACTUALLY ran — the coordinator uses it to
     measure retune propagation lag. ``wall_dt`` is the real measured
-    step time when the worker executes a jitted step."""
+    step time when the worker executes a jitted step.
+
+    ``obs`` piggybacks the worker's local trace-event batch (compact
+    wire lists, DESIGN.md §14) on the report it was already sending —
+    observability adds no frames of its own. ``wire_optional``: omitted
+    while None, so a worker that is not tracing (every legacy worker,
+    and every worker whose coordinator did not ask) produces the exact
+    legacy wire shape."""
 
     kind: ClassVar[str] = "report"
     wire_id: ClassVar[int] = 4
+    wire_optional: ClassVar[frozenset] = frozenset({"obs"})
     step: int
     group: str
     speed: float
@@ -198,6 +206,14 @@ class StepReportMsg(Message):
     batch_size: int = 0
     wall_dt: Optional[float] = None
     loss: Optional[float] = None
+    obs: Optional[List] = None
+
+
+# the per-report value-list schema inside a ReportBatch frame: the
+# pre-obs field set, pinned so coalesced report tuples keep their wire
+# arity across the obs addition (obs rides at the batch level instead)
+REPORT_PACK_FIELDS: Tuple[str, ...] = tuple(
+    n for n in StepReportMsg._fields if n != "obs")
 
 
 @register
@@ -218,15 +234,21 @@ class ReportBatch(Message):
     traces are bit-for-bit unchanged.
 
     ``reports`` is wire-flat: one value list per report, in
-    ``StepReportMsg`` field order (no per-report key repetition)."""
+    ``StepReportMsg`` field order (no per-report key repetition).
+    Trace-event piggybacking (DESIGN.md §14) rides at the BATCH level —
+    ``obs`` is one event batch for the whole frame, set by the worker's
+    flush — so the per-report value lists keep the pre-obs field set
+    (:data:`REPORT_PACK_FIELDS`) and their wire arity never changes."""
 
     kind: ClassVar[str] = "reports"
     wire_id: ClassVar[int] = 10
+    wire_optional: ClassVar[frozenset] = frozenset({"obs"})
     reports: List[List] = dataclasses.field(default_factory=list)
+    obs: Optional[List] = None
 
     @classmethod
     def pack(cls, msgs: List[StepReportMsg]) -> "ReportBatch":
-        return cls([[getattr(m, n) for n in StepReportMsg._fields]
+        return cls([[getattr(m, n) for n in REPORT_PACK_FIELDS]
                     for m in msgs])
 
     def unpack(self) -> List[StepReportMsg]:
@@ -273,13 +295,17 @@ class CheckpointAck(Message):
 
     kind: ClassVar[str] = "ckpt_ack"
     wire_id: ClassVar[int] = 7
-    wire_optional: ClassVar[frozenset] = frozenset({"state"})
+    wire_optional: ClassVar[frozenset] = frozenset({"state", "obs"})
     step: int
     group: str
     worker_step: int
     batch_size: int
     n_compiles: int = 0
     state: Optional[List] = None
+    # trace-event piggyback (DESIGN.md §14): acks carry whatever the
+    # worker traced since its last report flush, so ack-only traffic
+    # (e.g. the final drain) still ships its events. Omitted while None.
+    obs: Optional[List] = None
 
 
 @register

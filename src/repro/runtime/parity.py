@@ -61,7 +61,9 @@ def run_runtime(interferences: Sequence = (), dropouts: Sequence = (),
                 train: Optional[dict] = None,
                 staleness: int = 0,
                 step_delay_s: float = 0.0,
-                manager_kwargs: Optional[dict] = None
+                manager_kwargs: Optional[dict] = None,
+                tracer=None,
+                metrics=None
                 ) -> Tuple[RuntimeResult, List[EventTuple]]:
     """The scenario through live workers. ``dropouts`` become worker-side
     silence windows (deterministic everywhere, threads included);
@@ -69,15 +71,20 @@ def run_runtime(interferences: Sequence = (), dropouts: Sequence = (),
     ``staleness`` is the bounded-staleness bound k — 0 is the strict
     synchronous rendezvous, k>=1 lets workers run k rounds ahead.
     ``manager_kwargs`` go to the manager constructor (e.g.
-    ``{"codec": "json"}`` to force the socket compatibility codec)."""
+    ``{"codec": "json"}`` to force the socket compatibility codec).
+    ``tracer``/``metrics`` attach the observability plane (DESIGN.md
+    §14): a tracer also turns on worker-side tracing via the specs, and
+    MUST leave every event stream bit-identical — the parity gates hold
+    traced and untraced."""
     plan = stannis_3node_plan()
     cp = ControlPlane(plan, [SpeedDeclinePolicy()],
                       liveness_timeout=liveness_timeout)
     specs = specs_from_plan(plan, interferences, dropouts, train=train,
-                            step_delay_s=step_delay_s)
+                            step_delay_s=step_delay_s,
+                            obs=tracer is not None)
     mgr = MANAGERS[manager](**(manager_kwargs or {}))
     loop = EventLoop(cp, mgr, round_timeout=round_timeout,
-                     staleness=staleness)
+                     staleness=staleness, tracer=tracer, metrics=metrics)
     try:
         # start() inside the try: a handshake failure on worker N must
         # still tear down workers 0..N-1
@@ -94,7 +101,8 @@ def run_runtime(interferences: Sequence = (), dropouts: Sequence = (),
 def fig6_parity(manager: str = "local", steps: int = 45,
                 train: Optional[dict] = None,
                 staleness: int = 0,
-                manager_kwargs: Optional[dict] = None) -> dict:
+                manager_kwargs: Optional[dict] = None,
+                tracer=None, metrics=None) -> dict:
     """Escalating Gzip interference: the paper's 180 -> 140 -> 100.
     With ``staleness=k`` both paths run the bounded-staleness mode —
     the retune decisions land at the SAME steps (stale reports are not
@@ -106,7 +114,8 @@ def fig6_parity(manager: str = "local", steps: int = 45,
     result, rt_events = run_runtime(fig6_escalating_interference(),
                                     steps=steps, manager=manager,
                                     train=train, staleness=staleness,
-                                    manager_kwargs=manager_kwargs)
+                                    manager_kwargs=manager_kwargs,
+                                    tracer=tracer, metrics=metrics)
     return {"sim": sim_events, "runtime": rt_events,
             "match": sim_events == rt_events, "result": result}
 
@@ -115,7 +124,8 @@ def dropout_parity(manager: str = "local", fail: int = 5, rejoin: int = 20,
                    steps: int = 40, fault_mode: str = "silence",
                    group: str = "xeon1", round_timeout: float = 0.25,
                    staleness: int = 0,
-                   manager_kwargs: Optional[dict] = None) -> dict:
+                   manager_kwargs: Optional[dict] = None,
+                   tracer=None, metrics=None) -> dict:
     """Failure -> mask-out -> rejoin, sim Dropout vs a live fault.
 
     fault_mode: "silence" (worker alive but mute — deterministic on any
@@ -147,6 +157,7 @@ def dropout_parity(manager: str = "local", fail: int = 5, rejoin: int = 20,
     result, rt_events = run_runtime(
         dropouts=dropouts, steps=steps, manager=manager,
         liveness_timeout=3, faults=faults, round_timeout=round_timeout,
-        staleness=staleness, manager_kwargs=manager_kwargs)
+        staleness=staleness, manager_kwargs=manager_kwargs,
+        tracer=tracer, metrics=metrics)
     return {"sim": sim_events, "runtime": rt_events,
             "match": sim_events == rt_events, "result": result}

@@ -41,6 +41,7 @@ import numpy as np
 from repro.core.interference import (govern_speed, window_capacity,
                                      window_speed_cap)
 from repro.core.speed_model import SpeedModel
+from repro.obs import NULL_TRACER, Tracer
 from repro.runtime.ipc import Channel, ChannelClosed
 from repro.runtime.ipc.shm import (BulkUnavailable, ShmBulkPlane,
                                    publish_bulk, shm_available)
@@ -84,6 +85,13 @@ class WorkerSpec:
     managers set it for workers they know share the coordinator's host;
     ``"inline"`` (the default, and the cross-host fallback) keeps every
     byte in the frame.
+
+    ``obs`` (DESIGN.md §14) turns on worker-side tracing: step spans,
+    governor throttle events and retune-applied instants, accumulated
+    in a local ring and shipped back piggybacked on the report/ack
+    traffic the worker was sending anyway. Off by default — a
+    non-tracing worker's wire frames are byte-identical to the pre-obs
+    protocol — and dropped by ``from_wire`` on builds that predate it.
     """
 
     group: str
@@ -100,6 +108,7 @@ class WorkerSpec:
     incarnation: int = 0
     step_delay_s: float = 0.0
     bulk: str = "inline"
+    obs: bool = False
 
     def to_wire(self) -> Dict:
         return dataclasses.asdict(self)
@@ -229,14 +238,19 @@ def run_worker(spec: WorkerSpec, chan: Channel) -> None:
     speed_history: Deque[float] = collections.deque(maxlen=_SPEED_HISTORY)
     bulk_plane: Optional[ShmBulkPlane] = None
     speed_memo: Dict[float, float] = {}  # batch -> curve speed (pure fn)
+    # worker-side trace ring (DESIGN.md §14): small — it drains into
+    # every outgoing report/ack, so depth only matters across one
+    # run-ahead window. NULL_TRACER is falsy: every `if tr:` below is a
+    # dead branch for the (default) untraced worker.
+    tr = Tracer(source=spec.group, capacity=2048) if spec.obs else NULL_TRACER
 
     def flush() -> None:
         if not pending:
             return
-        if len(pending) == 1:
-            chan.put(pending[0])
-        else:
-            chan.put(ReportBatch.pack(pending))
+        out = pending[0] if len(pending) == 1 else ReportBatch.pack(pending)
+        if tr:
+            out.obs = tr.drain_wire() or None
+        chan.put(out)
         pending.clear()
 
     try:
@@ -248,10 +262,24 @@ def run_worker(spec: WorkerSpec, chan: Channel) -> None:
             msg = chan.get()
             if isinstance(msg, StepGrant):        # hot path first
                 if executor is None and spec.train:
-                    executor = TrainExecutor(spec)
+                    with tr.span("worker", "train_init"):
+                        executor = TrainExecutor(spec)
+                t0 = tr.now() if tr else 0.0
                 report = _one_step(spec, gov, sm, executor, msg.step,
                                    speed_memo)
                 worker_step += 1
+                if tr:
+                    tr.complete("worker", "step", t0, tr.now() - t0,
+                                {"step": msg.step,
+                                 "batch": spec.batch_size})
+                    if report is None:
+                        tr.instant("worker", "silenced",
+                                   {"step": msg.step})
+                    else:
+                        cap = gov.capacity(msg.step)
+                        if cap < 1.0 or gov.speed_cap(msg.step) is not None:
+                            tr.instant("worker", "throttled",
+                                       {"step": msg.step, "capacity": cap})
                 if report is not None:
                     speed_history.append(report.speed)
                     pending.append(report)
@@ -263,6 +291,11 @@ def run_worker(spec: WorkerSpec, chan: Channel) -> None:
             if isinstance(msg, Retune):
                 spec.batch_size = int(
                     msg.batch_sizes.get(spec.group, spec.batch_size))
+                if tr:
+                    tr.instant("worker", "retune_applied",
+                               {"step": msg.step,
+                                "batch": spec.batch_size,
+                                "reason": msg.reason})
                 continue
             if isinstance(msg, CheckpointRequest):
                 flush()                  # reports precede their ack
@@ -279,10 +312,15 @@ def run_worker(spec: WorkerSpec, chan: Channel) -> None:
                     "n_compiles": executor.n_compiles if executor else 0,
                     "speed_history": list(speed_history),
                 }, separators=(",", ":")).encode("utf-8")
-                chan.put(CheckpointAck(
+                ack = CheckpointAck(
                     msg.step, spec.group, worker_step, spec.batch_size,
                     executor.n_compiles if executor else 0,
-                    state=publish_bulk(state, bulk_plane)))
+                    state=publish_bulk(state, bulk_plane))
+                if tr:
+                    # events traced since the last report flush still
+                    # ship (the final drain is often ack-only traffic)
+                    ack.obs = tr.drain_wire() or None
+                chan.put(ack)
                 continue
     except ChannelClosed:
         pass                                     # coordinator gone: exit
