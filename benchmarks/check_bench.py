@@ -20,7 +20,8 @@ they gate regressions an order of magnitude out, not run-to-run jitter.
 
 Besides the gate, ``--history BENCH_history.jsonl`` appends this run's
 headline metrics (reports/s for the pipe and socket transports plus the
-socket json/k=0 compatibility row, the async speedup, the negotiated
+socket json/k=0 compatibility row, the async speedup, chaos-run
+reports/s and the p99 lost-frame recovery time, the negotiated
 default wire codec and its report frame size, the gate verdict,
 commit/run identity from the GitHub env) to a JSONL trajectory file and
 prints the recorded trend — CI
@@ -106,6 +107,8 @@ HISTORY_METRICS = {
     "json_sync_reports_per_s":
         "runtime_socket_rounds.reports_per_s_json_sync",
     "async_speedup": "runtime_async_staleness.derived",
+    "chaos_reports_per_s": "runtime_chaos.reports_per_s",
+    "chaos_recovery_p99_ms": "runtime_chaos.recovery_p99_ms",
     "codec": "wire_codec.default_codec",
     "wire_bytes_per_frame": "wire_codec.default_bytes_per_frame",
     "round_p99_us": "runtime_rounds.round_latency_p99_us",
@@ -152,6 +155,7 @@ def append_and_print_history(path: str, bench: Dict, ok: bool,
           f"showing last {len(shown)}):")
     print(f"  {'run':>6} {'commit':<12} {'pipe rep/s':>11} "
           f"{'sock rep/s':>11} {'json k0':>9} {'async x':>8} "
+          f"{'chaos r/s':>10} {'rec p99ms':>10} "
           f"{'codec':>7} {'B/frm':>5} {'p99 us':>8} {'trace x':>8}  gate")
     for r in shown:
         def col(key, width, fmt="{:.1f}"):
@@ -168,6 +172,8 @@ def append_and_print_history(path: str, bench: Dict, ok: bool,
               f"{col('socket_reports_per_s', 11)} "
               f"{col('json_sync_reports_per_s', 9)} "
               f"{col('async_speedup', 8, '{:.3f}')} "
+              f"{col('chaos_reports_per_s', 10)} "
+              f"{col('chaos_recovery_p99_ms', 10, '{:.2f}')} "
               f"{col('codec', 7)} "
               f"{col('wire_bytes_per_frame', 5, '{:.0f}')} "
               f"{col('round_p99_us', 8)} "

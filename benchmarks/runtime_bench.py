@@ -31,6 +31,13 @@
                             representative StepReportMsg under every
                             registered codec, plus a coalesced
                             ReportBatch per-report cost;
+  runtime_chaos           — the socket backend under seeded ~1% frame
+                            loss + duplication + reordering healed by
+                            the reliable session layer (DESIGN.md §15):
+                            reports/s vs a clean run, retransmit/
+                            recovery counters, the recovery-time
+                            histogram, and an exact Fig. 6 gate with a
+                            partition window mirrored as a sim Dropout;
   runtime_async_staleness — bounded-staleness pacing at k in {0,1,2,4}
                             under the SAME Fig. 6 scenario, with a
                             modeled 2 ms compute per worker step so the
@@ -232,6 +239,58 @@ def runtime_async_staleness() -> Tuple[List[Dict], float]:
     return rows, round(speedup if sequences_ok else 0.0, 3)
 
 
+def runtime_chaos() -> Tuple[List[Dict], float]:
+    """Protocol throughput under seeded network faults (DESIGN.md §15).
+
+    The socket backend at staleness 2 with ~1% frame loss plus
+    duplication and reordering on every link, healed by the reliable
+    session layer. Rows record the chaos-run reports/s next to a clean
+    run of the same shape (the overhead of retransmits + holdback),
+    the injector/session counters, and the recovery-time histogram —
+    how long a lost frame stayed lost until a retransmit landed (from
+    the coordinator's ``session.recovery_s`` metric). ``fig6_match_
+    chaos`` is the exact gate: the same chaos spec PLUS a partition
+    window must still reproduce the paper's retune sequence with the
+    partition mirrored as a sim Dropout. Derived is chaos reports/s —
+    a floor on it catches a session layer that melts down under loss
+    (retransmit storms, holdback stalls) even when the clean path is
+    fast."""
+    from repro.obs import MetricsRegistry
+    from repro.runtime.parity import fig6_chaos_parity, run_runtime
+
+    chaos = "seed=11,drop=0.01,dup=0.005,reorder=0.005"
+    metrics = MetricsRegistry()
+    result, _ = run_runtime(steps=150, manager="socket", staleness=2,
+                            chaos=chaos, metrics=metrics)
+    clean, _ = run_runtime(steps=150, manager="socket", staleness=2)
+    p = fig6_chaos_parity(manager="socket", staleness=2,
+                          chaos=chaos + ",partition=xeon1@30-38")
+    rows = [
+        {"metric": "rounds", "value": result.rounds},
+        {"metric": "reports_per_s", "value": round(result.reports_per_s, 1)},
+        {"metric": "reports_per_s_clean",
+         "value": round(clean.reports_per_s, 1)},
+        {"metric": "fig6_match_chaos", "value": 1.0 if p["match"] else 0.0},
+    ]
+    for name in ("chaos.dropped_out", "chaos.dropped_in",
+                 "chaos.dup_out", "chaos.dup_in",
+                 "session.retransmits", "session.fast_retransmits",
+                 "session.dup_delivered", "session.gaps"):
+        c = metrics.get(name)
+        if c is not None:
+            rows.append({"metric": name, "value": int(c.value)})
+    rec = metrics.get("session.recovery_s")
+    if rec is not None and rec.count:
+        rows += [
+            {"metric": "recoveries", "value": rec.count},
+            {"metric": "recovery_p50_ms",
+             "value": round(rec.quantile(0.50) * 1e3, 2)},
+            {"metric": "recovery_p99_ms",
+             "value": round(rec.quantile(0.99) * 1e3, 2)},
+        ]
+    return rows, round(result.reports_per_s, 1)
+
+
 def trace_overhead() -> Tuple[List[Dict], float]:
     """Cost of the observability plane: reports/s with tracing +
     metrics attached (ring-buffer tracer, no file sink — the worker
@@ -282,4 +341,5 @@ ALL = {"runtime_rounds": runtime_rounds,
        "runtime_socket_rounds": runtime_socket_rounds,
        "wire_codec": wire_codec,
        "runtime_async_staleness": runtime_async_staleness,
+       "runtime_chaos": runtime_chaos,
        "trace_overhead": trace_overhead}

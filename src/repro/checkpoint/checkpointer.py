@@ -5,8 +5,23 @@ Layout:  <dir>/step_<N>/
             manifest.json     step, tree structure, extras (pipeline state,
                               plan batch sizes), per-array checksums
 Writes go to a tmp dir + atomic rename; a crash mid-save never corrupts
-the latest checkpoint. ``restore_latest`` skips manifests that fail
-verification (torn writes on a real fleet).
+the latest checkpoint. Durability is explicit (DESIGN.md §15): the
+manifest (and the tmp directory entry holding it) is fsynced BEFORE the
+rename, and the parent directory after — ``os.replace`` alone only
+orders the rename against other metadata, not against the file DATA
+reaching disk, so a power cut between write and rename could otherwise
+leave a renamed-but-empty manifest that verification then rejects
+forever. ``restore_latest`` skips manifests that fail verification
+(torn writes on a real fleet).
+
+:class:`RunJournal` rides the same machinery with an empty array tree:
+the coordinator's run state (plan, round, retune decisions, bucket
+floor, pending acks) journals through the identical atomic/fsync path,
+so ``--resume-run`` inherits every durability property for free.
+
+The ``jax`` import is lazy (module import must stay jax-free): a
+journaling coordinator that never checkpoints a pytree — every
+report-only chaos run — pays no jax startup.
 """
 from __future__ import annotations
 
@@ -15,21 +30,39 @@ import os
 import shutil
 import threading
 import zlib
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
-import jax
 import numpy as np
 
 
 def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    import jax
+
     leaves, treedef = jax.tree.flatten(tree)
     arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(leaves)}
     return arrays, treedef
 
 
 def _unflatten(treedef, arrays: Dict[str, np.ndarray]):
+    import jax
+
     leaves = [arrays[f"a{i}"] for i in range(len(arrays))]
     return jax.tree.unflatten(treedef, leaves)
+
+
+def _fsync_path(path: str) -> None:
+    """fsync one file (or directory) by path; best-effort on platforms
+    whose directories reject O_RDONLY fsync."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 class Checkpointer:
@@ -42,7 +75,11 @@ class Checkpointer:
 
     # ------------------------------------------------------------------
     def save(self, step: int, tree: Any, extras: Optional[Dict] = None) -> None:
-        arrays, treedef = _flatten(tree)
+        if tree:
+            arrays, treedef = _flatten(tree)
+        else:
+            # empty tree (RunJournal): no leaves, no jax import
+            arrays, treedef = {}, "{}"
         # snapshot to host memory synchronously; write async
         payload = {k: np.array(v, copy=True) for k, v in arrays.items()}
         extras = dict(extras or {})
@@ -60,7 +97,11 @@ class Checkpointer:
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        npz_path = os.path.join(tmp, "arrays.npz")
+        with open(npz_path, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
         manifest = {
             "step": step,
             "n_arrays": len(arrays),
@@ -70,8 +111,14 @@ class Checkpointer:
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        # the tmp dir's entries must be durable BEFORE the rename makes
+        # them the checkpoint; the parent after, so the rename itself is
+        _fsync_path(tmp)
         shutil.rmtree(final, ignore_errors=True)
         os.replace(tmp, final)
+        _fsync_path(self.dir)
         self._gc()
 
     def _gc(self) -> None:
@@ -116,6 +163,10 @@ class Checkpointer:
         loaded = self._verify(path)
         if loaded is None:
             raise IOError(f"checkpoint {path} failed verification")
+        if not like:
+            return like, loaded["manifest"]["extras"]
+        import jax
+
         _, treedef = jax.tree.flatten(like)
         tree = _unflatten(treedef, loaded["arrays"])
         tree = jax.tree.map(lambda ref, x: np.asarray(x, dtype=ref.dtype)
@@ -131,3 +182,46 @@ class Checkpointer:
             except IOError:
                 continue
         return None
+
+
+class RunJournal:
+    """The coordinator's crash-resume journal (DESIGN.md §15).
+
+    A thin veneer over :class:`Checkpointer` with an EMPTY array tree:
+    each entry is one manifest whose ``extras`` hold the event loop's
+    JSON run state (next round, plan batch sizes, retune events, policy
+    hysteresis, bucket floor, pending acks). Atomicity, fsync
+    durability, crc verification, keep-k GC and corrupt-entry skipping
+    are all inherited — a SIGKILLed coordinator always finds its newest
+    intact entry under ``<run_dir>/journal/``.
+
+    Writes are synchronous: a journal entry is small (a few KiB of
+    JSON) and the guarantee "``save`` returned => this round is
+    resumable" is the point of having one.
+    """
+
+    SUBDIR = "journal"
+
+    def __init__(self, run_dir: str, keep: int = 3) -> None:
+        self.run_dir = run_dir
+        self._ckpt = Checkpointer(os.path.join(run_dir, self.SUBDIR),
+                                  keep=keep, async_save=False)
+
+    def save(self, next_round: int, state: Dict) -> None:
+        """Journal "every round below ``next_round`` is fully applied;
+        resume granting AT ``next_round``"."""
+        self._ckpt.save(next_round, {}, extras=state)
+
+    def load_latest(self) -> Optional[Dict]:
+        """Newest verified journal entry's state, or None (fresh run /
+        every entry torn)."""
+        for step in reversed(self._ckpt.list_steps()):
+            try:
+                _, extras = self._ckpt.restore(step, {})
+                return extras
+            except IOError:
+                continue
+        return None
+
+    def entries(self) -> List[int]:
+        return self._ckpt.list_steps()

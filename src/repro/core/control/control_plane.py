@@ -142,6 +142,48 @@ class ControlPlane:
         return event
 
     # ------------------------------------------------------------------
+    # crash-resume (DESIGN.md §15)
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Dict:
+        """JSON-serializable control state for the run journal: the
+        tuned plan, the event history, liveness clocks, and every
+        policy's hidden state (hysteresis streaks, sliding windows).
+        Everything a restarted coordinator needs to continue the run's
+        retune sequence EXACTLY where the dead one left it."""
+        return {
+            "batch_sizes": self.plan.batch_sizes(),
+            "events": [[e.step, e.group, e.old_batch, e.new_batch,
+                        e.reason] for e in self.events],
+            "n_indices": len(self.indices),
+            "silence_failed": dict(self._silence_failed),
+            "last_seen": dict(self.bus._last_seen),
+            "policies": [p.snapshot() for p in self.policies],
+        }
+
+    def restore_snapshot(self, state: Dict) -> None:
+        """Inverse of :meth:`snapshot`, onto a freshly-built plane whose
+        plan matches the ORIGINAL (pre-run) allocation. The plan is
+        brought forward by one bulk retune (capacities and compiled
+        shapes never changed, so replaying the journal's batch sizes is
+        exact); restored events keep only their tuple identity — which
+        is all parity compares."""
+        current = self.plan.batch_sizes()
+        target = {g: int(b) for g, b in state["batch_sizes"].items()}
+        changed = {g: b for g, b in target.items() if current.get(g) != b}
+        if changed:
+            self.plan = allocator.retune(self.plan, changed, min_batch=0)
+        self.events = [
+            RetuneEvent(int(s), str(g), int(ob), int(nb), str(r), self.plan)
+            for s, g, ob, nb, r in state.get("events", [])]
+        self.indices = [{} for _ in range(int(state.get("n_indices", 0)))]
+        self._silence_failed = {str(g): bool(v) for g, v in
+                                state.get("silence_failed", {}).items()}
+        self.bus._last_seen = {str(g): int(v) for g, v in
+                               state.get("last_seen", {}).items()}
+        for policy, ps in zip(self.policies, state.get("policies", [])):
+            policy.restore(ps)
+
+    # ------------------------------------------------------------------
     # elastic path
     # ------------------------------------------------------------------
     def mark_failed(self, step: int, group: str,

@@ -170,6 +170,17 @@ class TuningPolicy(abc.ABC):
         """Most recent per-group Eq. 2 indices (diagnostics)."""
         return {}
 
+    # -- crash-resume (DESIGN.md §15) -----------------------------------
+    def snapshot(self) -> Dict:
+        """JSON-serializable policy state for the run journal. A policy
+        with hidden state (hysteresis streaks, sliding windows) MUST
+        capture it here, or a resumed coordinator replays the scenario
+        with different trigger timing than the one that crashed."""
+        return {}
+
+    def restore(self, state: Dict) -> None:
+        pass
+
 
 class _Eq2Policy(TuningPolicy):
     """Common shell for the decline-triggered policies."""
@@ -181,6 +192,16 @@ class _Eq2Policy(TuningPolicy):
 
     def indices(self) -> Dict[str, float]:
         return self._last_indices
+
+    def snapshot(self) -> Dict:
+        # the hysteresis streaks are the whole hidden state: patience
+        # counting must continue exactly where the dead coordinator
+        # left it (Fig. 6 trigger timing depends on it)
+        return {"flags": dict(self.trigger._flags)}
+
+    def restore(self, state: Dict) -> None:
+        self.trigger._flags = {str(g): int(v) for g, v in
+                               state.get("flags", {}).items()}
 
     def decide(self, step: int, plan: BatchPlan,
                reports: Dict[str, StepReport]) -> Optional[Decision]:
@@ -254,6 +275,21 @@ class CpuUtilPolicy(_Eq2Policy):
         super().__init__(cfg)
         self._util: Dict[str, Deque[float]] = {}
         self._normal_util: Dict[str, float] = {}
+
+    def snapshot(self) -> Dict:
+        state = super().snapshot()
+        state["util"] = {g: list(w) for g, w in self._util.items()}
+        state["normal_util"] = dict(self._normal_util)
+        return state
+
+    def restore(self, state: Dict) -> None:
+        super().restore(state)
+        self._util = {
+            g: collections.deque((float(u) for u in w),
+                                 maxlen=self.cfg.window)
+            for g, w in state.get("util", {}).items()}
+        self._normal_util = {g: float(v) for g, v in
+                             state.get("normal_util", {}).items()}
 
     def decide(self, step, plan, reports):
         for g in plan.groups:

@@ -172,6 +172,27 @@ class StepBuckets:
     def floor(self) -> int:
         return self._floor
 
+    def restore_floor(self, floor: int) -> None:
+        """Crash-resume (DESIGN.md §15): fast-forward the staleness
+        filter to where the journaled run had advanced it, so a
+        restarted coordinator rejects re-delivered reports for rounds
+        the dead one already consumed."""
+        self._floor = max(self._floor, int(floor))
+
+    def discard_group(self, group: str, from_step: int) -> int:
+        """Network-partition semantics (DESIGN.md §15): forget ``group``'s
+        already-bucketed reports for steps >= ``from_step``. A severed
+        link must behave exactly like the simulator's step-keyed Dropout
+        even for run-ahead reports that beat the severing to the
+        coordinator. Returns the number discarded."""
+        n = 0
+        for s, bucket in self._buckets.items():
+            if s >= from_step and bucket.pop(group, None) is not None:
+                n += 1
+        if n and self.on_depth is not None:
+            self.on_depth(len(self._buckets))
+        return n
+
     def add(self, step: int, group: str, payload) -> bool:
         """Bucket one arrival. Returns False when it was stale (below
         the floor); duplicates are kept first-wins and return True."""

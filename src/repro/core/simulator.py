@@ -95,7 +95,14 @@ class Interference:
 class Dropout:
     """A group goes completely silent (crash / pre-emption): it publishes
     no telemetry in [start_step, end_step), so a liveness-enabled control
-    plane masks it out and rejoins it when reports resume."""
+    plane masks it out and rejoins it when reports resume.
+
+    Also the sim mirror of the chaos plane's network PARTITION
+    (DESIGN.md §15): severing the coordinator<->group link discards
+    every inbound report at ingest — including run-ahead ones already
+    in flight — so a partition of [s, e) is observationally identical
+    to a Dropout of the same steps at any staleness bound k, which is
+    what ``parity.fig6_chaos_parity`` asserts."""
 
     group: str
     start_step: int

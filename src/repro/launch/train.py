@@ -417,7 +417,10 @@ def _run_distributed(args, cfg: TrainerConfig, sm: SpeedModel,
     when ``--trace`` is on. The lines scripts consume — the socket
     coordinator's "listening on" line, the per-group join commands and
     the cluster map — stay on stdout, unchanged."""
-    from repro.runtime import EventLoop, MANAGERS, specs_from_plan
+    from repro.checkpoint.checkpointer import RunJournal
+    from repro.runtime import EventLoop, FaultAction, MANAGERS, \
+        specs_from_plan
+    from repro.runtime.ipc import ChaosSpec
 
     tracer = (Tracer(source="coord", sinks=[ChromeTraceSink(args.trace)])
               if args.trace else None)
@@ -439,11 +442,22 @@ def _run_distributed(args, cfg: TrainerConfig, sm: SpeedModel,
               "reduced": not args.full_size} if train_workers else None)
     cp = ControlPlane(plan, [policy_from_config(cfg.hypertune)],
                       cfg=cfg.hypertune, liveness_timeout=3)
+    # chaos plane (DESIGN.md §15): the spec seeds per-link fault
+    # injectors inside the managers; its partition windows become
+    # round-exact partition/heal fault actions so ClusterSim can mirror
+    # each one as a Dropout of the same steps
+    chaos = ChaosSpec.parse(args.chaos) if args.chaos else None
+    faults: List[FaultAction] = []
+    if chaos is not None:
+        for p in chaos.partitions:
+            faults.append(FaultAction(p.start_step, "partition", p.group))
+            faults.append(FaultAction(p.end_step, "heal", p.group))
     if args.runtime == "socket":
         from repro.runtime import SocketExecutionManager
 
         manager = SocketExecutionManager(listen=args.listen,
-                                         spawn=not args.external_workers)
+                                         spawn=not args.external_workers,
+                                         chaos=chaos)
         print(f"coordinator listening on {manager.endpoint}", flush=True)
         if args.external_workers:
             print("waiting for standalone workers — one per group, on "
@@ -453,7 +467,7 @@ def _run_distributed(args, cfg: TrainerConfig, sm: SpeedModel,
                       f"--connect {manager.advertised} --group {g}",
                       flush=True)
     else:
-        manager = MANAGERS[args.runtime]()
+        manager = MANAGERS[args.runtime](chaos=chaos)
     # training workers jit-compile on their first granted step; a short
     # round deadline would read that compile stall as bus silence and
     # mask healthy groups out, so the auto default is generous
@@ -462,18 +476,40 @@ def _run_distributed(args, cfg: TrainerConfig, sm: SpeedModel,
     loop = EventLoop(cp, manager, round_timeout=round_timeout,
                      staleness=args.staleness, tracer=tracer,
                      metrics=metrics, metrics_every=args.metrics_every)
+    # crash-resume journal (DESIGN.md §15): --journal-dir records run
+    # state every N rounds; --resume-run restores the newest intact
+    # entry and continues granting at the journaled round
+    journal_dir = args.resume_run or args.journal_dir
+    journal = RunJournal(journal_dir) if journal_dir else None
+    start = 0
+    if args.resume_run:
+        state = journal.load_latest()
+        if state is None:
+            log.warn("resume_empty",
+                     f"--resume-run {args.resume_run}: no usable journal "
+                     "entry; starting from round 0",
+                     run_dir=args.resume_run)
+        else:
+            start = loop.restore(state)
+            log.info("resume_run",
+                     f"resuming at round {start} from {journal_dir} "
+                     f"(plan {cp.plan.batch_sizes()})",
+                     run_dir=journal_dir, next_round=start)
     log.info("runtime_start",
-             f"runtime={args.runtime} workers={plan.batch_sizes()} "
+             f"runtime={args.runtime} workers={cp.plan.batch_sizes()} "
              f"train_in_workers={train_workers} staleness={args.staleness}",
              runtime=args.runtime, staleness=args.staleness,
              train_in_workers=train_workers)
     try:
         # start() inside the try: a handshake failure on worker N must
-        # still tear down workers 0..N-1
-        manager.start(specs_from_plan(plan, interferences, dropouts,
+        # still tear down workers 0..N-1. On resume the workers come up
+        # with the JOURNALED plan's batch sizes (cp.plan after restore).
+        manager.start(specs_from_plan(cp.plan, interferences, dropouts,
                                       train=train, seed=cfg.seed,
                                       obs=tracer is not None))
-        res = loop.run(args.steps, checkpoint_every=10)
+        res = loop.run(args.steps, faults=faults, checkpoint_every=10,
+                       journal=journal, journal_every=args.journal_every,
+                       start=start)
     finally:
         loop.shutdown()
         if tracer is not None:
@@ -561,6 +597,24 @@ def main() -> None:
                     help="print a one-line metrics summary (round "
                          "latency quantiles, report/retune counters) "
                          "every N coordinator rounds")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="seeded network-fault injection on every worker "
+                         "link, e.g. 'seed=7,drop=0.01,send.dup=0.02,"
+                         "window=5-25:recv.drop=0.2,partition=xeon1@20-26'"
+                         " (DESIGN.md §15); activates the reliable "
+                         "session layer so the run still completes "
+                         "exactly")
+    ap.add_argument("--journal-dir", default=None, metavar="DIR",
+                    help="journal coordinator run state under DIR/journal "
+                         "so a killed coordinator can --resume-run DIR")
+    ap.add_argument("--journal-every", type=int, default=1, metavar="N",
+                    help="journal every N coordinator rounds (default 1)")
+    ap.add_argument("--resume-run", default=None, metavar="DIR",
+                    help="restart a killed coordinator from DIR's newest "
+                         "intact journal entry: restore the tuned plan + "
+                         "policy state, re-admit workers, continue the "
+                         "run at the journaled round (keeps journaling "
+                         "to the same DIR)")
     args = ap.parse_args()
     if args.staleness and args.runtime == "inproc":
         # the inproc loop has no grant pipeline to run ahead on —
@@ -580,6 +634,16 @@ def main() -> None:
             ap.error("--external-workers requires --runtime socket")
         if args.listen != "127.0.0.1:0":
             ap.error("--listen requires --runtime socket")
+    if args.runtime == "inproc" and (args.chaos or args.journal_dir
+                                     or args.resume_run):
+        ap.error("--chaos/--journal-dir/--resume-run drive the runtime "
+                 "coordinator; use --runtime local, process or socket")
+    if args.journal_every < 1:
+        ap.error("--journal-every must be >= 1")
+    if args.resume_run and args.journal_dir \
+            and args.resume_run != args.journal_dir:
+        ap.error("--resume-run and --journal-dir must agree (resume "
+                 "keeps journaling to the same run directory)")
 
     arch = get_arch(args.arch)
     if not args.full_size:

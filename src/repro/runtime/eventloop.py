@@ -56,7 +56,8 @@ from repro.core.allocator import BatchPlan
 from repro.core.control import ControlPlane, RetuneEvent, StepBuckets, \
     StepReport
 from repro.obs import LOG, NULL_TRACER
-from repro.runtime.ipc import ChannelClosed, wait_readable
+from repro.runtime.ipc import (ChannelClosed, CorruptFrame, ReliableChannel,
+                               find_chaos, wait_readable)
 from repro.runtime.ipc.shm import (BulkUnavailable, ShmBulkReader,
                                    inline_ref, resolve_bulk)
 from repro.runtime.managers.base import ExecutionManager
@@ -69,7 +70,12 @@ from repro.runtime.worker import InterferenceSpec, WorkerSpec
 @dataclasses.dataclass
 class FaultAction:
     """One scheduled fault-injection action. ``action`` is one of
-    "kill" | "restart" | "suspend" | "resume"."""
+    "kill" | "restart" | "suspend" | "resume" | "partition" | "heal".
+
+    "partition"/"heal" drive the chaos plane's partition scheduler
+    (DESIGN.md §15): the coordinator<->group link is severed/restored
+    at an exact round boundary — which is what lets ``ClusterSim``
+    mirror a partition window as a ``Dropout`` of the same steps."""
 
     step: int
     action: str
@@ -258,7 +264,15 @@ class EventLoop:
     # ------------------------------------------------------------------
     def run(self, rounds: int, faults: Sequence[FaultAction] = (),
             checkpoint_every: int = 0,
-            on_retune=None) -> RuntimeResult:
+            on_retune=None,
+            journal=None, journal_every: int = 0,
+            start: int = 0) -> RuntimeResult:
+        """Run rounds ``start..rounds-1``. ``journal`` (a
+        :class:`~repro.checkpoint.checkpointer.RunJournal`) with
+        ``journal_every`` > 0 persists the coordinator's resumable
+        state every N completed rounds; ``start`` > 0 is the resume
+        path — call :meth:`restore` with the journaled state first,
+        then pass its ``next_round`` here (DESIGN.md §15)."""
         cp = self.control_plane
         stats: List[RoundStats] = []
         reports_total = 0
@@ -266,9 +280,10 @@ class EventLoop:
         tr = self.tracer
         mx = self.metrics
         t_run = time.perf_counter()
-        for step in range(rounds):
+        for step in range(start, rounds):
             t0 = time.perf_counter()
             self._apply_faults(step, faults)
+            self._admit_rejoins()
             self._grant_ahead(step, rounds)
             tg = time.perf_counter() if obs else t0
             reports = self._collect_round(step)
@@ -331,6 +346,13 @@ class EventLoop:
                 None if event is None else
                 f"{event.group}:{event.old_batch}->{event.new_batch}"
                 f" ({event.reason})"))
+            if journal is not None and journal_every and \
+                    (step + 1) % journal_every == 0:
+                journal.save(step + 1, self._journal_state(step + 1))
+                if tr:
+                    tr.instant("journal", "saved", {"next_round": step + 1})
+                if mx is not None:
+                    mx.counter("coord.journal_saves").inc()
         self._drain_acks()
         if mx is not None:
             self._scrape_wire_stats()
@@ -367,6 +389,20 @@ class EventLoop:
                 self.manager.suspend(f.group)
             elif f.action == "resume":
                 self.manager.resume(f.group)
+            elif f.action == "partition":
+                self.manager.partition(f.group)
+                # sim-parity (DESIGN.md §15): a Dropout of [s, e) means
+                # NO reports for steps >= s count — under run-ahead the
+                # group may already have delivered reports for steps in
+                # the window before the link was severed; discard them
+                # so a partition is step-exact, not arrival-time-racy
+                purged = self._buckets.discard_group(f.group, step)
+                if purged and self.tracer:
+                    self.tracer.instant("fault", "partition_purge",
+                                        {"group": f.group, "step": step,
+                                         "purged": purged})
+            elif f.action == "heal":
+                self.manager.heal(f.group)
             elif f.action == "restart":
                 handle = self.manager.workers.get(f.group)
                 if handle is None:
@@ -386,6 +422,70 @@ class EventLoop:
                 self._granted_hi.pop(f.group, None)
             else:
                 raise ValueError(f"unknown fault action: {f.action}")
+
+    def _admit_rejoins(self) -> None:
+        """Pump the manager's mid-run rejoin path (self-healing socket
+        workers, DESIGN.md §15). A no-op — one virtual call returning
+        an empty list — for in-process managers."""
+        rejoined = self.manager.admit_rejoins(
+            self.control_plane.plan.batch_sizes())
+        for g in rejoined:
+            # the new life's grant stream starts at the current round;
+            # grants delivered to its predecessor died with the old TCP
+            # session (their unacked replay died with the old wrapper)
+            self._granted_hi.pop(g, None)
+            if self.tracer:
+                self.tracer.instant("fault", "worker_rejoin", {"group": g})
+            if self.metrics is not None:
+                self.metrics.counter("coord.faults.rejoin").inc()
+
+    # -- crash-resume (DESIGN.md §15) -----------------------------------
+    def _journal_state(self, next_round: int) -> Dict:
+        """Everything a restarted coordinator needs to continue this
+        run from round ``next_round``, as JSON primitives."""
+        return {
+            "next_round": next_round,
+            "staleness": self.staleness,
+            "control": self.control_plane.snapshot(),
+            "bucket_floor": self._buckets.floor,
+            "lags": list(self._lags),
+            "lag_pending": [[g, s, bs] for (g, s), bs in
+                            self._lag.pending().items()],
+            "stale_reports": self._stale_reports,
+            "acks_dropped": self._acks_dropped,
+            "awaiting_acks": {str(s): dict(pend) for s, pend in
+                              self._awaiting_acks.items()},
+        }
+
+    def restore(self, state: Dict) -> int:
+        """Rehydrate from a journal entry (before :meth:`run` with
+        ``start=<returned round>``). The control plane replays its
+        snapshot onto the freshly-built plan; grant/bucket bookkeeping
+        fast-forwards so re-delivered frames from before the crash are
+        recognized as stale. Outstanding checkpoint acks are restored
+        as owed-by-dead-lives: the dead coordinator's workers died with
+        it, so the first ``_expire_acks`` counts them dropped — which
+        is the truth."""
+        if int(state.get("staleness", self.staleness)) != self.staleness:
+            raise ValueError(
+                f"journal was written at staleness "
+                f"{state.get('staleness')}, this loop runs "
+                f"{self.staleness}: the run cannot continue "
+                f"deterministically")
+        self.control_plane.restore_snapshot(state["control"])
+        self._buckets.restore_floor(int(state.get("bucket_floor", 0)))
+        self._lags = [int(v) for v in state.get("lags", [])]
+        for g, s, bs in sorted(state.get("lag_pending", []),
+                               key=lambda e: e[1]):
+            self._lag.note(int(s), str(g), int(bs))
+        self._stale_reports = int(state.get("stale_reports", 0))
+        self._acks_dropped = int(state.get("acks_dropped", 0))
+        now = time.perf_counter()
+        for s, pend in state.get("awaiting_acks", {}).items():
+            self._awaiting_acks[int(s)] = {str(g): int(i)
+                                           for g, i in pend.items()}
+            self._ack_deadlines[int(s)] = now + self.ack_timeout
+        return int(state["next_round"])
 
     # -- grant pipeline -------------------------------------------------
     def _grant_ahead(self, step: int, rounds: int) -> None:
@@ -475,16 +575,31 @@ class EventLoop:
                 continue
             try:
                 while chan.poll(0.0):
-                    self._route(name, chan.get(), floor)
+                    self._route(name, self._get(chan, name), floor)
                     progressed = True
                     # frames already reassembled in-process (several per
                     # recv under coalescing) drain without re-selecting
                     while chan.has_buffered():
-                        self._route(name, chan.get(), floor)
+                        self._route(name, self._get(chan, name), floor)
             except ChannelClosed:
                 self._note_eof(name)
                 progressed = True
         return progressed
+
+    def _get(self, chan, name: str) -> Optional[Message]:
+        """One receive, tolerating the bounded-resync path: a corrupt
+        frame is counted loudly and skipped — the session layer (or
+        plain retransmission) heals whatever it carried. Returns None
+        for the skipped frame (``_route`` ignores None)."""
+        try:
+            return chan.get()
+        except CorruptFrame:
+            if self.tracer:
+                self.tracer.instant("fault", "corrupt_frame",
+                                    {"group": name})
+            if self.metrics is not None:
+                self.metrics.counter("coord.faults.corrupt_frame").inc()
+            return None
 
     def _note_eof(self, name: str) -> None:
         """A worker's channel hit EOF: it died (or was killed). Derived
@@ -495,12 +610,15 @@ class EventLoop:
         if self.metrics is not None:
             self.metrics.counter("coord.faults.eof").inc()
 
-    def _route(self, name: str, msg: Message,
+    def _route(self, name: str, msg: Optional[Message],
                floor: Optional[int]) -> None:
         """Dispatch one arrival. ``floor`` is the oldest round still
         being assembled; report arrivals below it are stale (the
         synchronous loop's ``msg.step != step`` filter, generalized).
-        ``floor=None`` (the final ack drain) drops reports silently."""
+        ``floor=None`` (the final ack drain) drops reports silently.
+        ``msg=None`` is a corrupt frame ``_get`` already accounted."""
+        if msg is None:
+            return
         if isinstance(msg, StepReportMsg):
             if floor is None:
                 return
@@ -588,18 +706,36 @@ class EventLoop:
     def _scrape_wire_stats(self) -> None:
         """Fold per-channel frame/byte counters (transports that keep
         them, e.g. the socket plane) into the registry, keyed by the
-        channel's negotiated codec."""
+        channel's negotiated codec — plus, on chaos-hardened links, the
+        injector's fault counters and the session layer's healing stats
+        (retransmits, recovery-time histogram)."""
         mx = self.metrics
         for handle in self.manager.workers.values():
             stats_fn = getattr(handle.channel, "wire_stats", None)
-            if stats_fn is None:
-                continue
-            ws = stats_fn()
-            codec = ws.get("codec", "json")
-            for key in ("frames_out", "bytes_out", "frames_in", "bytes_in"):
-                n = int(ws.get(key, 0))
-                if n:
-                    mx.counter(f"wire.{key}.{codec}").inc(n)
+            ws = stats_fn() if stats_fn is not None else None
+            if ws:                       # wrappers return None over
+                codec = ws.get("codec", "json")  # stat-less transports
+                for key in ("frames_out", "bytes_out", "frames_in",
+                            "bytes_in", "corrupt_frames"):
+                    n = int(ws.get(key, 0))
+                    if n:
+                        mx.counter(f"wire.{key}.{codec}").inc(n)
+            cc = find_chaos(handle.channel)
+            if cc is not None:
+                for key, n in cc.chaos_stats().items():
+                    if n:
+                        mx.counter(f"chaos.{key}").inc(int(n))
+            if isinstance(handle.channel, ReliableChannel):
+                ss = handle.channel.session_stats()
+                for key in ("sent", "retransmits", "fast_retransmits",
+                            "dup_delivered", "gaps", "corrupt_skipped",
+                            "acks_sent", "recovered"):
+                    n = int(ss.get(key, 0))
+                    if n:
+                        mx.counter(f"session.{key}").inc(n)
+                hist = mx.histogram("session.recovery_s")
+                for d in handle.channel.recovery_s:
+                    hist.record(d)
 
     # -- checkpoint acks ------------------------------------------------
     def _expire_acks(self,

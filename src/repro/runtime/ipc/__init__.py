@@ -1,18 +1,28 @@
 """IPC layer for the Stannis runtime: typed channels over
 ``multiprocessing`` primitives and TCP sockets, pluggable wire codecs,
-and a shared-memory bulk plane (DESIGN.md §10, §12, §13)."""
-from repro.runtime.ipc.base import Channel, ChannelClosed, wait_readable
+a shared-memory bulk plane, and the chaos/reliability pair — seeded
+fault injection plus the self-healing session layer (DESIGN.md §10,
+§12, §13, §15)."""
+from repro.runtime.ipc.base import (Channel, ChannelClosed, CorruptFrame,
+                                    wait_readable)
+from repro.runtime.ipc.chaos import (ChaosChannel, ChaosRates, ChaosSpec,
+                                     ChaosWindow, DEFAULT_RESYNC_BUDGET,
+                                     PartitionWindow, find_chaos)
 from repro.runtime.ipc.codec import (CODECS, Codec, CodecError,
                                      DEFAULT_CODEC, negotiate, supported)
 from repro.runtime.ipc.pipe import PipeChannel, pipe_pair
 from repro.runtime.ipc.queue import QueueChannel, queue_pair
+from repro.runtime.ipc.session import ReliableChannel
 from repro.runtime.ipc.shm import (BulkUnavailable, ShmBulkPlane,
                                    ShmBulkReader, bulk_bytes, publish_bulk,
                                    resolve_bulk)
 from repro.runtime.ipc.socket import (FrameTooLarge, SocketChannel,
                                       socket_pair)
 
-__all__ = ["Channel", "ChannelClosed", "wait_readable",
+__all__ = ["Channel", "ChannelClosed", "CorruptFrame", "wait_readable",
+           "ChaosChannel", "ChaosRates", "ChaosSpec", "ChaosWindow",
+           "DEFAULT_RESYNC_BUDGET", "PartitionWindow", "find_chaos",
+           "ReliableChannel",
            "Codec", "CodecError", "CODECS", "DEFAULT_CODEC", "negotiate",
            "supported",
            "PipeChannel", "pipe_pair", "QueueChannel", "queue_pair",

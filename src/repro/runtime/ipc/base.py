@@ -24,6 +24,19 @@ class ChannelClosed(Exception):
     exactly how a crashed worker looks from the coordinator."""
 
 
+class CorruptFrame(ChannelClosed):
+    """One frame failed to decode but the channel itself is intact
+    (framing survived — only the payload is garbage). Raised from
+    ``get()`` *instead of* a message when the channel's
+    ``resync_budget`` is > 0: the caller counts it loudly and keeps
+    reading — the bounded resync of DESIGN.md §15. Subclasses
+    :class:`ChannelClosed` so an unhardened caller degrades to the safe
+    interpretation (peer unusable) instead of crashing; hardened
+    callers catch this first. With the default ``resync_budget`` of 0
+    an undecodable frame still closes the channel, exactly as before
+    the chaos plane existed."""
+
+
 class Channel(abc.ABC):
     """Bidirectional, ordered, typed message channel."""
 

@@ -1,0 +1,441 @@
+"""Seeded network-fault injection for the Stannis transports
+(DESIGN.md §15).
+
+:class:`ChaosChannel` wraps any :class:`~repro.runtime.ipc.base.Channel`
+(pipe, queue, or socket — it only uses the Channel surface) and makes
+the link misbehave on purpose: frames are dropped, delayed, duplicated,
+reordered, or bit-corrupted per a :class:`ChaosSpec`, and a *partition*
+silences the link entirely in both directions until healed. Every
+decision is drawn from a :mod:`random` stream seeded with
+``(spec.seed, group, direction)``, so a chaos run is reproducible: the
+fault pattern is a pure function of the seed and the per-link frame
+index, never of wall-clock time.
+
+Placement: the coordinator-side manager wraps its end of each worker
+channel as ``ReliableChannel(ChaosChannel(transport))`` — injection
+sits BELOW the reliable session layer (``ipc/session.py``), so both
+ends' session endpoints see genuine loss and heal it. One injector per
+link covers both directions: outbound faults act on ``put`` (before
+the transport), inbound faults act at ingest (after the transport,
+before delivery). Outbound *corruption* is the one direction-asymmetric
+fault: over a socket it is genuine bit corruption via
+``SocketChannel.send_raw`` (the peer's decoder rejects the frame and
+its bounded resync skips it); over pipes/queues — where there are no
+payload bytes to flip — it degrades to an unknown-kind poison tuple
+the peer's ``get`` surfaces as
+:class:`~repro.runtime.ipc.base.CorruptFrame`. Either way the frame is
+lost-but-loud, which is what the session layer heals.
+
+Scripted windows reuse the ``core/interference.py`` window grammar
+(``start_step <= step < end_step``), clocked by the latest
+:class:`~repro.runtime.messages.StepGrant` the channel has carried —
+the coordinator's logical clock, sniffed in passing. Partition windows
+listed on the spec are NOT enforced here: the managers convert them to
+round-exact ``partition``/``heal`` fault actions (the partition
+scheduler), because the sniffed clock runs up to k grants ahead under
+bounded staleness and parity demands round-exact severing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import random
+import time
+from collections import Counter, deque
+from typing import Deque, List, Optional, Tuple
+
+from repro.runtime.ipc.base import Channel, ChannelClosed, CorruptFrame
+from repro.runtime.messages import Message, StepGrant
+
+# how many consecutive undecodable frames a chaos-hardened transport
+# tolerates before concluding the stream is truly unrecoverable
+DEFAULT_RESYNC_BUDGET = 8
+
+
+@dataclasses.dataclass
+class ChaosRates:
+    """Per-direction fault probabilities (independent draws per frame).
+    ``delay`` is the probability a frame is held for ``delay_s``."""
+
+    drop: float = 0.0
+    dup: float = 0.0
+    reorder: float = 0.0
+    corrupt: float = 0.0
+    delay: float = 0.0
+    delay_s: float = 0.02
+
+    def any(self) -> bool:
+        return bool(self.drop or self.dup or self.reorder
+                    or self.corrupt or self.delay)
+
+
+@dataclasses.dataclass
+class ChaosWindow:
+    """Scripted burst riding the interference window grammar: the
+    ``rates`` replace the spec's base rates (per direction) while
+    ``start_step <= step < end_step`` on the sniffed grant clock."""
+
+    start_step: int
+    end_step: int
+    send: ChaosRates = dataclasses.field(default_factory=ChaosRates)
+    recv: ChaosRates = dataclasses.field(default_factory=ChaosRates)
+    group: str = ""                      # "" = every group
+
+
+@dataclasses.dataclass
+class PartitionWindow:
+    """Link severed for ``group`` in [start_step, end_step) — enforced
+    by the managers' partition scheduler as round-exact fault actions,
+    and mirrored in ``ClusterSim`` as a ``Dropout`` of the same span
+    (a partitioned link and a silent worker are indistinguishable to
+    the control plane, which is the parity oracle's whole point)."""
+
+    group: str
+    start_step: int
+    end_step: int
+
+
+@dataclasses.dataclass
+class ChaosSpec:
+    """The whole chaos configuration for one run. ``groups`` limits
+    injection to the named groups (None = every link). A default spec
+    (all rates zero) still activates the session layer — useful as
+    "reliability on, no faults"."""
+
+    seed: int = 0
+    send: ChaosRates = dataclasses.field(default_factory=ChaosRates)
+    recv: ChaosRates = dataclasses.field(default_factory=ChaosRates)
+    windows: List[ChaosWindow] = dataclasses.field(default_factory=list)
+    partitions: List[PartitionWindow] = dataclasses.field(
+        default_factory=list)
+    groups: Optional[Tuple[str, ...]] = None
+
+    def applies_to(self, group: str) -> bool:
+        return self.groups is None or group in self.groups
+
+    def rates(self, direction: str, step: int, group: str) -> ChaosRates:
+        """Effective rates for one frame: the innermost active scripted
+        window wins, else the base rates. Same half-open grammar as
+        ``core/interference.py``: ``start_step <= step < end_step``."""
+        for w in reversed(self.windows):
+            if (not w.group or w.group == group) \
+                    and w.start_step <= step < w.end_step:
+                return getattr(w, direction)
+        return getattr(self, direction)
+
+    @classmethod
+    def parse(cls, text: str) -> "ChaosSpec":
+        """CLI grammar (``--chaos``): comma-separated tokens.
+
+          seed=7                      RNG seed
+          drop=0.01                   rate, both directions
+          send.dup=0.02 recv.drop=…   rate, one direction
+          delay=0.05 delay_s=0.02     delay probability / hold time
+          window=5-25:drop=1.0        scripted burst (rates after ':',
+                                      both directions)
+          partition=xeon1@20-26       partition window for one group
+          groups=xeon0|xeon1          limit injection to these groups
+
+        Example: ``seed=7,drop=0.01,dup=0.01,partition=xeon1@20-26``.
+        """
+        spec = cls()
+        rate_names = {f.name for f in dataclasses.fields(ChaosRates)}
+        for token in filter(None, (t.strip() for t in text.split(","))):
+            key, sep, value = token.partition("=")
+            if not sep:
+                raise ValueError(f"bad chaos token {token!r}: "
+                                 f"expected key=value")
+            if key == "seed":
+                spec.seed = int(value)
+            elif key == "groups":
+                spec.groups = tuple(filter(None, value.split("|")))
+            elif key == "partition":
+                group, sep, span = value.partition("@")
+                start, sep2, end = span.partition("-")
+                if not (sep and sep2):
+                    raise ValueError(
+                        f"bad partition {value!r}: expected "
+                        f"group@start-end")
+                spec.partitions.append(
+                    PartitionWindow(group, int(start), int(end)))
+            elif key == "window":
+                span, sep, rates_text = value.partition(":")
+                start, sep2, end = span.partition("-")
+                if not (sep and sep2):
+                    raise ValueError(
+                        f"bad window {value!r}: expected "
+                        f"start-end:rate=value[:rate=value...]")
+                w = ChaosWindow(int(start), int(end))
+                for part in filter(None, rates_text.split(":")):
+                    rk, _, rv = part.partition("=")
+                    if rk not in rate_names:
+                        raise ValueError(f"unknown window rate {rk!r}")
+                    setattr(w.send, rk, float(rv))
+                    setattr(w.recv, rk, float(rv))
+                spec.windows.append(w)
+            elif "." in key:
+                direction, _, rate = key.partition(".")
+                if direction not in ("send", "recv") \
+                        or rate not in rate_names:
+                    raise ValueError(f"unknown chaos key {key!r}")
+                setattr(getattr(spec, direction), rate, float(value))
+            elif key in rate_names:
+                setattr(spec.send, key, float(value))
+                setattr(spec.recv, key, float(value))
+            else:
+                raise ValueError(f"unknown chaos key {key!r}")
+        return spec
+
+
+# queue marker: a synthetically-corrupted inbound frame, surfaced from
+# get() as CorruptFrame in stream order
+_CORRUPT_IN = object()
+
+
+class ChaosChannel(Channel):
+    """The fault injector. Wraps one transport channel; both directions
+    of one link draw from their own seeded streams. Exactly five RNG
+    draws happen per frame (drop, corrupt, delay, reorder, dup) so the
+    fault pattern depends only on (seed, direction, frame index) — not
+    on which faults happen to short-circuit."""
+
+    def __init__(self, inner: Channel, spec: ChaosSpec, group: str) -> None:
+        self.inner = inner
+        self.spec = spec
+        self.group = group
+        base = f"{spec.seed}:{group}"
+        self._rng_out = random.Random(base + ":send")
+        self._rng_in = random.Random(base + ":recv")
+        self._step = 0                   # sniffed StepGrant clock
+        self._partitioned = False
+        self._in_q: Deque = deque()
+        self._hold_out: Optional[Message] = None    # reorder (send)
+        self._hold_in: Optional[Message] = None     # reorder (recv)
+        self._delayed_out: List[Tuple[float, int, Message]] = []
+        self._delayed_in: List[Tuple[float, int, Message]] = []
+        self._delay_tie = 0
+        self._in_closed: Optional[ChannelClosed] = None
+        self.stats: Counter = Counter()
+
+    # -- partition scheduler hooks --------------------------------------
+    def set_partitioned(self, severed: bool) -> None:
+        self.stats["partitions" if severed else "heals"] += 1
+        self._partitioned = severed
+        if severed:
+            # frames the injector itself was still holding (reorder /
+            # delay) are in flight ON the link: a severed link kills
+            # them too. The reliable session above retransmits them
+            # after heal, so this is loss, never truncation.
+            dropped = ((self._hold_out is not None)
+                       + (self._hold_in is not None)
+                       + len(self._delayed_out) + len(self._delayed_in))
+            if dropped:
+                self.stats["partition_dropped_inflight"] += dropped
+            self._hold_out = self._hold_in = None
+            self._delayed_out.clear()
+            self._delayed_in.clear()
+
+    @property
+    def partitioned(self) -> bool:
+        return self._partitioned
+
+    def chaos_stats(self) -> dict:
+        return dict(self.stats)
+
+    # -- send path ------------------------------------------------------
+    def put(self, message: Message) -> None:
+        if isinstance(message, StepGrant) and message.step > self._step:
+            self._step = message.step    # the link's logical clock
+        self._flush_due_out()
+        if self._partitioned:
+            self.stats["partition_dropped_out"] += 1
+            return
+        rates = self.spec.rates("send", self._step, self.group)
+        d_drop, d_corrupt, d_delay, d_reorder, d_dup = (
+            self._rng_out.random() for _ in range(5))
+        if not rates.any():
+            self._send(message)
+            return
+        if d_drop < rates.drop:
+            self.stats["dropped_out"] += 1
+            return
+        if d_corrupt < rates.corrupt:
+            self.stats["corrupt_out"] += 1
+            self._corrupt_out(message)
+            return
+        if d_delay < rates.delay:
+            self.stats["delayed_out"] += 1
+            self._delay_tie += 1
+            heapq.heappush(self._delayed_out,
+                           (time.monotonic() + rates.delay_s,
+                            self._delay_tie, message))
+            return
+        if d_reorder < rates.reorder and self._hold_out is None:
+            self.stats["reordered_out"] += 1
+            self._hold_out = message     # released behind the next frame
+            return
+        self._send(message)
+        if self._hold_out is not None:
+            held, self._hold_out = self._hold_out, None
+            self._send(held)
+        if d_dup < rates.dup:
+            self.stats["dup_out"] += 1
+            self._send(message)
+
+    def _send(self, message: Message) -> None:
+        self.inner.put(message)
+
+    def _corrupt_out(self, message: Message) -> None:
+        """Lose the frame loudly: the peer sees a frame it cannot
+        decode (never a silently-wrong message) and its bounded resync
+        skips it."""
+        send_raw = getattr(self.inner, "send_raw", None)
+        if send_raw is not None:         # socket: real bit corruption
+            from repro.runtime.ipc.socket import encode_frame
+            frame = bytearray(encode_frame(
+                message.to_wire(), self.inner.max_frame, self.inner.codec))
+            # first payload byte -> 0xFF: undecodable under every codec
+            # (bad utf-8 for json, unknown wire id for binary/msgpack);
+            # flip a random later bit too, for realism
+            frame[4] = 0xFF
+            if len(frame) > 5:
+                idx = 5 + self._rng_out.randrange(len(frame) - 5)
+                frame[idx] ^= 1 << self._rng_out.randrange(8)
+            send_raw(bytes(frame))
+        else:                            # pipe/queue: poison wire tuple
+            self.inner.put(_PoisonPill())
+
+    def _flush_due_out(self) -> None:
+        now = time.monotonic()
+        while self._delayed_out and self._delayed_out[0][0] <= now:
+            self._send(heapq.heappop(self._delayed_out)[2])
+
+    # -- receive path ---------------------------------------------------
+    def _ingest(self) -> None:
+        """Drain whatever the transport has buffered, applying inbound
+        faults frame by frame."""
+        while self._in_closed is None and \
+                (self.inner.has_buffered() or self.inner.poll(0.0)):
+            try:
+                msg = self.inner.get()
+            except CorruptFrame:
+                self._in_q.append(_CORRUPT_IN)
+                continue
+            except ChannelClosed as e:
+                self._in_closed = e
+                break
+            if self._partitioned:
+                self.stats["partition_dropped_in"] += 1
+                continue
+            rates = self.spec.rates("recv", self._step, self.group)
+            d_drop, d_corrupt, d_delay, d_reorder, d_dup = (
+                self._rng_in.random() for _ in range(5))
+            if not rates.any():
+                self._in_q.append(msg)
+                continue
+            if d_drop < rates.drop:
+                self.stats["dropped_in"] += 1
+                continue
+            if d_corrupt < rates.corrupt:
+                self.stats["corrupt_in"] += 1
+                self._in_q.append(_CORRUPT_IN)
+                continue
+            if d_delay < rates.delay:
+                self.stats["delayed_in"] += 1
+                self._delay_tie += 1
+                heapq.heappush(self._delayed_in,
+                               (time.monotonic() + rates.delay_s,
+                                self._delay_tie, msg))
+                continue
+            if d_reorder < rates.reorder and self._hold_in is None:
+                self.stats["reordered_in"] += 1
+                self._hold_in = msg
+                continue
+            self._in_q.append(msg)
+            if self._hold_in is not None:
+                held, self._hold_in = self._hold_in, None
+                self._in_q.append(held)
+            if d_dup < rates.dup:
+                self.stats["dup_in"] += 1
+                self._in_q.append(msg)
+
+    def _release_due_in(self) -> None:
+        now = time.monotonic()
+        while self._delayed_in and self._delayed_in[0][0] <= now:
+            self._in_q.append(heapq.heappop(self._delayed_in)[2])
+        if self._in_closed is not None and self._hold_in is not None:
+            # EOF flushes a reorder hold — no next frame will release it
+            held, self._hold_in = self._hold_in, None
+            self._in_q.append(held)
+
+    def _service(self) -> None:
+        self._flush_due_out()
+        self._ingest()
+        self._release_due_in()
+
+    def poll(self, timeout: float = 0.0) -> bool:
+        deadline = time.monotonic() + max(timeout, 0.0)
+        while True:
+            self._service()
+            if self._in_q or self._in_closed is not None:
+                return True
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return False
+            self.inner.poll(min(0.02, remaining))
+
+    def get(self) -> Message:
+        while True:
+            self._service()
+            if self._in_q:
+                item = self._in_q.popleft()
+                if item is _CORRUPT_IN:
+                    raise CorruptFrame(
+                        f"chaos-corrupted frame on link {self.group!r}")
+                return item
+            if self._in_closed is not None:
+                raise self._in_closed
+            self.inner.poll(0.02)
+
+    def fileno(self) -> int:
+        # held frames (delay/reorder) and queued deliveries are
+        # invisible to select(): degrade to slice polling while any
+        # exist, so wait_readable keeps servicing the timers
+        if self._in_q or self._delayed_in or self._delayed_out \
+                or self._hold_in is not None:
+            return -1
+        return self.inner.fileno()
+
+    def has_buffered(self) -> bool:
+        return bool(self._in_q) or self._in_closed is not None \
+            or self.inner.has_buffered()
+
+    def close(self) -> None:
+        self.inner.close()
+
+    # transport passthroughs the managers/eventloop rely on
+    def wire_stats(self) -> Optional[dict]:
+        ws = getattr(self.inner, "wire_stats", None)
+        return ws() if ws is not None else None
+
+
+class _PoisonPill(Message):
+    """Outbound corruption for transports without payload bytes: the
+    wire tuple's kind is unregistered, so the peer's ``from_wire``
+    fails exactly like an undecodable socket payload does."""
+
+    def to_wire(self):
+        return ("__corrupt__", {})
+
+
+def find_chaos(channel: Channel) -> Optional[ChaosChannel]:
+    """Walk a wrapper chain (ReliableChannel -> ChaosChannel ->
+    transport) to the injector, if any — the partition scheduler's
+    handle on a link."""
+    seen = 0
+    while channel is not None and seen < 8:
+        if isinstance(channel, ChaosChannel):
+            return channel
+        channel = getattr(channel, "inner", None)
+        seen += 1
+    return None

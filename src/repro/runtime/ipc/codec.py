@@ -231,6 +231,13 @@ class BinaryCodec(Codec):
         except KeyError as e:
             raise CodecError(
                 f"{kind}: wire dict missing required field {e}") from e
+        # drop trailing wire_tail fields at their default (the session
+        # seq stamp): an unsequenced frame keeps the exact pre-chaos
+        # body, and an old peer's arity check keeps passing
+        while values and cls._fields[len(values) - 1] in cls.wire_tail \
+                and values[-1] == cls._defaults.get(
+                    cls._fields[len(values) - 1]):
+            values.pop()
         if self._use_msgpack:
             body = _msgpack.packb(values, use_bin_type=True)
             flags = _FLAG_MSGPACK
@@ -264,7 +271,13 @@ class BinaryCodec(Codec):
                 raise CodecError(f"undecodable msgpack body: {e}") from e
         else:
             values = flatunpack(body)
-        if not isinstance(values, list) or len(values) != len(cls._fields):
+        # a short body is only legal when every absent field is a
+        # trailing wire_tail field (the omitted-at-default seq stamp);
+        # the absent fields stay out of the wire dict so the dataclass
+        # default applies, mirroring the json codec's omission
+        if not isinstance(values, list) or len(values) > len(cls._fields) \
+                or not all(n in cls.wire_tail
+                           for n in cls._fields[len(values):]):
             raise CodecError(
                 f"{cls.kind}: body carries "
                 f"{len(values) if isinstance(values, list) else '?'} "

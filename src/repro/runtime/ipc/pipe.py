@@ -11,14 +11,22 @@ import multiprocessing
 from multiprocessing.connection import Connection
 from typing import Tuple
 
-from repro.runtime.ipc.base import Channel, ChannelClosed
+from repro.runtime.ipc.base import Channel, ChannelClosed, CorruptFrame
 from repro.runtime.messages import Message
 
 
 class PipeChannel(Channel):
-    def __init__(self, connection: Connection) -> None:
+    def __init__(self, connection: Connection,
+                 resync_budget: int = 0) -> None:
         self._conn = connection
         self._closed = False
+        # bounded resync (DESIGN.md §15), mirroring SocketChannel: with
+        # budget 0 an unconstructable wire tuple closes the channel;
+        # with budget N it surfaces as CorruptFrame and the stream
+        # continues, up to N consecutive casualties
+        self.resync_budget = resync_budget
+        self.corrupt_frames = 0
+        self._corrupt_streak = 0
 
     def put(self, message: Message) -> None:
         try:
@@ -36,9 +44,21 @@ class PipeChannel(Channel):
 
     def get(self) -> Message:
         try:
-            return Message.from_wire(self._conn.recv())
+            wire = self._conn.recv()
         except (EOFError, OSError) as e:
             raise ChannelClosed(str(e)) from e
+        try:
+            msg = Message.from_wire(wire)
+        except (KeyError, TypeError, ValueError) as e:
+            self.corrupt_frames += 1
+            self._corrupt_streak += 1
+            if self._corrupt_streak > self.resync_budget:
+                raise ChannelClosed(f"undecodable message: {e}") from e
+            raise CorruptFrame(
+                f"undecodable message skipped "
+                f"({self.corrupt_frames} total on this channel)") from e
+        self._corrupt_streak = 0
+        return msg
 
     def fileno(self) -> int:
         if self._closed:

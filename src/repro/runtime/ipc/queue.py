@@ -18,7 +18,7 @@ import multiprocessing
 import queue as _queue
 from typing import Optional, Tuple
 
-from repro.runtime.ipc.base import Channel, ChannelClosed
+from repro.runtime.ipc.base import Channel, ChannelClosed, CorruptFrame
 from repro.runtime.messages import Message, WireMessage
 
 # the EOF sentinel travels the queue like any wire tuple; the kind is
@@ -29,12 +29,17 @@ _EOF_KIND = "__channel_eof__"
 
 class QueueChannel(Channel):
     def __init__(self, inbox: "multiprocessing.Queue",
-                 outbox: "multiprocessing.Queue") -> None:
+                 outbox: "multiprocessing.Queue",
+                 resync_budget: int = 0) -> None:
         self._inbox = inbox
         self._outbox = outbox
         self._peeked: Optional[WireMessage] = None
         self._closed = False
         self._peer_closed = False
+        # bounded resync (DESIGN.md §15), mirroring SocketChannel
+        self.resync_budget = resync_budget
+        self.corrupt_frames = 0
+        self._corrupt_streak = 0
 
     def put(self, message: Message) -> None:
         if self._closed:
@@ -79,7 +84,18 @@ class QueueChannel(Channel):
         if wire and wire[0] == _EOF_KIND:
             self._peer_closed = True
             raise ChannelClosed("peer closed (EOF)")
-        return Message.from_wire(wire)
+        try:
+            msg = Message.from_wire(wire)
+        except (KeyError, TypeError, ValueError) as e:
+            self.corrupt_frames += 1
+            self._corrupt_streak += 1
+            if self._corrupt_streak > self.resync_budget:
+                raise ChannelClosed(f"undecodable message: {e}") from e
+            raise CorruptFrame(
+                f"undecodable message skipped "
+                f"({self.corrupt_frames} total on this channel)") from e
+        self._corrupt_streak = 0
+        return msg
 
     def close(self) -> None:
         if self._closed:

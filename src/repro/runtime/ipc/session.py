@@ -1,0 +1,240 @@
+"""Self-healing session layer over a lossy channel (DESIGN.md §15).
+
+:class:`ReliableChannel` turns any :class:`~repro.runtime.ipc.base.Channel`
+— usually a :class:`~repro.runtime.ipc.chaos.ChaosChannel`-wrapped
+transport — into an exactly-once, in-order stream:
+
+* **Sender**: every outbound message is shallow-copied and stamped with
+  the next session ``seq`` (copied because broadcast messages are
+  shared across channels; the original stays unsequenced), then kept in
+  an unacked replay buffer until the peer's cumulative
+  :class:`~repro.runtime.messages.SessionAck` covers it. A duplicate
+  cumulative ack is a NAK for ``ack+1`` (fast retransmit); anything
+  older than the retransmit timer re-sends with per-frame exponential
+  backoff.
+* **Receiver**: frames at the expected seq deliver immediately, future
+  seqs park in a holdback map until the gap fills, past seqs are
+  counted duplicates and discarded. Detecting a gap or a duplicate (or
+  a corrupt frame skipped by the transport's bounded resync) re-sends
+  the current cumulative ack immediately so the sender hears the NAK
+  within one round trip.
+
+Both ends wrap right AFTER the Hello/Welcome handshake (the worker
+wraps after sending Hello, the coordinator after ``_await_hello``
+consumed it), so the rendezvous itself stays on the legacy wire shape
+and a chaos-off run never constructs this class at all — inertness of
+the whole plane is a wrapper-existence question, not a code-path one.
+
+There are no background threads: the retransmit timer and ack ingest
+run opportunistically inside ``poll``/``get`` (the maintenance tick).
+Both the coordinator's fan-in (``wait_readable`` degrades to 2 ms
+slices whenever :meth:`fileno` returns -1, which it does while frames
+are unacked) and a blocked worker ``get`` therefore service the timers
+every few milliseconds without either side knowing about the session.
+"""
+from __future__ import annotations
+
+import copy
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+from repro.runtime.ipc.base import Channel, ChannelClosed, CorruptFrame
+from repro.runtime.messages import Message, SessionAck
+
+# base retransmit timeout: doubled per attempt (capped at 16x). Small
+# because chaos runs pace rounds in tens of milliseconds; a real WAN
+# deployment would scale this with an RTT estimate.
+DEFAULT_RTO = 0.05
+# replay-buffer hard cap: a peer that never acks this many frames is
+# not a lossy link, it is a dead or byzantine one
+MAX_UNACKED = 4096
+# bounded history of per-frame recovery durations (first send -> ack
+# for frames that needed at least one retransmit) — the chaos bench's
+# recovery-time histogram scrapes this
+RECOVERY_HISTORY = 512
+
+
+class _Unacked:
+    __slots__ = ("seq", "msg", "last_sent", "first_sent", "attempts")
+
+    def __init__(self, seq: int, msg: Message, now: float) -> None:
+        self.seq = seq
+        self.msg = msg
+        self.last_sent = now
+        self.first_sent = now
+        self.attempts = 0
+
+
+class ReliableChannel(Channel):
+    """Exactly-once in-order delivery over a lossy inner channel."""
+
+    def __init__(self, inner: Channel, rto: float = DEFAULT_RTO,
+                 max_unacked: int = MAX_UNACKED) -> None:
+        self.inner = inner
+        self.rto = rto
+        self.max_unacked = max_unacked
+        # sender state
+        self._next_seq = 0
+        self._unacked: Deque[_Unacked] = deque()
+        self._last_peer_ack = -1
+        # receiver state
+        self._expect = 0
+        self._holdback: Dict[int, Message] = {}
+        self._deliver: Deque[Message] = deque()
+        self._closed_exc: Optional[ChannelClosed] = None
+        self._ack_due = False
+        self.stats: Dict[str, float] = {
+            "sent": 0, "retransmits": 0, "fast_retransmits": 0,
+            "dup_delivered": 0, "gaps": 0, "corrupt_skipped": 0,
+            "acks_sent": 0, "recovered": 0,
+        }
+        self.recovery_s: List[float] = []
+
+    # -- sender ---------------------------------------------------------
+    def put(self, message: Message) -> None:
+        if len(self._unacked) >= self.max_unacked:
+            raise ChannelClosed(
+                f"session replay buffer overflow "
+                f"({self.max_unacked} frames unacked)")
+        stamped = copy.copy(message)     # broadcasts are shared: never
+        stamped.seq = self._next_seq     # mutate the caller's message
+        self._next_seq += 1
+        self._unacked.append(
+            _Unacked(stamped.seq, stamped, time.monotonic()))
+        self.stats["sent"] += 1
+        self.inner.put(stamped)
+
+    def unacked_messages(self) -> List[Message]:
+        """The replay backlog, oldest first — what a reconnecting
+        worker carries into its next incarnation's session."""
+        return [u.msg for u in self._unacked]
+
+    def _on_ack(self, ack: int) -> None:
+        if ack == self._last_peer_ack and self._unacked \
+                and self._unacked[0].seq == ack + 1:
+            # duplicate cumulative ack = the peer is stuck missing
+            # ack+1: retransmit it now instead of waiting out the RTO
+            self.stats["fast_retransmits"] += 1
+            self._retransmit(self._unacked[0])
+        self._last_peer_ack = max(ack, self._last_peer_ack)
+        now = time.monotonic()
+        while self._unacked and self._unacked[0].seq <= ack:
+            u = self._unacked.popleft()
+            if u.attempts:
+                self.stats["recovered"] += 1
+                if len(self.recovery_s) < RECOVERY_HISTORY:
+                    self.recovery_s.append(now - u.first_sent)
+
+    def _retransmit(self, u: _Unacked) -> None:
+        u.attempts += 1
+        u.last_sent = time.monotonic()
+        self.stats["retransmits"] += 1
+        try:
+            self.inner.put(u.msg)
+        except ChannelClosed:
+            pass                         # transient: get/poll surfaces
+            #                              a genuinely dead peer
+
+    def _maintain(self) -> None:
+        now = time.monotonic()
+        for u in self._unacked:
+            backoff = self.rto * (1 << min(u.attempts, 4))
+            if now - u.last_sent >= backoff:
+                self._retransmit(u)
+
+    # -- receiver -------------------------------------------------------
+    def _ingest(self) -> None:
+        while self._closed_exc is None and \
+                (self.inner.has_buffered() or self.inner.poll(0.0)):
+            try:
+                msg = self.inner.get()
+            except CorruptFrame:
+                # the transport skipped an undecodable frame: whatever
+                # it was is lost — our next (duplicate) ack is the NAK
+                self.stats["corrupt_skipped"] += 1
+                self._ack_due = True
+                continue
+            except ChannelClosed as e:
+                self._closed_exc = e
+                break
+            if isinstance(msg, SessionAck):
+                self._on_ack(msg.ack)
+                continue
+            seq = msg.seq
+            if seq < 0:                  # unsequenced control frame
+                self._deliver.append(msg)
+            elif seq == self._expect:
+                self._deliver.append(msg)
+                self._expect += 1
+                while self._expect in self._holdback:
+                    self._deliver.append(self._holdback.pop(self._expect))
+                    self._expect += 1
+                self._ack_due = True
+            elif seq > self._expect:
+                if seq not in self._holdback:
+                    self.stats["gaps"] += 1
+                    self._holdback[seq] = msg
+                else:
+                    self.stats["dup_delivered"] += 1
+                self._ack_due = True     # duplicate ack = NAK
+            else:
+                self.stats["dup_delivered"] += 1
+                self._ack_due = True
+        if self._ack_due:
+            self._ack_due = False
+            self.stats["acks_sent"] += 1
+            try:                         # acks are best-effort: a lost
+                self.inner.put(SessionAck(self._expect - 1))
+            except ChannelClosed:        # one regenerates via RTO
+                pass
+
+    def _service(self) -> None:
+        self._maintain()
+        self._ingest()
+
+    # -- Channel surface ------------------------------------------------
+    def poll(self, timeout: float = 0.0) -> bool:
+        deadline = time.monotonic() + max(timeout, 0.0)
+        while True:
+            self._service()
+            if self._deliver or self._closed_exc is not None:
+                return True
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return False
+            self.inner.poll(min(0.02, remaining))
+
+    def get(self) -> Message:
+        while True:
+            self._service()
+            if self._deliver:
+                return self._deliver.popleft()
+            if self._closed_exc is not None:
+                raise self._closed_exc
+            self.inner.poll(min(self.rto / 2, 0.02))
+
+    def fileno(self) -> int:
+        # while anything needs a timer (unacked frames, held-back gaps)
+        # the fan-in must slice-poll us so _service keeps running
+        if self._deliver or self._unacked or self._holdback:
+            return -1
+        return self.inner.fileno()
+
+    def has_buffered(self) -> bool:
+        return bool(self._deliver) or self._closed_exc is not None \
+            or self.inner.has_buffered()
+
+    def close(self) -> None:
+        self.inner.close()
+
+    def session_stats(self) -> dict:
+        out = dict(self.stats)
+        out["unacked"] = len(self._unacked)
+        out["holdback"] = len(self._holdback)
+        return out
+
+    # transport passthrough the eventloop's obs scrape relies on
+    def wire_stats(self) -> Optional[dict]:
+        ws = getattr(self.inner, "wire_stats", None)
+        return ws() if ws is not None else None

@@ -38,13 +38,17 @@ import time
 from collections import deque
 from typing import Deque, Optional, Tuple, Union
 
-from repro.runtime.ipc.base import Channel, ChannelClosed
+from repro.runtime.ipc.base import Channel, ChannelClosed, CorruptFrame
 from repro.runtime.ipc.codec import Codec, CodecError, get as get_codec
 from repro.runtime.messages import Message, WireMessage
 
 _HEADER = struct.Struct(">I")
 MAX_FRAME = 16 * 1024 * 1024             # 16 MiB: far above any message
 _RECV_CHUNK = 65536
+
+# queue marker for a frame whose payload failed to decode under a
+# resync budget: delivered by get() as CorruptFrame, in stream order
+_CORRUPT = object()
 
 
 def parse_endpoint(text: str, allow_ephemeral: bool = False
@@ -105,7 +109,8 @@ def encode_frame(wire: WireMessage, max_frame: int = MAX_FRAME,
 class SocketChannel(Channel):
     def __init__(self, sock: "_socket.socket",
                  max_frame: int = MAX_FRAME,
-                 codec: Union[str, Codec] = "json") -> None:
+                 codec: Union[str, Codec] = "json",
+                 resync_budget: int = 0) -> None:
         sock.settimeout(None)            # framing assumes blocking ops
         try:
             sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
@@ -126,6 +131,15 @@ class SocketChannel(Channel):
         self.bytes_out = 0
         self.frames_in = 0
         self.bytes_in = 0
+        # bounded resync (DESIGN.md §15): with budget 0 (the default)
+        # an undecodable payload closes the channel exactly as before;
+        # with budget N the framing layer skips the bad payload (the
+        # length prefix still delimits it), surfaces a CorruptFrame
+        # from get() in stream order, and only gives up after N
+        # CONSECUTIVE corrupt frames — a good frame resets the streak
+        self.resync_budget = resync_budget
+        self.corrupt_frames = 0
+        self._corrupt_streak = 0
 
     @property
     def codec(self) -> str:
@@ -136,7 +150,8 @@ class SocketChannel(Channel):
         coordinator's metrics scrape."""
         return {"codec": self._codec.name,
                 "frames_out": self.frames_out, "bytes_out": self.bytes_out,
-                "frames_in": self.frames_in, "bytes_in": self.bytes_in}
+                "frames_in": self.frames_in, "bytes_in": self.bytes_in,
+                "corrupt_frames": self.corrupt_frames}
 
     def set_codec(self, codec: Union[str, Codec]) -> None:
         """Switch the payload encoding for every frame from here on —
@@ -172,6 +187,19 @@ class SocketChannel(Channel):
         self.frames_out += 1
         self.bytes_out += len(frame)
 
+    def send_raw(self, frame: bytes) -> None:
+        """Chaos/test seam: ship pre-encoded frame bytes verbatim —
+        how ``ChaosChannel`` injects genuine bit corruption (a valid
+        length prefix around a mangled payload) into a live stream."""
+        if self._closed or self._sock is None:
+            raise ChannelClosed("channel closed")
+        try:
+            self._sock.sendall(frame)
+        except OSError as e:
+            raise ChannelClosed(str(e)) from e
+        self.frames_out += 1
+        self.bytes_out += len(frame)
+
     # -- receive --------------------------------------------------------
     def poll(self, timeout: float = 0.0) -> bool:
         if self._ready or self._eof or self._error is not None:
@@ -198,7 +226,12 @@ class SocketChannel(Channel):
     def get(self) -> Message:
         while True:
             if self._ready:
-                return Message.from_wire(self._ready.popleft())
+                wire = self._ready.popleft()
+                if wire is _CORRUPT:
+                    raise CorruptFrame(
+                        f"undecodable frame skipped "
+                        f"({self.corrupt_frames} total on this channel)")
+                return Message.from_wire(wire)
             if self._error is not None:
                 raise self._error
             if self._eof:
@@ -259,9 +292,18 @@ class SocketChannel(Channel):
             try:
                 wire = self._codec.decode(payload)
             except CodecError as e:
-                self._error = ChannelClosed(f"undecodable frame: {e}")
-                self._buf.clear()
-                return
+                self.corrupt_frames += 1
+                self._corrupt_streak += 1
+                if self._corrupt_streak > self.resync_budget:
+                    self._error = ChannelClosed(f"undecodable frame: {e}")
+                    self._buf.clear()
+                    return
+                # bounded resync: the length prefix already delimited
+                # the bad payload, so the stream stays in sync — record
+                # the casualty in order and keep decoding
+                self._ready.append(_CORRUPT)
+                continue
+            self._corrupt_streak = 0
             self.frames_in += 1
             self.bytes_in += _HEADER.size + length
             self._ready.append(wire)

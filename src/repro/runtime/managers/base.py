@@ -23,15 +23,20 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Union
 
-from repro.runtime.ipc import Channel, ChannelClosed
+from repro.runtime.ipc import (ChannelClosed, Channel, ChaosChannel,
+                               ChaosSpec, DEFAULT_RESYNC_BUDGET,
+                               ReliableChannel, find_chaos)
 from repro.runtime.messages import Hello
 from repro.runtime.worker import WorkerSpec
 
 
 class HandshakeTimeout(Exception):
-    """A spawned worker never said Hello within the deadline."""
+    """A spawned worker never said Hello within the deadline. The
+    message always names the worker group and, when the transport has
+    one, the endpoint being waited on — a multi-host operator needs to
+    know WHICH machine to look at, not just which logical group."""
 
 
 @dataclasses.dataclass
@@ -57,9 +62,18 @@ class ExecutionManager(abc.ABC):
 
     name = "base"
 
-    def __init__(self, hello_timeout: float = 30.0) -> None:
+    def __init__(self, hello_timeout: float = 30.0,
+                 chaos: Optional[Union[ChaosSpec, str]] = None) -> None:
         self.hello_timeout = hello_timeout
         self.workers: Dict[str, WorkerHandle] = {}
+        # the chaos plane (DESIGN.md §15): when a spec is given, every
+        # worker link is wrapped ReliableChannel(ChaosChannel(transport))
+        # on this side and mirrored with a session on the worker side
+        # (spec.session). chaos=None builds NONE of it — inertness is
+        # structural, not a flag check per frame.
+        if isinstance(chaos, str):
+            chaos = ChaosSpec.parse(chaos)
+        self.chaos = chaos
 
     # -- lifecycle ------------------------------------------------------
     def start(self, specs) -> None:
@@ -67,10 +81,24 @@ class ExecutionManager(abc.ABC):
             self.spawn(spec)
 
     def spawn(self, spec: WorkerSpec) -> WorkerHandle:
+        if self.chaos is not None:
+            spec.session = True
         handle = self._launch(spec)
         self._await_hello(handle)
+        if self.chaos is not None:
+            # wrap AFTER the Hello was consumed on the raw transport:
+            # the rendezvous stays on the legacy wire shape, and both
+            # ends' sessions start in lockstep at seq 0
+            handle.channel = self._harden(spec.group, handle.channel)
         self.workers[spec.group] = handle
         return handle
+
+    def _harden(self, group: str, channel: Channel) -> Channel:
+        channel.resync_budget = DEFAULT_RESYNC_BUDGET
+        inner: Channel = channel
+        if self.chaos.applies_to(group):
+            inner = ChaosChannel(channel, self.chaos, group)
+        return ReliableChannel(inner)
 
     def restart(self, group: str, spec: WorkerSpec) -> WorkerHandle:
         """Bring a (presumed dead) worker back; blocks until its Hello
@@ -96,6 +124,38 @@ class ExecutionManager(abc.ABC):
     def resume(self, group: str) -> None:
         raise NotImplementedError(
             f"{self.name} manager cannot resume workers")
+
+    # -- partition scheduler (chaos plane) ------------------------------
+    def _injector(self, group: str) -> ChaosChannel:
+        h = self.workers.get(group)
+        cc = find_chaos(h.channel) if h is not None else None
+        if cc is None:
+            raise ValueError(
+                f"no chaos injector on link {group!r} — pass a "
+                f"ChaosSpec covering this group to the manager")
+        return cc
+
+    def partition(self, group: str) -> None:
+        """Sever the coordinator<->group link in BOTH directions: every
+        frame (including session retransmits and acks) is swallowed
+        until :meth:`heal`. To the control plane this is exactly a
+        silent worker — the sim mirrors it as a ``Dropout``."""
+        self._injector(group).set_partitioned(True)
+
+    def heal(self, group: str) -> None:
+        """Restore a severed link; both sessions replay their unacked
+        backlog in seq order, so nothing sent during the partition is
+        lost — only late."""
+        self._injector(group).set_partitioned(False)
+
+    def admit_rejoins(self, batch_sizes: Dict[str, int]) -> List[str]:
+        """Accept workers reconnecting MID-RUN (self-healing socket
+        workers that lost their TCP session), non-blocking. Returns the
+        groups that rejoined this call; in-process managers have no
+        rejoin path, so the base implementation admits nobody.
+        ``batch_sizes`` is the current plan — a rejoiner must resume
+        with the tuned batch, not its original spec."""
+        return []
 
     # -- bookkeeping ----------------------------------------------------
     def live(self) -> Dict[str, WorkerHandle]:
@@ -133,15 +193,19 @@ class ExecutionManager(abc.ABC):
 
     # ------------------------------------------------------------------
     def _await_hello(self, handle: WorkerHandle) -> None:
+        where = f" at {handle.endpoint}" if handle.endpoint else ""
+        who = f"worker group {handle.spec.group!r}{where}"
         if not handle.channel.poll(self.hello_timeout):
-            raise HandshakeTimeout(handle.spec.group)
+            raise HandshakeTimeout(
+                f"{who}: no Hello within {self.hello_timeout:.1f}s")
         try:
             msg = handle.channel.get()
         except ChannelClosed as e:
-            raise HandshakeTimeout(handle.spec.group) from e
+            raise HandshakeTimeout(
+                f"{who}: channel closed before Hello ({e})") from e
         if not isinstance(msg, Hello):
             raise HandshakeTimeout(
-                f"{handle.spec.group}: expected Hello, got {msg.kind}")
+                f"{who}: expected Hello, got {msg.kind}")
         handle.pid = msg.pid
         handle.incarnation = msg.incarnation
         handle.host = msg.host or handle.host

@@ -20,8 +20,8 @@ from repro.runtime.worker import WorkerSpec, run_worker
 class LocalManager(ExecutionManager):
     name = "local"
 
-    def __init__(self, hello_timeout: float = 30.0) -> None:
-        super().__init__(hello_timeout)
+    def __init__(self, hello_timeout: float = 30.0, chaos=None) -> None:
+        super().__init__(hello_timeout, chaos=chaos)
         self._threads = {}
 
     def _launch(self, spec: WorkerSpec) -> WorkerHandle:

@@ -65,8 +65,8 @@ class SpawnedProcessFaults:
 class ProcessManager(SpawnedProcessFaults, ExecutionManager):
     name = "process"
 
-    def __init__(self, hello_timeout: float = 120.0) -> None:
-        super().__init__(hello_timeout)
+    def __init__(self, hello_timeout: float = 120.0, chaos=None) -> None:
+        super().__init__(hello_timeout, chaos=chaos)
         self._ctx = multiprocessing.get_context("spawn")
         self._procs = {}
 

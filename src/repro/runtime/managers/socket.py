@@ -44,8 +44,9 @@ import multiprocessing
 import signal
 import socket as _socket
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
+from repro.runtime.ipc import ChannelClosed
 from repro.runtime.ipc.codec import negotiate
 from repro.runtime.ipc.socket import SocketChannel, parse_endpoint
 from repro.runtime.managers.base import (ExecutionManager, HandshakeTimeout,
@@ -61,7 +62,7 @@ class SocketExecutionManager(SpawnedProcessFaults, ExecutionManager):
     def __init__(self, listen: str = "127.0.0.1:0", spawn: bool = True,
                  hello_timeout: float = 120.0,
                  advertise: Optional[str] = None,
-                 codec: Optional[str] = None) -> None:
+                 codec: Optional[str] = None, chaos=None) -> None:
         """``listen`` is ``host:port`` (port 0 = ephemeral). ``spawn``
         launches one local worker process per spec (CI mode); False
         waits for standalone workers to connect. ``advertise`` is the
@@ -70,8 +71,11 @@ class SocketExecutionManager(SpawnedProcessFaults, ExecutionManager):
         wire-codec negotiation (DESIGN.md §13): None picks the best
         codec each joining worker offers (binary between new builds,
         json for old workers); ``"json"`` forces the compatibility
-        baseline for every connection (the CI canary cell)."""
-        super().__init__(hello_timeout)
+        baseline for every connection (the CI canary cell). ``chaos``
+        activates the fault-injection + reliable-session plane on
+        every worker link (DESIGN.md §15); a ChaosSpec or its
+        ``--chaos`` string grammar."""
+        super().__init__(hello_timeout, chaos=chaos)
         host, port = parse_endpoint(listen, allow_ephemeral=True)
         self._listener = _socket.socket(_socket.AF_INET,
                                         _socket.SOCK_STREAM)
@@ -164,6 +168,70 @@ class SocketExecutionManager(SpawnedProcessFaults, ExecutionManager):
                 old[0].close()           # superseded duplicate join
             self._parked[msg.group] = (chan, msg)
         return self._parked.pop(group)
+
+    # -- mid-run rejoin (self-healing workers, DESIGN.md §15) -----------
+    def admit_rejoins(self, batch_sizes: Dict[str, int]) -> List[str]:
+        """Non-blocking listener pump the event loop calls every round:
+        a standalone worker whose TCP session died reconnects here,
+        completes the SAME rendezvous as at start-of-run (its own side
+        already bumped the incarnation), and gets the CURRENT plan's
+        batch in its Welcome — the tuned plan survives the reconnect
+        without operator action."""
+        rejoined: List[str] = []
+        while True:
+            self._listener.settimeout(0.0)
+            try:
+                sock, addr = self._listener.accept()
+            except (BlockingIOError, _socket.timeout):
+                break
+            except OSError:
+                break                    # listener torn down
+            chan = SocketChannel(sock)
+            if not chan.poll(min(5.0, self.hello_timeout)):
+                chan.close()
+                continue
+            try:
+                join = chan.get()
+            except Exception:
+                chan.close()
+                continue
+            if not isinstance(join, Hello) or join.group not in self.workers:
+                chan.close()             # stranger, or unknown group
+                continue
+            group = join.group
+            old = self.workers[group]
+            spec = old.spec
+            # the worker declares its own next incarnation (it counted
+            # its reconnects); never reuse an already-seen one, or the
+            # stale-report guards would conflate the two lives
+            spec.incarnation = max(join.incarnation, old.incarnation + 1)
+            if group in batch_sizes:
+                spec.batch_size = batch_sizes[group]
+            join.endpoint = join.endpoint or f"{addr[0]}:{addr[1]}"
+            chosen = negotiate(join.codecs, self.codec)
+            try:
+                chan.put(Welcome(spec.to_wire(), codec=chosen))
+            except ChannelClosed:
+                chan.close()
+                continue
+            chan.set_codec(chosen)
+            handle = WorkerHandle(spec, chan,
+                                  incarnation=spec.incarnation)
+            handle.host, handle.endpoint = join.host, join.endpoint
+            try:
+                self._await_hello(handle)
+            except HandshakeTimeout:
+                chan.close()
+                continue
+            if self.chaos is not None:
+                handle.channel = self._harden(group, handle.channel)
+            try:
+                old.channel.close()
+            except Exception:
+                pass
+            self.workers[group] = handle
+            rejoined.append(group)
+        return rejoined
 
     # -- fault injection (spawned-process semantics shared with
     # ProcessManager via SpawnedProcessFaults) --------------------------

@@ -40,6 +40,15 @@ the unknown key — tests/test_wire_codec.py pins the legacy shapes.
 registered here alongside the kind string so the id space and the
 class registry can never drift apart. Ids are a pinned public
 contract: never renumber, only append.
+
+``seq`` (DESIGN.md §15) is the per-channel session sequence number the
+reliable session layer (``ipc/session.py``) stamps onto frames when a
+chaos-hardened channel is negotiated: -1 (the default) means
+"unsequenced" and is omitted from the wire, so every message a normal
+run produces is byte-identical to the pre-chaos protocol under every
+codec — the binary codecs drop trailing ``wire_tail`` fields at their
+default for exactly this reason. Receivers that never sequence simply
+ignore the field.
 """
 from __future__ import annotations
 
@@ -79,6 +88,10 @@ class Message:
     # fields omitted from the wire dict while at their default — ONLY
     # for fields added after a wire shape became a public contract
     wire_optional: ClassVar[frozenset] = frozenset()
+    # the subset of wire_optional the BINARY codecs may drop from the
+    # flat value tuple while trailing AND at their default — how a
+    # late-added field (seq) keeps pinned binary frames byte-identical
+    wire_tail: ClassVar[frozenset] = frozenset({"seq"})
     _fields: ClassVar[Tuple[str, ...]] = ()
     _defaults: ClassVar[Dict] = {}
 
@@ -116,7 +129,7 @@ class Hello(Message):
 
     kind: ClassVar[str] = "hello"
     wire_id: ClassVar[int] = 1
-    wire_optional: ClassVar[frozenset] = frozenset({"codecs"})
+    wire_optional: ClassVar[frozenset] = frozenset({"codecs", "seq"})
     group: str
     pid: int
     batch_size: int
@@ -124,6 +137,7 @@ class Hello(Message):
     host: str = ""
     endpoint: str = ""
     codecs: List[str] = dataclasses.field(default_factory=list)
+    seq: int = -1
 
 
 @register
@@ -149,9 +163,10 @@ class Welcome(Message):
 
     kind: ClassVar[str] = "welcome"
     wire_id: ClassVar[int] = 2
-    wire_optional: ClassVar[frozenset] = frozenset({"codec"})
+    wire_optional: ClassVar[frozenset] = frozenset({"codec", "seq"})
     spec: Dict
     codec: str = "json"
+    seq: int = -1
 
 
 @register
@@ -175,8 +190,10 @@ class StepGrant(Message):
 
     kind: ClassVar[str] = "grant"
     wire_id: ClassVar[int] = 3
+    wire_optional: ClassVar[frozenset] = frozenset({"seq"})
     step: int
     staleness: int = 0
+    seq: int = -1
 
 
 @register
@@ -197,7 +214,7 @@ class StepReportMsg(Message):
 
     kind: ClassVar[str] = "report"
     wire_id: ClassVar[int] = 4
-    wire_optional: ClassVar[frozenset] = frozenset({"obs"})
+    wire_optional: ClassVar[frozenset] = frozenset({"obs", "seq"})
     step: int
     group: str
     speed: float
@@ -207,13 +224,16 @@ class StepReportMsg(Message):
     wall_dt: Optional[float] = None
     loss: Optional[float] = None
     obs: Optional[List] = None
+    seq: int = -1
 
 
 # the per-report value-list schema inside a ReportBatch frame: the
 # pre-obs field set, pinned so coalesced report tuples keep their wire
-# arity across the obs addition (obs rides at the batch level instead)
+# arity across the obs addition (obs rides at the batch level instead;
+# seq likewise rides on the BATCH frame — sequencing is per frame, not
+# per coalesced report)
 REPORT_PACK_FIELDS: Tuple[str, ...] = tuple(
-    n for n in StepReportMsg._fields if n != "obs")
+    n for n in StepReportMsg._fields if n not in ("obs", "seq"))
 
 
 @register
@@ -242,9 +262,10 @@ class ReportBatch(Message):
 
     kind: ClassVar[str] = "reports"
     wire_id: ClassVar[int] = 10
-    wire_optional: ClassVar[frozenset] = frozenset({"obs"})
+    wire_optional: ClassVar[frozenset] = frozenset({"obs", "seq"})
     reports: List[List] = dataclasses.field(default_factory=list)
     obs: Optional[List] = None
+    seq: int = -1
 
     @classmethod
     def pack(cls, msgs: List[StepReportMsg]) -> "ReportBatch":
@@ -264,10 +285,12 @@ class Retune(Message):
 
     kind: ClassVar[str] = "retune"
     wire_id: ClassVar[int] = 5
+    wire_optional: ClassVar[frozenset] = frozenset({"seq"})
     step: int
     batch_sizes: Dict[str, int]
     group: str = ""                      # group that triggered the change
     reason: str = ""
+    seq: int = -1
 
 
 @register
@@ -275,7 +298,9 @@ class Retune(Message):
 class CheckpointRequest(Message):
     kind: ClassVar[str] = "ckpt_req"
     wire_id: ClassVar[int] = 6
+    wire_optional: ClassVar[frozenset] = frozenset({"seq"})
     step: int
+    seq: int = -1
 
 
 @register
@@ -295,7 +320,7 @@ class CheckpointAck(Message):
 
     kind: ClassVar[str] = "ckpt_ack"
     wire_id: ClassVar[int] = 7
-    wire_optional: ClassVar[frozenset] = frozenset({"state", "obs"})
+    wire_optional: ClassVar[frozenset] = frozenset({"state", "obs", "seq"})
     step: int
     group: str
     worker_step: int
@@ -306,6 +331,7 @@ class CheckpointAck(Message):
     # worker traced since its last report flush, so ack-only traffic
     # (e.g. the final drain) still ships its events. Omitted while None.
     obs: Optional[List] = None
+    seq: int = -1
 
 
 @register
@@ -313,7 +339,9 @@ class CheckpointAck(Message):
 class Shutdown(Message):
     kind: ClassVar[str] = "shutdown"
     wire_id: ClassVar[int] = 8
+    wire_optional: ClassVar[frozenset] = frozenset({"seq"})
     reason: str = "done"
+    seq: int = -1
 
 
 @register
@@ -321,5 +349,25 @@ class Shutdown(Message):
 class Goodbye(Message):
     kind: ClassVar[str] = "goodbye"
     wire_id: ClassVar[int] = 9
+    wire_optional: ClassVar[frozenset] = frozenset({"seq"})
     group: str
     worker_step: int
+    seq: int = -1
+
+
+@register
+@dataclasses.dataclass
+class SessionAck(Message):
+    """Cumulative acknowledgement of the reliable session layer
+    (``ipc/session.py``, DESIGN.md §15): "I have delivered every frame
+    with ``seq <= ack`` in order". Doubles as the gap re-request — a
+    receiver that detects a hole re-sends its current cumulative ack
+    immediately, and the sender treats a duplicate ack as a NAK for
+    ``ack + 1`` (fast retransmit). Never itself sequenced, so the ack
+    channel can never deadlock behind the data it acknowledges. Only a
+    chaos-negotiated channel ever carries this kind — normal runs are
+    byte-identical to the pre-chaos protocol."""
+
+    kind: ClassVar[str] = "session_ack"
+    wire_id: ClassVar[int] = 11
+    ack: int

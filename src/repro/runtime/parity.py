@@ -62,6 +62,7 @@ def run_runtime(interferences: Sequence = (), dropouts: Sequence = (),
                 staleness: int = 0,
                 step_delay_s: float = 0.0,
                 manager_kwargs: Optional[dict] = None,
+                chaos=None,
                 tracer=None,
                 metrics=None
                 ) -> Tuple[RuntimeResult, List[EventTuple]]:
@@ -72,17 +73,30 @@ def run_runtime(interferences: Sequence = (), dropouts: Sequence = (),
     synchronous rendezvous, k>=1 lets workers run k rounds ahead.
     ``manager_kwargs`` go to the manager constructor (e.g.
     ``{"codec": "json"}`` to force the socket compatibility codec).
-    ``tracer``/``metrics`` attach the observability plane (DESIGN.md
-    §14): a tracer also turns on worker-side tracing via the specs, and
-    MUST leave every event stream bit-identical — the parity gates hold
-    traced and untraced."""
+    ``chaos`` (a ChaosSpec or its ``--chaos`` string) arms seeded fault
+    injection + the reliable session on every worker link (DESIGN.md
+    §15); its partition windows become round-exact partition/heal fault
+    actions automatically. ``tracer``/``metrics`` attach the
+    observability plane (DESIGN.md §14): a tracer also turns on
+    worker-side tracing via the specs, and MUST leave every event
+    stream bit-identical — the parity gates hold traced and untraced."""
     plan = stannis_3node_plan()
     cp = ControlPlane(plan, [SpeedDeclinePolicy()],
                       liveness_timeout=liveness_timeout)
     specs = specs_from_plan(plan, interferences, dropouts, train=train,
                             step_delay_s=step_delay_s,
                             obs=tracer is not None)
-    mgr = MANAGERS[manager](**(manager_kwargs or {}))
+    mk = dict(manager_kwargs or {})
+    if chaos is not None:
+        from repro.runtime.ipc import ChaosSpec
+
+        spec = ChaosSpec.parse(chaos) if isinstance(chaos, str) else chaos
+        mk["chaos"] = spec
+        faults = list(faults) + [
+            a for p in spec.partitions
+            for a in (FaultAction(p.start_step, "partition", p.group),
+                      FaultAction(p.end_step, "heal", p.group))]
+    mgr = MANAGERS[manager](**mk)
     loop = EventLoop(cp, mgr, round_timeout=round_timeout,
                      staleness=staleness, tracer=tracer, metrics=metrics)
     try:
@@ -116,6 +130,43 @@ def fig6_parity(manager: str = "local", steps: int = 45,
                                     train=train, staleness=staleness,
                                     manager_kwargs=manager_kwargs,
                                     tracer=tracer, metrics=metrics)
+    return {"sim": sim_events, "runtime": rt_events,
+            "match": sim_events == rt_events, "result": result}
+
+
+def fig6_chaos_parity(manager: str = "socket", steps: int = 45,
+                      staleness: int = 0,
+                      chaos="seed=7,drop=0.01,dup=0.01,reorder=0.01",
+                      round_timeout: float = 2.0,
+                      manager_kwargs: Optional[dict] = None,
+                      tracer=None, metrics=None) -> dict:
+    """Fig. 6 under seeded network chaos (DESIGN.md §15).
+
+    Frame loss/duplication/reordering on every link is healed by the
+    reliable session layer, so it must be INVISIBLE to control: the
+    event stream still matches the clean simulator bit-for-bit. A
+    ``partition=group@s-e`` window in the spec is the one chaos event
+    control IS meant to see — the simulator mirrors it as a ``Dropout``
+    of the same steps (total inbound discard at the coordinator kills
+    in-flight reports exactly like modeled silence), so failure at
+    s + liveness_timeout and knee-recovery at e line up at any k.
+    """
+    from repro.runtime.ipc import ChaosSpec
+
+    spec = ChaosSpec.parse(chaos) if isinstance(chaos, str) else chaos
+    sim_drops = [Dropout(p.group, p.start_step, p.end_step)
+                 for p in spec.partitions]
+    sim_events = run_sim(fig6_escalating_interference(),
+                         dropouts=sim_drops, steps=steps,
+                         liveness_timeout=3, staleness=staleness)
+    result, rt_events = run_runtime(fig6_escalating_interference(),
+                                    steps=steps, manager=manager,
+                                    liveness_timeout=3,
+                                    round_timeout=round_timeout,
+                                    staleness=staleness,
+                                    manager_kwargs=manager_kwargs,
+                                    chaos=spec, tracer=tracer,
+                                    metrics=metrics)
     return {"sim": sim_events, "runtime": rt_events,
             "match": sim_events == rt_events, "result": result}
 

@@ -42,7 +42,8 @@ from repro.core.interference import (govern_speed, window_capacity,
                                      window_speed_cap)
 from repro.core.speed_model import SpeedModel
 from repro.obs import NULL_TRACER, Tracer
-from repro.runtime.ipc import Channel, ChannelClosed
+from repro.runtime.ipc import (Channel, ChannelClosed, CorruptFrame,
+                               DEFAULT_RESYNC_BUDGET, ReliableChannel)
 from repro.runtime.ipc.shm import (BulkUnavailable, ShmBulkPlane,
                                    publish_bulk, shm_available)
 from repro.runtime.messages import (CheckpointAck, CheckpointRequest, Goodbye,
@@ -109,6 +110,12 @@ class WorkerSpec:
     step_delay_s: float = 0.0
     bulk: str = "inline"
     obs: bool = False
+    # DESIGN.md §15: the coordinator runs this link through the chaos
+    # plane — wrap the transport in a ReliableChannel right after the
+    # Hello, mirroring the coordinator side. Dropped by from_wire on
+    # pre-chaos builds (which a chaos-enabled coordinator should not
+    # pair with anyway).
+    session: bool = False
 
     def to_wire(self) -> Dict:
         return dataclasses.asdict(self)
@@ -209,7 +216,23 @@ class TrainExecutor:
         return int(self.step_fn._cache_size())
 
 
-def run_worker(spec: WorkerSpec, chan: Channel) -> None:
+@dataclasses.dataclass
+class WorkerExit:
+    """Why :func:`run_worker` returned, and what it could not deliver.
+
+    ``status`` is ``"shutdown"`` (orderly, coordinator said so) or
+    ``"closed"`` (the channel died under the worker). ``carry`` is the
+    undelivered backlog — unflushed pending reports plus, on a session
+    channel, every frame the coordinator never acked — which a
+    self-healing socket worker replays through its NEXT incarnation's
+    session (``launch/worker.py``), so a TCP reset loses nothing."""
+
+    status: str
+    carry: List[Message] = dataclasses.field(default_factory=list)
+
+
+def run_worker(spec: WorkerSpec, chan: Channel,
+               replay: Optional[List[Message]] = None) -> WorkerExit:
     """The worker loop (thread and process entry point share it).
 
     The TrainExecutor is built on the FIRST StepGrant, not before the
@@ -253,13 +276,28 @@ def run_worker(spec: WorkerSpec, chan: Channel) -> None:
         chan.put(out)
         pending.clear()
 
+    exit_status = "closed"
     try:
         chan.put(Hello(spec.group, os.getpid(), spec.batch_size,
                        spec.incarnation, host=_socket.gethostname()))
+        if spec.session:
+            # chaos-hardened link (DESIGN.md §15): tolerate a bounded
+            # streak of undecodable frames, and speak the reliable
+            # session dialect from the first post-Hello frame — the
+            # coordinator wraps its end right after consuming the Hello
+            chan.resync_budget = DEFAULT_RESYNC_BUDGET
+            chan = ReliableChannel(chan)
+            for m in (replay or []):     # previous incarnation's backlog
+                chan.put(m)
         while True:
             if pending and not chan.poll(0.0):
                 flush()                  # backlog drained: ship the batch
-            msg = chan.get()
+            try:
+                msg = chan.get()
+            except CorruptFrame:
+                # the transport skipped a mangled frame; if it mattered
+                # the session layer will heal it — just keep serving
+                continue
             if isinstance(msg, StepGrant):        # hot path first
                 if executor is None and spec.train:
                     with tr.span("worker", "train_init"):
@@ -287,6 +325,7 @@ def run_worker(spec: WorkerSpec, chan: Channel) -> None:
             if isinstance(msg, Shutdown):
                 flush()
                 chan.put(Goodbye(spec.group, worker_step))
+                exit_status = "shutdown"
                 break
             if isinstance(msg, Retune):
                 spec.batch_size = int(
@@ -327,7 +366,12 @@ def run_worker(spec: WorkerSpec, chan: Channel) -> None:
     finally:
         if bulk_plane is not None:
             bulk_plane.close()
+        carry: List[Message] = list(pending)
+        if isinstance(chan, ReliableChannel) and exit_status == "closed":
+            carry.extend(m for m in chan.unacked_messages()
+                         if not isinstance(m, Goodbye))
         chan.close()
+    return WorkerExit(exit_status, carry)
 
 
 def _one_step(spec: WorkerSpec, gov: SpeedGovernor, sm: SpeedModel,

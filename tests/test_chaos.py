@@ -1,0 +1,702 @@
+"""Chaos plane: seeded fault injection, self-healing sessions,
+coordinator crash-resume (DESIGN.md §15).
+
+Acceptance anchors (ISSUE 8):
+  * ``ChaosChannel`` misbehaves deterministically: the fault pattern is
+    a pure function of (seed, group, direction, frame index) — two runs
+    with the same spec produce identical delivered sequences and stats;
+  * the reliable session layer (``ipc/session.py``) heals heavy
+    drop/dup/reorder/corrupt/delay chaos into exactly-once, in-order
+    delivery in both directions; corrupt frames burn the transport's
+    bounded resync budget and close the channel when it runs dry;
+  * dup/reorder-only chaos over the REAL socket backend is invisible to
+    control: events, retune-lag accounting, staleness counters and
+    liveness all match a clean run bit-for-bit at k=0 and k=2;
+  * a chaos partition window is observationally identical to the
+    simulator's ``Dropout`` at any staleness bound — the Fig. 6
+    sequence with a partition spliced in still matches the sim exactly;
+  * chaos off builds NONE of the machinery (wrapper-existence
+    inertness) and every unsequenced wire shape stays byte-identical;
+  * the coordinator journals its run state and a restarted loop
+    (in-process hand-off AND a SIGKILLed subprocess) provably continues
+    the Fig. 6 sequence from the journaled round;
+  * a standalone socket worker that loses its TCP session rejoins with
+    a bumped incarnation and no operator action;
+  * satellites: jittered exponential reconnect backoff, fsync-before-
+    rename journal durability (with an injected crash), partition purge
+    of run-ahead buckets, and hello-timeout errors that name the
+    endpoint.
+"""
+from __future__ import annotations
+
+import os
+import random
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer, RunJournal
+from repro.core.control import ControlPlane, SpeedDeclinePolicy
+from repro.core.control.telemetry import StepBuckets
+from repro.core.simulator import (fig6_escalating_interference,
+                                  stannis_3node_plan)
+from repro.launch.worker import backoff_delays, connect_and_serve
+from repro.obs import MetricsRegistry
+from repro.runtime import (EventLoop, FaultAction, MANAGERS,
+                           SocketExecutionManager, specs_from_plan)
+from repro.runtime.ipc import (ChannelClosed, ChaosChannel, ChaosRates,
+                               ChaosSpec, ChaosWindow, CorruptFrame,
+                               PartitionWindow, ReliableChannel, find_chaos,
+                               pipe_pair)
+from repro.runtime.managers.base import (ExecutionManager, HandshakeTimeout,
+                                         WorkerHandle)
+from repro.runtime.messages import StepGrant
+from repro.runtime.parity import fig6_chaos_parity, fig6_parity, run_sim
+from repro.runtime.worker import WorkerSpec
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+
+def _events(cp: ControlPlane):
+    return [(e.step, e.group, e.old_batch, e.new_batch, e.reason)
+            for e in cp.events]
+
+
+# ---------------------------------------------------------------------------
+# ChaosSpec grammar
+# ---------------------------------------------------------------------------
+
+
+class TestChaosSpec:
+    def test_parse_full_grammar(self):
+        spec = ChaosSpec.parse(
+            "seed=7,drop=0.01,send.dup=0.02,recv.delay=0.05,delay_s=0.01,"
+            "window=5-25:drop=1.0,partition=xeon1@20-26,"
+            "groups=xeon0|xeon1")
+        assert spec.seed == 7
+        assert spec.send.drop == spec.recv.drop == 0.01
+        assert spec.send.dup == 0.02 and spec.recv.dup == 0.0
+        assert spec.recv.delay == 0.05 and spec.send.delay == 0.0
+        assert spec.send.delay_s == spec.recv.delay_s == 0.01
+        assert spec.windows == [ChaosWindow(5, 25,
+                                            ChaosRates(drop=1.0,
+                                                       delay_s=0.02),
+                                            ChaosRates(drop=1.0,
+                                                       delay_s=0.02))]
+        assert spec.partitions == [PartitionWindow("xeon1", 20, 26)]
+        assert spec.groups == ("xeon0", "xeon1")
+        assert spec.applies_to("xeon1") and not spec.applies_to("csd0")
+
+    @pytest.mark.parametrize("bad", [
+        "frobnicate=1",                  # unknown key
+        "seed",                          # no '='
+        "partition=xeon1",               # missing @start-end
+        "partition=xeon1@20",            # missing -end
+        "window=5-25:frobnicate=1.0",    # unknown window rate
+        "up.drop=0.5",                   # unknown direction
+        "send.frobnicate=0.5",           # unknown per-direction rate
+    ])
+    def test_parse_rejects_malformed_tokens(self, bad):
+        with pytest.raises(ValueError):
+            ChaosSpec.parse(bad)
+
+    def test_window_selection_innermost_wins(self):
+        spec = ChaosSpec.parse(
+            "drop=0.1,window=5-25:drop=1.0,window=10-20:drop=0.5")
+        assert spec.rates("send", 3, "g").drop == 0.1
+        assert spec.rates("send", 7, "g").drop == 1.0
+        assert spec.rates("send", 15, "g").drop == 0.5   # last listed wins
+        assert spec.rates("send", 25, "g").drop == 0.1   # half-open end
+
+    def test_group_scoped_window(self):
+        spec = ChaosSpec(send=ChaosRates(drop=0.1))
+        spec.windows.append(ChaosWindow(0, 10, ChaosRates(drop=1.0),
+                                        ChaosRates(drop=1.0),
+                                        group="xeon1"))
+        assert spec.rates("send", 5, "xeon1").drop == 1.0
+        assert spec.rates("send", 5, "xeon0").drop == 0.1
+
+    def test_default_spec_is_reliability_only(self):
+        spec = ChaosSpec()
+        assert not spec.send.any() and not spec.recv.any()
+        assert spec.applies_to("anything")
+
+
+# ---------------------------------------------------------------------------
+# ChaosChannel: seeded injection over a real transport
+# ---------------------------------------------------------------------------
+
+
+def _chaos_over_pipe(spec, group="g", budget=64):
+    a_raw, b_raw = pipe_pair()
+    a_raw.resync_budget = budget
+    b_raw.resync_budget = budget
+    return ChaosChannel(a_raw, spec, group), b_raw
+
+
+def _drain(chan, out):
+    while chan.poll(0.0):
+        try:
+            out.append(chan.get().step)
+        except CorruptFrame:
+            out.append("corrupt")
+    return out
+
+
+class TestChaosChannel:
+    def test_inert_spec_passes_everything_through(self):
+        cc, peer = _chaos_over_pipe(ChaosSpec())
+        for i in range(20):
+            cc.put(StepGrant(i))
+        assert _drain(peer, []) == list(range(20))
+        assert cc.chaos_stats() == {}
+        cc.close()
+        peer.close()
+
+    def test_same_seed_same_fault_pattern(self):
+        spec_text = "seed=13,drop=0.3,dup=0.2,reorder=0.2,corrupt=0.1"
+        runs = []
+        for _ in range(2):
+            cc, peer = _chaos_over_pipe(ChaosSpec.parse(spec_text))
+            for i in range(60):
+                cc.put(StepGrant(i))
+            runs.append((_drain(peer, []), cc.chaos_stats()))
+            cc.close()
+            peer.close()
+        assert runs[0] == runs[1]
+        # and a different seed perturbs the pattern
+        cc, peer = _chaos_over_pipe(
+            ChaosSpec.parse(spec_text.replace("seed=13", "seed=14")))
+        for i in range(60):
+            cc.put(StepGrant(i))
+        assert _drain(peer, []) != runs[0][0]
+        cc.close()
+        peer.close()
+
+    def test_partition_severs_both_directions_and_kills_inflight(self):
+        # a long outbound delay parks a frame inside the injector: the
+        # partition must kill it too (it is "on the wire")
+        spec = ChaosSpec(send=ChaosRates(delay=1.0, delay_s=30.0))
+        cc, peer = _chaos_over_pipe(spec)
+        cc.put(StepGrant(1))             # held in the delay heap
+        cc.set_partitioned(True)
+        assert cc.partitioned
+        assert cc.chaos_stats()["partition_dropped_inflight"] == 1
+        cc.put(StepGrant(2))
+        assert cc.chaos_stats()["partition_dropped_out"] == 1
+        peer.put(StepGrant(3))
+        assert not cc.poll(0.1)          # inbound swallowed at ingest
+        assert cc.chaos_stats()["partition_dropped_in"] == 1
+        cc.set_partitioned(False)
+        assert not cc.partitioned
+        peer.put(StepGrant(4))
+        assert cc.poll(1.0) and cc.get() == StepGrant(4)
+        stats = cc.chaos_stats()
+        assert stats["partitions"] == 1 and stats["heals"] == 1
+        cc.close()
+        peer.close()
+
+    def test_outbound_corruption_is_loud_and_budget_bounded(self):
+        assert issubclass(CorruptFrame, ChannelClosed)
+        spec = ChaosSpec(send=ChaosRates(corrupt=1.0))
+        cc, peer = _chaos_over_pipe(spec, budget=2)
+        for _ in range(3):
+            cc.put(StepGrant(1))
+        with pytest.raises(CorruptFrame):
+            peer.get()
+        with pytest.raises(CorruptFrame):
+            peer.get()
+        with pytest.raises(ChannelClosed) as ei:  # streak > budget
+            peer.get()
+        assert not isinstance(ei.value, CorruptFrame)
+        cc.close()
+        peer.close()
+
+    def test_default_budget_zero_keeps_legacy_close(self):
+        a_raw, b_raw = pipe_pair()       # resync_budget defaults to 0
+        cc = ChaosChannel(a_raw, ChaosSpec(send=ChaosRates(corrupt=1.0)),
+                          "g")
+        cc.put(StepGrant(1))
+        with pytest.raises(ChannelClosed) as ei:
+            b_raw.get()
+        assert not isinstance(ei.value, CorruptFrame)
+        cc.close()
+        b_raw.close()
+
+    def test_find_chaos_walks_the_wrapper_chain(self):
+        a_raw, b_raw = pipe_pair()
+        cc = ChaosChannel(a_raw, ChaosSpec(), "g")
+        rc = ReliableChannel(cc)
+        assert find_chaos(rc) is cc
+        assert find_chaos(b_raw) is None
+        rc.close()
+        b_raw.close()
+
+
+# ---------------------------------------------------------------------------
+# the reliable session layer
+# ---------------------------------------------------------------------------
+
+
+class TestReliableSession:
+    def test_exactly_once_in_order_under_heavy_chaos(self):
+        spec = ChaosSpec.parse("seed=3,drop=0.08,dup=0.08,reorder=0.08,"
+                               "corrupt=0.04,delay=0.05,delay_s=0.005")
+        a_raw, b_raw = pipe_pair()
+        a_raw.resync_budget = 64
+        b_raw.resync_budget = 64
+        a = ReliableChannel(ChaosChannel(a_raw, spec, "g"))
+        b = ReliableChannel(b_raw)
+        n = 120
+        got_ab, got_ba = [], []
+        deadline = time.monotonic() + 60.0
+        i = 0
+        while time.monotonic() < deadline:
+            if i < n:
+                a.put(StepGrant(i))
+                b.put(StepGrant(1000 + i))
+                i += 1
+            while b.poll(0.0):
+                got_ab.append(b.get().step)
+            while a.poll(0.0):
+                got_ba.append(a.get().step)
+            if (len(got_ab) == n and len(got_ba) == n
+                    and not a.session_stats()["unacked"]
+                    and not b.session_stats()["unacked"]):
+                break
+            a.poll(0.002)
+            b.poll(0.002)
+        assert got_ab == list(range(n))
+        assert got_ba == [1000 + i for i in range(n)]
+        healed = (a.stats["retransmits"] + b.stats["retransmits"]
+                  + a.stats["fast_retransmits"] + b.stats["fast_retransmits"])
+        assert healed > 0, "chaos this heavy must have forced retransmits"
+        assert a.session_stats()["unacked"] == 0
+        assert b.session_stats()["unacked"] == 0
+        a.close()
+        b.close()
+
+    def test_unsequenced_frames_bypass_the_session(self):
+        # rendezvous frames from an unwrapped peer (seq=-1) deliver
+        # directly — the handshake predates the session on both ends
+        a_raw, b_raw = pipe_pair()
+        b = ReliableChannel(b_raw)
+        a_raw.put(StepGrant(5))
+        assert b.poll(1.0) and b.get() == StepGrant(5)
+        b.close()
+        a_raw.close()
+
+    def test_stamping_copies_never_mutate_the_original(self):
+        a_raw, b_raw = pipe_pair()
+        a = ReliableChannel(a_raw)
+        msg = StepGrant(3)
+        a.put(msg)
+        assert msg.seq == -1             # broadcasts are shared objects
+        assert b_raw.get().seq == 0
+        a.close()
+        b_raw.close()
+
+    def test_replay_buffer_overflow_is_a_loud_death(self):
+        a_raw, b_raw = pipe_pair()
+        a = ReliableChannel(a_raw, max_unacked=4)
+        for i in range(4):
+            a.put(StepGrant(i))          # peer never acks
+        with pytest.raises(ChannelClosed, match="replay buffer"):
+            a.put(StepGrant(4))
+        a.close()
+        b_raw.close()
+
+
+# ---------------------------------------------------------------------------
+# reconnect backoff (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+class TestBackoff:
+    def test_half_jitter_growth_and_cap(self):
+        delays = backoff_delays(base=0.05, factor=2.0, cap=2.0,
+                                rng=random.Random(0))
+        nominal = 0.05
+        for _ in range(12):
+            d = next(delays)
+            assert nominal / 2 <= d <= nominal
+            nominal = min(nominal * 2.0, 2.0)
+        assert nominal == 2.0            # capped, not unbounded
+
+    def test_seeded_rng_makes_it_deterministic(self):
+        a = backoff_delays(rng=random.Random(7))
+        b = backoff_delays(rng=random.Random(7))
+        assert [next(a) for _ in range(8)] == [next(b) for _ in range(8)]
+
+    def test_first_retry_is_nearly_immediate(self):
+        assert next(backoff_delays(rng=random.Random(1))) <= 0.05
+
+
+# ---------------------------------------------------------------------------
+# partition purge of run-ahead buckets (the step-exactness fix)
+# ---------------------------------------------------------------------------
+
+
+class TestStepBucketsDiscard:
+    def test_discard_group_from_step(self):
+        b = StepBuckets()
+        for step, group in [(4, "a"), (5, "a"), (5, "b"), (6, "a")]:
+            assert b.add(step, group, object())
+        assert b.discard_group("a", 5) == 2
+        assert set(b._buckets[5]) == {"b"}
+        assert "a" in b._buckets[4]      # below the partition round
+        assert not b._buckets.get(6)
+        assert b.discard_group("a", 5) == 0   # idempotent
+
+
+# ---------------------------------------------------------------------------
+# journal durability (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+class TestJournalDurability:
+    def test_crash_at_rename_preserves_previous_entry(self, tmp_path,
+                                                      monkeypatch):
+        j = RunJournal(str(tmp_path))
+        j.save(5, {"next_round": 5, "tag": "alpha"})
+
+        def power_cut(src, dst):
+            raise OSError("simulated crash at rename")
+
+        monkeypatch.setattr(os, "replace", power_cut)
+        with pytest.raises(OSError):
+            j.save(6, {"next_round": 6, "tag": "beta"})
+        monkeypatch.undo()
+        assert j.load_latest() == {"next_round": 5, "tag": "alpha"}
+        j.save(7, {"next_round": 7, "tag": "gamma"})  # and it recovers
+        assert j.load_latest()["next_round"] == 7
+
+    def test_manifest_fsynced_before_rename(self, tmp_path, monkeypatch):
+        calls = []
+        real_fsync, real_replace = os.fsync, os.replace
+
+        def spy_fsync(fd):
+            calls.append("fsync")
+            return real_fsync(fd)
+
+        def spy_replace(src, dst):
+            calls.append("replace")
+            return real_replace(src, dst)
+
+        monkeypatch.setattr(os, "fsync", spy_fsync)
+        monkeypatch.setattr(os, "replace", spy_replace)
+        Checkpointer(str(tmp_path), async_save=False).save(
+            1, {}, extras={"x": 1})
+        idx = calls.index("replace")
+        # npz + manifest + the tmp dir entry, all durable BEFORE the
+        # rename publishes them; the parent directory after
+        assert calls[:idx].count("fsync") >= 3
+        assert "fsync" in calls[idx + 1:]
+
+    def test_keep_k_and_torn_entry_skip(self, tmp_path):
+        j = RunJournal(str(tmp_path), keep=3)
+        for r in range(1, 6):
+            j.save(r, {"next_round": r})
+        assert j.entries() == [3, 4, 5]
+        torn = tmp_path / "journal" / "step_00000005" / "manifest.json"
+        torn.write_text("{torn")
+        assert j.load_latest()["next_round"] == 4
+
+
+# ---------------------------------------------------------------------------
+# hello-timeout diagnostics (satellite 6)
+# ---------------------------------------------------------------------------
+
+
+class _NullManager(ExecutionManager):
+    name = "null"
+
+    def _launch(self, spec):
+        raise NotImplementedError
+
+    def kill(self, group):
+        raise NotImplementedError
+
+    def _join_all(self):
+        pass
+
+
+class TestHandshakeDiagnostics:
+    def _handle(self):
+        a, b = pipe_pair()
+        spec = WorkerSpec(group="csd9", batch_size=8, capacity=4)
+        return WorkerHandle(spec=spec, channel=a,
+                            endpoint="10.9.8.7:5555"), b
+
+    def test_timeout_names_group_and_endpoint(self):
+        mgr = _NullManager(hello_timeout=0.05)
+        handle, peer = self._handle()
+        with pytest.raises(HandshakeTimeout) as ei:
+            mgr._await_hello(handle)
+        assert "'csd9'" in str(ei.value)
+        assert "10.9.8.7:5555" in str(ei.value)
+        handle.channel.close()
+        peer.close()
+
+    def test_eof_before_hello_names_group_and_endpoint(self):
+        mgr = _NullManager(hello_timeout=1.0)
+        handle, peer = self._handle()
+        peer.close()
+        with pytest.raises(HandshakeTimeout) as ei:
+            mgr._await_hello(handle)
+        assert "closed before Hello" in str(ei.value)
+        assert "'csd9'" in str(ei.value) and "10.9.8.7:5555" in str(ei.value)
+        handle.channel.close()
+
+    def test_wrong_first_message_names_the_kind(self):
+        mgr = _NullManager(hello_timeout=1.0)
+        handle, peer = self._handle()
+        peer.put(StepGrant(1))
+        with pytest.raises(HandshakeTimeout, match="expected Hello"):
+            mgr._await_hello(handle)
+        handle.channel.close()
+        peer.close()
+
+
+# ---------------------------------------------------------------------------
+# inertness: chaos off builds nothing, wire shapes stay legacy
+# ---------------------------------------------------------------------------
+
+
+class TestInertness:
+    def test_no_chaos_builds_no_wrappers(self):
+        mgr = MANAGERS["local"]()
+        try:
+            mgr.start(specs_from_plan(stannis_3node_plan()))
+            for handle in mgr.workers.values():
+                assert not isinstance(handle.channel, ReliableChannel)
+                assert find_chaos(handle.channel) is None
+                assert not handle.spec.session
+        finally:
+            mgr.shutdown()
+
+    def test_unsequenced_wire_shape_has_no_seq(self):
+        kind, fields = StepGrant(3).to_wire()
+        assert kind == "grant" and "seq" not in fields
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 under chaos: the tentpole parity oracle
+# ---------------------------------------------------------------------------
+
+
+class TestFig6ChaosParity:
+    @pytest.mark.parametrize("k", [0, 2])
+    def test_local_chaos_is_invisible_to_control(self, k):
+        metrics = MetricsRegistry()
+        p = fig6_chaos_parity(manager="local", staleness=k,
+                              chaos="seed=7,drop=0.02,dup=0.02,"
+                                    "reorder=0.01",
+                              metrics=metrics)
+        assert p["match"], (p["sim"], p["runtime"])
+        # the session healed real injected loss (scraped to metrics)
+        assert metrics.get("session.sent").value > 0
+        chaos_total = sum(
+            metrics.get(f"chaos.{key}").value
+            for key in ("dropped_out", "dropped_in", "dup_out", "dup_in",
+                        "reordered_out", "reordered_in")
+            if metrics.get(f"chaos.{key}") is not None)
+        assert chaos_total > 0
+
+    @pytest.mark.parametrize("k", [0, 2])
+    def test_local_partition_mirrors_sim_dropout(self, k):
+        p = fig6_chaos_parity(manager="local", staleness=k,
+                              chaos="seed=7,drop=0.01,dup=0.01,"
+                                    "partition=xeon1@30-38")
+        assert p["match"], (p["sim"], p["runtime"])
+        reasons = [e[4] for e in p["runtime"]]
+        assert "failure" in reasons and "recover" in reasons
+
+    @pytest.mark.parametrize("k", [0, 2])
+    def test_socket_dup_reorder_identical_to_clean_run(self, k):
+        # satellite 3: lossless pathologies (dup + reorder) at the
+        # SocketChannel layer must leave round stats, liveness and
+        # retune-lag accounting identical to a clean run
+        chaos = fig6_chaos_parity(manager="socket", staleness=k,
+                                  chaos="seed=5,dup=0.05,reorder=0.05")
+        clean = fig6_parity(manager="socket", staleness=k)
+        assert chaos["match"] and clean["match"]
+        assert chaos["runtime"] == clean["runtime"]
+        rc, rl = chaos["result"], clean["result"]
+        assert rc.retune_lags == rl.retune_lags == [k + 1] * 2
+        assert rc.stale_reports == rl.stale_reports
+        assert rc.reports_total == rl.reports_total
+        assert not any(e[4] in ("failure", "recover")
+                       for e in chaos["runtime"])
+
+    @pytest.mark.parametrize("k", [0, 2])
+    def test_socket_chaos_with_partition(self, k):
+        # the CI chaos cell's assertion, at both staleness bounds:
+        # seeded loss healed by the session AND a partition window
+        # mirrored as a sim Dropout, over real TCP
+        p = fig6_chaos_parity(manager="socket", staleness=k,
+                              chaos="seed=7,drop=0.02,dup=0.02,"
+                                    "reorder=0.01,partition=xeon1@30-38")
+        assert p["match"], (p["sim"], p["runtime"])
+
+
+# ---------------------------------------------------------------------------
+# coordinator crash-resume
+# ---------------------------------------------------------------------------
+
+
+def _fresh_fig6_loop(staleness=0):
+    plan = stannis_3node_plan()
+    cp = ControlPlane(plan, [SpeedDeclinePolicy()])
+    mgr = MANAGERS["local"]()
+    loop = EventLoop(cp, mgr, round_timeout=2.0, staleness=staleness)
+    return cp, mgr, loop
+
+
+def _resume_and_finish(run_dir, state, steps=45):
+    """Second life: fresh control plane + workers, restore, run out."""
+    cp, mgr, loop = _fresh_fig6_loop()
+    start = loop.restore(state)
+    try:
+        mgr.start(specs_from_plan(cp.plan, fig6_escalating_interference()))
+        loop.run(steps, start=start,
+                 journal=RunJournal(run_dir), journal_every=1)
+    finally:
+        loop.shutdown()
+    return cp, start
+
+
+class TestCrashResume:
+    def _first_life(self, run_dir, rounds=20):
+        cp, mgr, loop = _fresh_fig6_loop()
+        journal = RunJournal(run_dir)
+        try:
+            mgr.start(specs_from_plan(cp.plan,
+                                      fig6_escalating_interference()))
+            loop.run(rounds, journal=journal, journal_every=1)
+        finally:
+            loop.shutdown()
+        return journal
+
+    def test_inprocess_resume_continues_fig6(self, tmp_path):
+        run_dir = str(tmp_path)
+        journal = self._first_life(run_dir, rounds=20)
+        state = journal.load_latest()
+        cp2, start = _resume_and_finish(run_dir, state)
+        assert start == 20
+        assert _events(cp2) == run_sim(fig6_escalating_interference(),
+                                       steps=45)
+
+    def test_resume_from_older_entry_is_deterministic(self, tmp_path):
+        # replaying rounds the dead coordinator already ran must
+        # converge on the same event stream (report-only workers are
+        # pure functions of step and spec)
+        run_dir = str(tmp_path)
+        journal = self._first_life(run_dir, rounds=20)
+        oldest = journal.entries()[0]    # keep-k leaves 18,19,20
+        assert oldest < 20
+        ck = Checkpointer(os.path.join(run_dir, RunJournal.SUBDIR))
+        _, state = ck.restore(oldest, {})
+        cp2, start = _resume_and_finish(run_dir, state)
+        assert start == oldest
+        assert _events(cp2) == run_sim(fig6_escalating_interference(),
+                                       steps=45)
+
+    def test_staleness_mismatch_is_rejected(self, tmp_path):
+        _, _, loop0 = _fresh_fig6_loop(staleness=0)
+        state = loop0._journal_state(3)
+        _, _, loop2 = _fresh_fig6_loop(staleness=2)
+        with pytest.raises(ValueError, match="staleness"):
+            loop2.restore(state)
+
+    def test_sigkilled_coordinator_resumes_mid_fig6(self, tmp_path):
+        # the real thing: a coordinator subprocess journaling every
+        # round is SIGKILLed mid-run; a fresh loop restores the newest
+        # intact entry and finishes the paper's exact sequence
+        run_dir = str(tmp_path / "run")
+        driver = tmp_path / "driver.py"
+        driver.write_text(
+            "from repro.checkpoint.checkpointer import RunJournal\n"
+            "from repro.core.control import ControlPlane, "
+            "SpeedDeclinePolicy\n"
+            "from repro.core.simulator import "
+            "fig6_escalating_interference, stannis_3node_plan\n"
+            "from repro.runtime import EventLoop, MANAGERS, "
+            "specs_from_plan\n"
+            "plan = stannis_3node_plan()\n"
+            "cp = ControlPlane(plan, [SpeedDeclinePolicy()])\n"
+            "specs = specs_from_plan(plan, fig6_escalating_interference(),"
+            " step_delay_s=0.05)\n"
+            "mgr = MANAGERS['local']()\n"
+            "loop = EventLoop(cp, mgr, round_timeout=5.0)\n"
+            "mgr.start(specs)\n"
+            f"loop.run(45, journal=RunJournal({run_dir!r}), "
+            "journal_every=1)\n")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        proc = subprocess.Popen([sys.executable, str(driver)], env=env)
+        journal = RunJournal(run_dir)
+        try:
+            deadline = time.monotonic() + 60.0
+            while time.monotonic() < deadline:
+                entries = journal.entries()
+                if entries and entries[-1] >= 8:
+                    break
+                if proc.poll() is not None:
+                    pytest.fail("coordinator exited before the kill")
+                time.sleep(0.02)
+            else:
+                pytest.fail("coordinator never journaled 8 rounds")
+            os.kill(proc.pid, signal.SIGKILL)
+        finally:
+            proc.wait(timeout=30)
+        state = journal.load_latest()
+        assert state is not None
+        assert 8 <= state["next_round"] < 45, "kill missed the mid-run window"
+        cp2, start = _resume_and_finish(run_dir, state)
+        assert start == state["next_round"]
+        assert _events(cp2) == run_sim(fig6_escalating_interference(),
+                                       steps=45)
+
+
+# ---------------------------------------------------------------------------
+# standalone worker self-heal
+# ---------------------------------------------------------------------------
+
+
+class TestWorkerSelfHeal:
+    def test_socket_worker_rejoins_after_connection_loss(self):
+        plan = stannis_3node_plan()
+        cp = ControlPlane(plan, [SpeedDeclinePolicy()], liveness_timeout=3)
+        mgr = SocketExecutionManager(spawn=False, hello_timeout=30.0)
+        threads = []
+        for group in sorted(plan.batch_sizes()):
+            t = threading.Thread(
+                target=connect_and_serve, args=(mgr.endpoint, group),
+                kwargs={"resume": True, "retry_for": 30.0,
+                        "rng": random.Random(hash(group) & 0xFFFF)},
+                daemon=True, name=f"standalone-{group}")
+            t.start()
+            threads.append(t)
+        loop = EventLoop(cp, mgr, round_timeout=2.0)
+        try:
+            mgr.start(specs_from_plan(plan))
+            # severing the coordinator side of the TCP session is the
+            # kill for an external worker: the worker sees EOF and must
+            # rejoin on its own (backoff + incarnation bump + replay)
+            res = loop.run(30, faults=[FaultAction(5, "kill", "xeon1")])
+        finally:
+            loop.shutdown()
+        for t in threads:
+            t.join(timeout=20)
+            assert not t.is_alive(), f"{t.name} never exited"
+        assert res.rounds == 30
+        assert mgr.workers["xeon1"].incarnation >= 1, \
+            "rejoin did not bump the incarnation"
+        # the outage is at most a couple of rounds of xeon1's reports
+        assert res.reports_total >= 30 * 3 - 6

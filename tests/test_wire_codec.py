@@ -53,8 +53,9 @@ from repro.runtime.managers.process import ProcessManager
 from repro.runtime.managers.socket import SocketExecutionManager
 from repro.runtime.messages import (_REGISTRY, CheckpointAck,
                                     CheckpointRequest, Goodbye, Hello,
-                                    Message, ReportBatch, Retune, Shutdown,
-                                    StepGrant, StepReportMsg, Welcome)
+                                    Message, ReportBatch, Retune, SessionAck,
+                                    Shutdown, StepGrant, StepReportMsg,
+                                    Welcome)
 from repro.runtime.parity import run_runtime
 from repro.runtime.worker import WorkerSpec, run_worker
 
@@ -79,6 +80,7 @@ def _one_of_every_kind():
                       state=["inline", "aGk="]),
         Shutdown("done"),
         Goodbye("csd0", 12),
+        SessionAck(41),
     ]
     assert {type(m).kind for m in msgs} == set(_REGISTRY)
     return msgs
@@ -170,7 +172,7 @@ class TestGoldenBytes:
         assert {cls.kind: cls.wire_id for cls in _REGISTRY.values()} == {
             "hello": 1, "welcome": 2, "grant": 3, "report": 4,
             "retune": 5, "ckpt_req": 6, "ckpt_ack": 7, "shutdown": 8,
-            "goodbye": 9, "reports": 10,
+            "goodbye": 9, "reports": 10, "session_ack": 11,
         }
 
 
