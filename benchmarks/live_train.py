@@ -4,10 +4,8 @@ masked-retune cost (beyond-paper: retune without recompile).
 """
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Tuple
 
-import jax
 import numpy as np
 
 from repro.configs.base import get_arch, reduced_config

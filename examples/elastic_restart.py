@@ -37,7 +37,7 @@ def main():
     # -- phases 1+2: group b silent in steps [6, 18) ---------------------
     # (the control plane's liveness derives the failure from bus silence;
     # no separate heartbeat protocol)
-    recs = trainer.run(24, report_fn=dropout_report_fn({"b": (6, 18)}))
+    trainer.run(24, report_fn=dropout_report_fn({"b": (6, 18)}))
     events = [(e.step, e.group, e.old_batch, e.new_batch, e.reason)
               for e in trainer.control_plane.events]
     print("elastic events:", events)

@@ -1,0 +1,36 @@
+"""reprolint — AST-based invariant checker for the repo's load-bearing
+conventions (DESIGN.md §16).
+
+Eight PRs of runtime growth encoded their guarantees — byte-stable wire
+shapes, seed-pure fault injection, provably-inert tracing, exact
+sim/runtime parity — as conventions plus after-the-fact tests. This
+package makes those conventions fail at lint time, in seconds, instead
+of minutes into the 8-cell runtime matrix:
+
+  engine.py        ``Runner`` — parse each module once, dispatch to the
+                   applicable rules, merge findings against a committed
+                   baseline;
+  config.py        ``[tool.reprolint]`` in pyproject.toml (stdlib
+                   tomllib where available, a bundled TOML-subset
+                   reader otherwise — the checker stays zero-dependency
+                   so the fast CI lint job needs no installs);
+  manifest.py      the wire-contract golden: ``wire_manifest.json``
+                   generated from live ``runtime/messages.py``
+                   introspection, checked at lint time against a pure
+                   AST extraction of the same schema;
+  rules/           the rule families — wire contracts (W…),
+                   determinism (D…), hot-path inertness (I…),
+                   resource/exception safety (S…);
+  lint.py          the CLI: ``python -m repro.analysis.lint``
+                   (text + GitHub-annotation output, ``--baseline``,
+                   ``--write-baseline``, ``--write-manifest``).
+
+Like the rest of ``repro.obs``, the package imports nothing beyond the
+stdlib and nothing from the runtime at lint time (only
+``--write-manifest`` imports ``repro.runtime.messages``, because the
+golden is defined by live registration, not by source text).
+"""
+from repro.analysis.config import Config, load_config
+from repro.analysis.engine import Baseline, Finding, Runner
+
+__all__ = ["Baseline", "Config", "Finding", "Runner", "load_config"]

@@ -1,0 +1,153 @@
+"""Shared AST plumbing for the reprolint rules.
+
+Everything here is pure ``ast`` bookkeeping: a child->parent map (the
+stdlib parses trees without back-links), an import-alias table so a
+call like ``rnd.random()`` after ``import random as rnd`` resolves to
+the dotted name ``random.random``, and the mention/terminality helpers
+the guard-analysis rules (inertness, safety) are built from.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+
+def parent_map(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    """child node -> parent node, for upward walks."""
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def import_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Local name -> the dotted thing it imports.
+
+    ``import random``            -> {"random": "random"}
+    ``import random as rnd``     -> {"rnd": "random"}
+    ``from os import urandom``   -> {"urandom": "os.urandom"}
+    ``from uuid import uuid4 as u4`` -> {"u4": "uuid.uuid4"}
+
+    Conditional/function-local imports count too — a rule cares what a
+    name CAN resolve to, not which branch bound it.
+    """
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = \
+                    a.name if a.asname else a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def qualified_call(call: ast.Call, aliases: Dict[str, str]) -> Optional[str]:
+    """The dotted name a call resolves to through the module's imports,
+    e.g. ``time.time`` / ``random.random`` / ``os.urandom`` — or None
+    when the callee is not a plain Name/Attribute chain rooted at an
+    imported name."""
+    name = dotted_name(call.func)
+    if name is None:
+        return None
+    root, _, rest = name.partition(".")
+    if root not in aliases:
+        return None
+    full = aliases[root]
+    return f"{full}.{rest}" if rest else full
+
+
+def mentions(node: ast.AST, names: Iterable[str],
+             attrs: Iterable[str]) -> bool:
+    """Does the expression mention one of ``names`` as a bare Name, or
+    one of ``attrs`` as an attribute (``self.tracer`` -> attr
+    "tracer")? The guard rules use this to ask "does this ``if`` test
+    talk about the tracer/metrics object at all"."""
+    names = set(names)
+    attrs = set(attrs)
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in names:
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr in attrs:
+            return True
+    return False
+
+
+def is_terminal(stmts: Sequence[ast.stmt]) -> bool:
+    """True when a block always leaves the enclosing suite: its last
+    statement is a return/raise/continue/break. Good enough for the
+    early-return guard idiom (``if not tr: return``)."""
+    if not stmts:
+        return False
+    return isinstance(stmts[-1],
+                      (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+def enclosing_statement(node: ast.AST,
+                        parents: Dict[ast.AST, ast.AST]) -> ast.stmt:
+    """The innermost statement containing ``node``."""
+    while not isinstance(node, ast.stmt):
+        node = parents[node]
+    return node
+
+
+def statement_block(stmt: ast.stmt,
+                    parents: Dict[ast.AST, ast.AST]
+                    ) -> Tuple[Optional[List[ast.stmt]], int]:
+    """The statement list holding ``stmt`` and its index there —
+    (None, -1) at module scope edge cases."""
+    parent = parents.get(stmt)
+    if parent is None:
+        return None, -1
+    for field in ("body", "orelse", "finalbody"):
+        block = getattr(parent, field, None)
+        if isinstance(block, list) and stmt in block:
+            return block, block.index(stmt)
+    if isinstance(parent, ast.ExceptHandler) and stmt in parent.body:
+        return parent.body, parent.body.index(stmt)
+    return None, -1
+
+
+def ancestors(node: ast.AST,
+              parents: Dict[ast.AST, ast.AST]) -> Iterator[ast.AST]:
+    while node in parents:
+        node = parents[node]
+        yield node
+
+
+def literal_strings(node: ast.AST) -> List[str]:
+    """The string constants inside a set/list/tuple literal, possibly
+    wrapped in ``frozenset(...)``/``set(...)``/``tuple(...)`` — how the
+    messages module writes ``wire_optional``. Empty for anything
+    fancier (the wire rules then flag the field as unparseable)."""
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("frozenset", "set", "tuple", "list"):
+        if not node.args:
+            return []
+        node = node.args[0]
+    if isinstance(node, (ast.Set, ast.List, ast.Tuple)):
+        out = []
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, str)):
+                return []
+            out.append(elt.value)
+        return out
+    return []

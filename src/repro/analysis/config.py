@@ -1,0 +1,207 @@
+"""reprolint configuration: the ``[tool.reprolint]`` table.
+
+Read with stdlib ``tomllib`` (3.11+) or ``tomli`` when either is
+available; otherwise a bundled TOML-subset reader handles exactly the
+shapes this table uses — string/bool/int keys and (possibly multiline)
+arrays of strings. The subset keeps the checker runnable in the fast
+CI lint job, which installs nothing but ruff on Python 3.10.
+
+Paths in the table are repo-root-relative POSIX strings. Per-family
+path scoping lives here too: the determinism rules only patrol the
+parity-critical modules, the inertness rules only the coordinator /
+worker hot paths — everything else would drown the signal (e.g. the
+benchmarks legitimately read wall clocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Config:
+    """Resolved configuration. Field names use underscores; the TOML
+    table accepts both ``determinism_paths`` and ``determinism-paths``."""
+
+    root: str = "."
+    # repo-relative trees the repo-wide run walks (safety family scope)
+    paths: List[str] = dataclasses.field(default_factory=lambda: ["src"])
+    exclude: List[str] = dataclasses.field(default_factory=list)
+    # committed findings ledger (None = no baseline)
+    baseline: Optional[str] = None
+    # the wire-contract golden and the module it pins
+    manifest: str = "wire_manifest.json"
+    messages: str = "src/repro/runtime/messages.py"
+    # parity-critical modules: no wall clock, no unseeded randomness
+    determinism_paths: List[str] = dataclasses.field(default_factory=list)
+    # hot-path modules: tracer/metrics calls must be if-guarded
+    hotpath_modules: List[str] = dataclasses.field(default_factory=list)
+    tracer_names: List[str] = dataclasses.field(
+        default_factory=lambda: ["tr", "tracer"])
+    tracer_attrs: List[str] = dataclasses.field(
+        default_factory=lambda: ["tracer"])
+    # tracer methods exempt from the guard rule: NullTracer.span returns
+    # the shared falsy singleton, so `with tr.span(...)` allocates
+    # nothing when tracing is off — inert without an if
+    inert_exempt_methods: List[str] = dataclasses.field(
+        default_factory=lambda: ["span"])
+    metrics_names: List[str] = dataclasses.field(
+        default_factory=lambda: ["mx", "metrics"])
+    metrics_attrs: List[str] = dataclasses.field(
+        default_factory=lambda: ["metrics"])
+    # receiver names the manager-lifecycle rule watches for `.start()`
+    manager_name_pattern: str = r"(^|_)(mgr|manager)s?\d*$"
+    # receiver names whose blocking get()/poll() counts under a lock
+    channel_names: List[str] = dataclasses.field(
+        default_factory=lambda: ["chan", "channel", "sock", "conn"])
+
+    def abspath(self, rel: str) -> str:
+        return os.path.normpath(os.path.join(self.root, rel))
+
+
+def _coerce(cfg: Config, key: str, value) -> None:
+    key = key.replace("-", "_")
+    if not hasattr(cfg, key):
+        raise ValueError(f"[tool.reprolint]: unknown key {key!r}")
+    current = getattr(cfg, key)
+    if isinstance(current, list) and not isinstance(value, list):
+        raise ValueError(f"[tool.reprolint] {key}: expected an array")
+    if key != "baseline" and isinstance(current, str) \
+            and not isinstance(value, str):
+        raise ValueError(f"[tool.reprolint] {key}: expected a string")
+    setattr(cfg, key, value)
+
+
+def load_config(root: str = ".",
+                pyproject: Optional[str] = None) -> Config:
+    """Build a Config from ``<root>/pyproject.toml`` (or an explicit
+    path). A missing file or missing table yields the defaults."""
+    cfg = Config(root=root)
+    path = pyproject or os.path.join(root, "pyproject.toml")
+    if not os.path.exists(path):
+        return cfg
+    with open(path, "rb") as fh:
+        raw = fh.read()
+    table = _reprolint_table(raw)
+    for key, value in table.items():
+        _coerce(cfg, key, value)
+    return cfg
+
+
+def _reprolint_table(raw: bytes) -> Dict:
+    try:
+        import tomllib                   # 3.11+
+    except ImportError:
+        try:
+            import tomli as tomllib      # common in test images
+        except ImportError:
+            tomllib = None
+    if tomllib is not None:
+        data = tomllib.loads(raw.decode("utf-8"))
+        return data.get("tool", {}).get("reprolint", {})
+    return _subset_parse(raw.decode("utf-8"))
+
+
+# -- the bundled TOML-subset reader ------------------------------------------
+
+_SECTION = re.compile(r"^\[(?P<name>[^\]]+)\]\s*(#.*)?$")
+_KEY = re.compile(r'^(?P<key>[A-Za-z0-9_\-"\']+)\s*=\s*(?P<value>.*)$')
+
+
+def _subset_parse(text: str) -> Dict:
+    """Extract ``[tool.reprolint]`` from TOML we control: bare keys,
+    basic strings, ints, bools, and arrays of basic strings (single or
+    multi line). Raises on anything inside the table it cannot read —
+    silently guessing at config would be worse than failing."""
+    out: Dict = {}
+    in_table = False
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        line = lines[i].strip()
+        i += 1
+        if not line or line.startswith("#"):
+            continue
+        m = _SECTION.match(line)
+        if m:
+            in_table = m.group("name").strip() == "tool.reprolint"
+            continue
+        if not in_table:
+            continue
+        m = _KEY.match(line)
+        if not m:
+            raise ValueError(f"[tool.reprolint]: cannot parse line {line!r}")
+        key = m.group("key").strip("\"'")
+        value = m.group("value").strip()
+        if value.startswith("["):
+            while not _array_complete(value):
+                if i >= len(lines):
+                    raise ValueError(
+                        f"[tool.reprolint] {key}: unterminated array")
+                value += " " + lines[i].strip()
+                i += 1
+        out[key] = _subset_value(key, value)
+    return out
+
+
+def _array_complete(value: str) -> bool:
+    """Closed bracket outside any string? (strings in this table never
+    contain brackets, but don't get confused by a trailing comment)"""
+    depth, in_str, quote = 0, False, ""
+    for ch in value:
+        if in_str:
+            if ch == quote:
+                in_str = False
+        elif ch in "\"'":
+            in_str, quote = True, ch
+        elif ch == "[":
+            depth += 1
+        elif ch == "]":
+            depth -= 1
+            if depth == 0:
+                return True
+        elif ch == "#" and depth == 0:
+            break
+    return False
+
+
+def _subset_value(key: str, value: str):
+    value = _strip_comment(value)
+    if value.startswith("["):
+        inner = value[value.index("[") + 1:value.rindex("]")]
+        items = []
+        for part in inner.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if not (len(part) >= 2 and part[0] in "\"'"
+                    and part[-1] == part[0]):
+                raise ValueError(
+                    f"[tool.reprolint] {key}: array items must be "
+                    f"quoted strings, got {part!r}")
+            items.append(part[1:-1])
+        return items
+    if len(value) >= 2 and value[0] in "\"'" and value[-1] == value[0]:
+        return value[1:-1]
+    if value in ("true", "false"):
+        return value == "true"
+    try:
+        return int(value)
+    except ValueError:
+        raise ValueError(
+            f"[tool.reprolint] {key}: cannot parse value {value!r}")
+
+
+def _strip_comment(value: str) -> str:
+    in_str, quote = False, ""
+    for idx, ch in enumerate(value):
+        if in_str:
+            if ch == quote:
+                in_str = False
+        elif ch in "\"'":
+            in_str, quote = True, ch
+        elif ch == "#":
+            return value[:idx].strip()
+    return value.strip()

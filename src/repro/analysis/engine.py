@@ -1,0 +1,221 @@
+"""The reprolint rule engine.
+
+One parse per module, one pass per applicable rule, findings merged
+against a committed baseline. Everything is deterministic: files are
+walked in sorted order, findings are sorted (path, line, rule), and a
+finding's baseline *fingerprint* hashes (rule, path, message) — NOT the
+line number, so reformatting a file does not resurrect a baselined
+finding, while any change to what the finding says does.
+
+The baseline is a findings ledger, not an ignore list: every entry
+carries a ``justification`` string explaining why the violation is
+accepted, and entries that no longer match anything are reported as
+stale (the ledger can only shrink honestly).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence
+
+from repro.analysis.astutil import import_aliases, parent_map
+from repro.analysis.config import Config
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str                            # repo-relative, POSIX separators
+    line: int
+    col: int
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        digest = hashlib.sha256(
+            f"{self.rule}::{self.path}::{self.message}".encode("utf-8"))
+        return digest.hexdigest()[:16]
+
+    def text(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} " \
+               f"{self.message}"
+
+    def github(self) -> str:
+        # one GitHub workflow annotation per finding; the message must
+        # stay single-line for the command protocol
+        msg = self.message.replace("%", "%25").replace("\n", " ")
+        return (f"::error file={self.path},line={self.line},"
+                f"col={self.col},title=reprolint {self.rule}::{msg}")
+
+
+class Baseline:
+    """The committed ledger of accepted findings."""
+
+    def __init__(self, entries: Optional[List[Dict]] = None) -> None:
+        self.entries: List[Dict] = entries or []
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        with open(path, "r", encoding="utf-8") as fh:
+            data = json.load(fh)
+        if not isinstance(data, dict) or "findings" not in data:
+            raise ValueError(
+                f"{path}: expected a baseline object with a 'findings' "
+                f"array")
+        return cls(list(data["findings"]))
+
+    @classmethod
+    def from_findings(cls, findings: Sequence[Finding]) -> "Baseline":
+        return cls([{
+            "rule": f.rule, "path": f.path, "message": f.message,
+            "fingerprint": f.fingerprint,
+            "justification": "TODO: justify or fix",
+        } for f in findings])
+
+    def save(self, path: str) -> None:
+        data = {"version": 1, "findings": self.entries}
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(data, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+    def fingerprints(self) -> Dict[str, Dict]:
+        return {e["fingerprint"]: e for e in self.entries}
+
+    def split(self, findings: Sequence[Finding]
+              ) -> "BaselineVerdict":
+        """Partition findings into new vs baselined, and surface
+        baseline entries matching nothing (stale)."""
+        known = self.fingerprints()
+        new, accepted = [], []
+        seen = set()
+        for f in findings:
+            if f.fingerprint in known:
+                accepted.append(f)
+                seen.add(f.fingerprint)
+            else:
+                new.append(f)
+        stale = [e for fp, e in known.items() if fp not in seen]
+        return BaselineVerdict(new, accepted, stale)
+
+
+@dataclasses.dataclass
+class BaselineVerdict:
+    new: List[Finding]
+    baselined: List[Finding]
+    stale: List[Dict]
+
+
+class ModuleContext:
+    """One parsed module, shared by every rule that looks at it. The
+    parent map and import table are built lazily — most modules only
+    meet path-scoped rules that never need them."""
+
+    def __init__(self, path: str, relpath: str, config: Config) -> None:
+        self.path = path
+        self.relpath = relpath
+        self.config = config
+        with open(path, "r", encoding="utf-8") as fh:
+            self.source = fh.read()
+        self.tree = ast.parse(self.source, filename=path)
+        self._parents: Optional[Dict] = None
+        self._aliases: Optional[Dict[str, str]] = None
+
+    @property
+    def parents(self) -> Dict:
+        if self._parents is None:
+            self._parents = parent_map(self.tree)
+        return self._parents
+
+    @property
+    def aliases(self) -> Dict[str, str]:
+        if self._aliases is None:
+            self._aliases = import_aliases(self.tree)
+        return self._aliases
+
+
+class Rule:
+    """One invariant. ``applies`` is the path scope; ``check`` yields
+    findings. Subclasses set ``rule_id`` and ``family``."""
+
+    rule_id: str = ""
+    family: str = ""
+
+    def applies(self, ctx: ModuleContext) -> bool:
+        return True
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        raise NotImplementedError
+
+    # -- shared helpers -------------------------------------------------
+    def finding(self, ctx: ModuleContext, node: ast.AST,
+                message: str, rule_id: Optional[str] = None) -> Finding:
+        return Finding(rule_id or self.rule_id, ctx.relpath,
+                       getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0) + 1, message)
+
+    @staticmethod
+    def in_paths(relpath: str, roots: Iterable[str]) -> bool:
+        """POSIX-prefix scope: an entry names either a file or a tree."""
+        for root in roots:
+            root = root.rstrip("/")
+            if relpath == root or relpath.startswith(root + "/"):
+                return True
+        return False
+
+
+class Runner:
+    """Walk the configured trees, run every applicable rule."""
+
+    def __init__(self, config: Config,
+                 rules: Optional[Sequence[Rule]] = None) -> None:
+        if rules is None:
+            from repro.analysis.rules import default_rules
+            rules = default_rules(config)
+        self.config = config
+        self.rules = list(rules)
+
+    def target_files(self,
+                     paths: Optional[Sequence[str]] = None) -> List[str]:
+        """Repo-relative POSIX paths of every .py under the configured
+        (or explicitly given) roots, excluded trees removed, sorted."""
+        roots = list(paths) if paths else list(self.config.paths)
+        seen = []
+        for root in roots:
+            absroot = self.config.abspath(root)
+            if os.path.isfile(absroot):
+                seen.append(root.replace(os.sep, "/"))
+                continue
+            for dirpath, dirnames, filenames in os.walk(absroot):
+                dirnames.sort()
+                dirnames[:] = [d for d in dirnames
+                               if d not in ("__pycache__", ".git")]
+                for fn in sorted(filenames):
+                    if not fn.endswith(".py"):
+                        continue
+                    rel = os.path.relpath(os.path.join(dirpath, fn),
+                                          self.config.root)
+                    seen.append(rel.replace(os.sep, "/"))
+        excl = self.config.exclude
+        uniq = sorted(set(seen))
+        return [p for p in uniq if not Rule.in_paths(p, excl)]
+
+    def run(self, paths: Optional[Sequence[str]] = None) -> List[Finding]:
+        findings: List[Finding] = []
+        for rel in self.target_files(paths):
+            abspath = self.config.abspath(rel)
+            try:
+                ctx = ModuleContext(abspath, rel, self.config)
+            except SyntaxError as e:
+                findings.append(Finding(
+                    "E001", rel, e.lineno or 1, (e.offset or 0) + 1,
+                    f"syntax error: {e.msg}"))
+                continue
+            for rule in self.rules:
+                if rule.applies(ctx):
+                    findings.extend(rule.check(ctx))
+        findings.sort(key=lambda f: (f.path, f.line, f.rule, f.col,
+                                     f.message))
+        return findings

@@ -1,0 +1,155 @@
+"""reprolint CLI: ``python -m repro.analysis.lint``.
+
+Exit codes: 0 clean (every finding baselined), 1 non-baselined
+findings (or stale baseline entries with ``--strict-baseline``),
+2 usage/config errors.
+
+  python -m repro.analysis.lint                    # repo-wide, text
+  python -m repro.analysis.lint --format github    # CI annotations
+  python -m repro.analysis.lint src/repro/runtime  # scoped
+  python -m repro.analysis.lint --write-manifest   # regen the golden
+  python -m repro.analysis.lint --write-baseline   # accept findings
+                                                   # (justify each!)
+
+The runner reads ``[tool.reprolint]`` from pyproject.toml at ``--root``
+(default: cwd, walking up to the enclosing pyproject). ``--output``
+mirrors the report to a file for CI artifact upload regardless of
+format.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis.config import load_config
+from repro.analysis.engine import Baseline, Finding, Runner
+
+
+def find_root(start: str) -> str:
+    """Walk up from ``start`` to the nearest directory holding
+    pyproject.toml; fall back to ``start``."""
+    cur = os.path.abspath(start)
+    while True:
+        if os.path.exists(os.path.join(cur, "pyproject.toml")):
+            return cur
+        nxt = os.path.dirname(cur)
+        if nxt == cur:
+            return os.path.abspath(start)
+        cur = nxt
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="reprolint: AST invariant checker for wire "
+                    "contracts, determinism, and hot-path inertness "
+                    "(DESIGN.md §16)")
+    p.add_argument("paths", nargs="*",
+                   help="files/trees to lint (default: [tool.reprolint] "
+                        "paths)")
+    p.add_argument("--root", default=None,
+                   help="repo root (default: nearest pyproject.toml "
+                        "above cwd)")
+    p.add_argument("--format", choices=("text", "github"),
+                   default="text",
+                   help="finding output format (github = workflow "
+                        "::error annotations)")
+    p.add_argument("--baseline", default=None,
+                   help="baseline JSON (default: [tool.reprolint] "
+                        "baseline)")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore any configured baseline")
+    p.add_argument("--strict-baseline", action="store_true",
+                   help="also fail on stale baseline entries")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="write current findings as the new baseline "
+                        "(then edit in a justification per entry)")
+    p.add_argument("--write-manifest", action="store_true",
+                   help="regenerate the wire manifest golden from live "
+                        "runtime/messages.py introspection")
+    p.add_argument("--output", default=None,
+                   help="also write the report to this file (CI "
+                        "artifact)")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    root = args.root or find_root(os.getcwd())
+    try:
+        config = load_config(root)
+    except ValueError as e:
+        print(f"reprolint: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_manifest:
+        from repro.analysis.manifest import write_manifest
+        path = config.abspath(config.manifest)
+        manifest = write_manifest(path)
+        print(f"reprolint: wrote {len(manifest['messages'])} message "
+              f"kinds to {path}")
+        if not args.paths and not args.write_baseline:
+            return 0
+
+    runner = Runner(config)
+    findings = runner.run(args.paths or None)
+
+    if args.write_baseline:
+        path = args.baseline or config.baseline or \
+            "reprolint_baseline.json"
+        Baseline.from_findings(findings).save(config.abspath(path))
+        print(f"reprolint: baselined {len(findings)} finding(s) to "
+              f"{path} — fill in a justification for each")
+        return 0
+
+    baseline = Baseline()
+    baseline_path = None if args.no_baseline else \
+        (args.baseline or config.baseline)
+    if baseline_path is not None:
+        try:
+            baseline = Baseline.load(config.abspath(baseline_path))
+        except FileNotFoundError:
+            pass                         # configured-but-absent: empty
+        except ValueError as e:
+            print(f"reprolint: {e}", file=sys.stderr)
+            return 2
+    verdict = baseline.split(findings)
+
+    lines = render(verdict.new, args.format)
+    for f in verdict.baselined:
+        lines.append(f"baselined: {f.text()}")
+    for e in verdict.stale:
+        lines.append(
+            f"stale baseline entry {e['fingerprint']} "
+            f"({e['rule']} {e['path']}): no longer matches — remove it")
+    lines.append(summary_line(verdict, len(runner.target_files(
+        args.paths or None))))
+    report = "\n".join(lines) + "\n"
+    sys.stdout.write(report)
+    if args.output:
+        with open(args.output, "w", encoding="utf-8") as fh:
+            fh.write(report)
+
+    if verdict.new or (args.strict_baseline and verdict.stale):
+        return 1
+    return 0
+
+
+def render(findings: List[Finding], fmt: str) -> List[str]:
+    if fmt == "github":
+        return [f.github() for f in findings]
+    return [f.text() for f in findings]
+
+
+def summary_line(verdict, n_files: int) -> str:
+    return (f"reprolint: {len(verdict.new)} finding(s), "
+            f"{len(verdict.baselined)} baselined, "
+            f"{len(verdict.stale)} stale baseline entr"
+            f"{'y' if len(verdict.stale) == 1 else 'ies'}, "
+            f"{n_files} file(s) checked")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,195 @@
+"""The wire-contract golden: ``wire_manifest.json``.
+
+Two views of the same schema meet here:
+
+  * :func:`build_manifest` — the live truth. Imports
+    ``repro.runtime.messages`` and introspects the registration
+    registry: per message kind the class name, ``wire_id``, the flat
+    field tuple in declared order, which fields carry defaults, and
+    ``wire_optional``/``wire_tail``; plus the coalesced-report pack
+    schema (``REPORT_PACK_FIELDS``). This is what ``--write-manifest``
+    commits.
+  * :func:`extract_schema` — the static view. A pure ``ast`` read of
+    ``runtime/messages.py`` producing the same shape with no import,
+    so the wire rules can diff source against the committed golden at
+    lint time: reordering a field is a lint error BEFORE it is a test
+    failure (and before a binary-codec peer mis-decodes a frame).
+
+The drift test (tests/test_analysis.py) pins the committed JSON against
+:func:`build_manifest`, so the golden can never silently go stale; the
+W-rules pin the source against the JSON, closing the triangle.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+from repro.analysis.astutil import literal_strings
+
+MANIFEST_VERSION = 1
+
+# fields the coalesced per-report value lists exclude (they ride at the
+# batch level) — mirrors the REPORT_PACK_FIELDS definition in
+# runtime/messages.py, and is checked against it by rule W005
+PACK_EXCLUDED = ("obs", "seq")
+
+
+# -- live introspection (the --write-manifest path) --------------------------
+
+def build_manifest() -> Dict:
+    """The registered wire schema, by importing the live module. Keys
+    are sorted by wire_id so the committed JSON diffs minimally."""
+    from repro.runtime import messages as m
+
+    kinds = {}
+    for wire_id in sorted(m._WIRE_IDS):
+        cls = m._WIRE_IDS[wire_id]
+        defaults = [f.name for f in dataclasses.fields(cls)
+                    if f.default is not dataclasses.MISSING
+                    or f.default_factory is not dataclasses.MISSING]
+        kinds[cls.kind] = {
+            "class": cls.__name__,
+            "wire_id": cls.wire_id,
+            "fields": list(cls._fields),
+            "defaults": defaults,
+            "wire_optional": sorted(cls.wire_optional),
+            "wire_tail": sorted(cls.wire_tail),
+        }
+    return {
+        "version": MANIFEST_VERSION,
+        "messages": kinds,
+        "report_pack_fields": list(m.REPORT_PACK_FIELDS),
+    }
+
+
+def write_manifest(path: str) -> Dict:
+    manifest = build_manifest()
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(manifest, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    return manifest
+
+
+def load_manifest(path: str) -> Dict:
+    with open(path, "r", encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+# -- static extraction (the lint-time path) ----------------------------------
+
+@dataclasses.dataclass
+class FieldDecl:
+    """One dataclass field as declared in source."""
+
+    name: str
+    lineno: int
+    has_default: bool
+    # the default expression when it is a direct mutable literal —
+    # the thing rule W004 rejects ([] shared across every instance)
+    mutable_default: Optional[str] = None
+
+
+@dataclasses.dataclass
+class MessageDecl:
+    """One registered message class as declared in source."""
+
+    name: str
+    lineno: int
+    registered: bool
+    kind: Optional[str] = None
+    kind_lineno: int = 0
+    wire_id: Optional[int] = None
+    wire_id_lineno: int = 0
+    fields: List[FieldDecl] = dataclasses.field(default_factory=list)
+    wire_optional: Optional[List[str]] = None
+    wire_optional_lineno: int = 0
+
+    def field_names(self) -> List[str]:
+        return [f.name for f in self.fields]
+
+
+_MUTABLE_CALLS = {"set", "dict", "list", "bytearray"}
+
+
+def _mutable_literal(node: ast.AST) -> Optional[str]:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return type(node).__name__.lower()
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in _MUTABLE_CALLS:
+        return node.func.id
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+            and node.func.attr == "field":
+        # dataclasses.field(default=[...]) is the same bug in a trench
+        # coat; field(default_factory=list) is the sanctioned spelling
+        for kw in node.keywords:
+            if kw.arg == "default":
+                return _mutable_literal(kw.value)
+    return None
+
+
+def _is_classvar(annotation: ast.AST) -> bool:
+    for sub in ast.walk(annotation):
+        if isinstance(sub, ast.Name) and sub.id == "ClassVar":
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr == "ClassVar":
+            return True
+    return False
+
+
+def extract_schema(tree: ast.AST) -> List[MessageDecl]:
+    """Every class in the module that participates in the wire protocol:
+    decorated with ``@register``, or carrying ``kind``/``wire_id``
+    ClassVars (so an accidentally-unregistered message still gets
+    checked). The abstract ``Message`` base (kind "base") is skipped —
+    it is not registered and declares no wire fields."""
+    out: List[MessageDecl] = []
+    for node in tree.body:
+        if not isinstance(node, ast.ClassDef):
+            continue
+        decl = MessageDecl(
+            name=node.name, lineno=node.lineno,
+            registered=any(isinstance(d, ast.Name) and d.id == "register"
+                           for d in node.decorator_list))
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name):
+                name = stmt.target.id
+                if _is_classvar(stmt.annotation):
+                    if name == "kind" and isinstance(stmt.value,
+                                                     ast.Constant):
+                        decl.kind = stmt.value.value
+                        decl.kind_lineno = stmt.lineno
+                    elif name == "wire_id" and isinstance(stmt.value,
+                                                          ast.Constant):
+                        decl.wire_id = stmt.value.value
+                        decl.wire_id_lineno = stmt.lineno
+                    elif name == "wire_optional" and stmt.value is not None:
+                        decl.wire_optional = literal_strings(stmt.value)
+                        decl.wire_optional_lineno = stmt.lineno
+                    continue
+                if name.startswith("_"):
+                    continue
+                decl.fields.append(FieldDecl(
+                    name=name, lineno=stmt.lineno,
+                    has_default=stmt.value is not None,
+                    mutable_default=(
+                        _mutable_literal(stmt.value)
+                        if stmt.value is not None else None)))
+        is_protocol = decl.registered or (
+            decl.kind is not None and decl.kind != "base"
+            and decl.wire_id is not None)
+        if is_protocol:
+            out.append(decl)
+    return out
+
+
+def extract_pack_fields(tree: ast.AST) -> Optional[List[ast.Assign]]:
+    """The module-level REPORT_PACK_FIELDS assignment(s), for W005."""
+    found = [node for node in tree.body
+             if isinstance(node, ast.Assign)
+             and any(isinstance(t, ast.Name)
+                     and t.id == "REPORT_PACK_FIELDS"
+                     for t in node.targets)]
+    return found or None

@@ -1,0 +1,30 @@
+"""The reprolint rule families (DESIGN.md §16).
+
+  W0xx  wire contracts    runtime/messages.py vs wire_manifest.json
+  D1xx  determinism       no wall clock / unseeded entropy in
+                          parity-critical modules
+  I2xx  hot-path inertness tracer/metrics calls behind falsy guards
+  S3xx  resource safety   try/finally lifecycles, exception hygiene
+
+``default_rules`` is the full battery, instantiated against one
+config — the CLI and the tests both build their rule set here so a new
+rule registers in exactly one place (add it to its family module's
+``RULES`` and it ships).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.config import Config
+from repro.analysis.engine import Rule
+from repro.analysis.rules import determinism, inertness, safety, wire
+
+
+def default_rules(config: Config) -> List[Rule]:
+    rules: List[Rule] = []
+    for family in (wire, determinism, inertness, safety):
+        rules.extend(cls() for cls in family.RULES)
+    return rules
+
+
+__all__ = ["default_rules"]

@@ -1,0 +1,87 @@
+"""D-family: determinism rules for parity-critical modules.
+
+The sim/runtime parity oracle (DESIGN.md §10, §15) only works because
+both sides are pure functions of the scenario and the seed: the worker
+report stream, the simulator, the shared interference math, and the
+chaos plane's fault pattern must never consult a wall clock or an
+unseeded entropy source. These rules patrol the configured
+``determinism-paths`` for the calls that would break that:
+
+  D101  ``time.time()`` — wall-clock readings differ across hosts and
+        runs. Monotonic timing (``perf_counter``/``monotonic``) and
+        ``time.sleep`` are timeouts/measurement, not decisions, and
+        stay legal
+  D102  unseeded ``random.*`` module functions (``random.random()``,
+        ``random.randint``, …, and ``random.SystemRandom`` — OS
+        entropy). Constructing ``random.Random(seed)`` is the ONE
+        sanctioned use: chaos/session code draws every decision from a
+        constructor-injected seeded stream
+  D103  ``os.urandom``
+  D104  ``uuid.uuid1``/``uuid4`` (host/time/entropy derived)
+
+``from random import random`` and aliases (``import random as rnd``)
+resolve through the module's import table, so renaming does not evade
+the rule.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astutil import qualified_call
+from repro.analysis.engine import Finding, ModuleContext, Rule
+
+# random.<name> calls that are allowed: seeded-generator construction
+_RANDOM_ALLOWED = {"Random"}
+
+_UUID_BANNED = {"uuid.uuid1", "uuid.uuid4"}
+
+
+class DeterminismRule(Rule):
+    family = "determinism"
+
+    def applies(self, ctx: ModuleContext) -> bool:
+        return self.in_paths(ctx.relpath,
+                             ctx.config.determinism_paths)
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        aliases = ctx.aliases
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = qualified_call(node, aliases)
+            if name is None:
+                continue
+            hit = self.classify(name)
+            if hit is not None:
+                rule_id, message = hit
+                yield self.finding(ctx, node, message, rule_id=rule_id)
+
+    def classify(self, name: str):
+        if name == "time.time":
+            return ("D101",
+                    "time.time() in a parity-critical module — wall "
+                    "clocks differ across hosts/runs; use the logical "
+                    "step clock, or time.monotonic()/perf_counter() "
+                    "for pure timeouts")
+        if name.startswith("random.") and \
+                name.split(".", 1)[1] not in _RANDOM_ALLOWED:
+            return ("D102",
+                    f"unseeded {name}() in a parity-critical module — "
+                    f"draw from a constructor-injected "
+                    f"random.Random(seed) so the pattern is a pure "
+                    f"function of the seed")
+        if name == "os.urandom":
+            return ("D103",
+                    "os.urandom() in a parity-critical module — OS "
+                    "entropy can never replay; derive bytes from the "
+                    "injected seed")
+        if name in _UUID_BANNED:
+            return ("D104",
+                    f"{name}() in a parity-critical module — ids "
+                    f"derived from host/time/entropy break replay; "
+                    f"use (group, incarnation, step) identity")
+        return None
+
+
+RULES = (DeterminismRule,)

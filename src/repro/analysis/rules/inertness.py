@@ -1,0 +1,141 @@
+"""I-family: hot-path inertness rules.
+
+The observability plane's disabled path must stay provably zero-cost
+(DESIGN.md §14): ``NULL_TRACER`` is falsy, every hot-site call is
+guarded ``if tr:`` so the untraced coordinator/worker loop allocates
+and times NOTHING — that inertness is what keeps the Fig. 6 parity
+gates identical traced/untraced, and the ``trace_overhead`` bench
+honest. These rules enforce the guard on the configured
+``hotpath-modules``:
+
+  I201  tracer call (``instant``/``complete``/``ingest``/
+        ``drain_wire``/``now``) not behind a tracer-truthiness guard
+  I202  metrics call (``counter``/``gauge``/``histogram``) not behind
+        a ``metrics is not None``-style guard
+
+A call counts as guarded when any enclosing ``if``/ternary test
+mentions the tracer/metrics object, or when a PRIOR statement in the
+same block is the early-exit idiom (``if not tr: return`` — a guard
+whose body always leaves the suite). ``with tr.span(...)`` is exempt
+by default (``inert-exempt-methods``): ``NullTracer.span`` returns the
+shared falsy singleton, so the disabled path allocates nothing without
+an ``if``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Tuple
+
+from repro.analysis.astutil import (ancestors, enclosing_statement,
+                                    is_terminal, mentions,
+                                    statement_block)
+from repro.analysis.engine import Finding, ModuleContext, Rule
+
+_TRACER_METHODS = ("instant", "complete", "ingest", "drain_wire", "now",
+                   "span")
+_METRICS_METHODS = ("counter", "gauge", "histogram")
+
+
+def _is_negated(test: ast.AST) -> bool:
+    """Does the test read as an absence check — ``not tr`` anywhere, or
+    an ``x is None`` comparison? Distinguishes the early-exit guard
+    (``if mx is None: return``) from a plain ``if mx: return`` that
+    would leave the call below UNguarded."""
+    for sub in ast.walk(test):
+        if isinstance(sub, ast.UnaryOp) and isinstance(sub.op, ast.Not):
+            return True
+        if isinstance(sub, ast.Compare) \
+                and any(isinstance(op, ast.Is) for op in sub.ops) \
+                and any(isinstance(c, ast.Constant) and c.value is None
+                        for c in sub.comparators):
+            return True
+    return False
+
+
+class InertnessRule(Rule):
+    family = "inertness"
+
+    def applies(self, ctx: ModuleContext) -> bool:
+        return self.in_paths(ctx.relpath, ctx.config.hotpath_modules)
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        cfg = ctx.config
+        exempt = set(cfg.inert_exempt_methods)
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)):
+                continue
+            target = self._classify(node.func, cfg)
+            if target is None:
+                continue
+            rule_id, method, names, attrs, fix = target
+            if method in exempt:
+                continue
+            if self._guarded(node, ctx, names, attrs):
+                continue
+            recv = ast.unparse(node.func.value)
+            yield self.finding(
+                ctx, node,
+                f"unguarded {recv}.{method}(...) on a hot path — the "
+                f"disabled-observability path must stay zero-cost; "
+                f"wrap in {fix}",
+                rule_id=rule_id)
+
+    def _classify(self, func: ast.Attribute, cfg
+                  ) -> Optional[Tuple[str, str, List[str], List[str], str]]:
+        recv = func.value
+        if func.attr in _TRACER_METHODS and self._is(recv,
+                                                     cfg.tracer_names,
+                                                     cfg.tracer_attrs):
+            return ("I201", func.attr, cfg.tracer_names,
+                    cfg.tracer_attrs,
+                    "`if tr:` (NULL_TRACER is falsy)")
+        if func.attr in _METRICS_METHODS and self._is(recv,
+                                                      cfg.metrics_names,
+                                                      cfg.metrics_attrs):
+            return ("I202", func.attr, cfg.metrics_names,
+                    cfg.metrics_attrs,
+                    "`if metrics is not None:`")
+        return None
+
+    @staticmethod
+    def _is(recv: ast.AST, names: List[str], attrs: List[str]) -> bool:
+        if isinstance(recv, ast.Name):
+            return recv.id in names
+        if isinstance(recv, ast.Attribute):
+            return recv.attr in attrs
+        return False
+
+    def _guarded(self, call: ast.Call, ctx: ModuleContext,
+                 names: List[str], attrs: List[str]) -> bool:
+        parents = ctx.parents
+        # 1. any enclosing if/ternary whose test talks about the object
+        for anc in ancestors(call, parents):
+            if isinstance(anc, (ast.If, ast.IfExp)) \
+                    and mentions(anc.test, names, attrs):
+                return True
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break
+        # 2. the early-exit idiom: a PRIOR sibling `if not tr: return`
+        #    (negated test mentioning the object, terminal body) in any
+        #    block on the path from the call up to its function
+        stmt: ast.stmt = enclosing_statement(call, parents)
+        while True:
+            block, idx = statement_block(stmt, parents)
+            if block is not None:
+                for prior in block[:idx]:
+                    if isinstance(prior, ast.If) \
+                            and mentions(prior.test, names, attrs) \
+                            and _is_negated(prior.test) \
+                            and is_terminal(prior.body):
+                        return True
+            parent = parents.get(stmt)
+            if parent is None or isinstance(
+                    parent, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Module, ast.ClassDef)):
+                break
+            stmt = enclosing_statement(parent, parents)
+        return False
+
+
+RULES = (InertnessRule,)

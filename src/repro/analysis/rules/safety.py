@@ -1,0 +1,212 @@
+"""S-family: resource and exception-safety rules.
+
+The runtime's lifecycle conventions, earned the hard way across PRs
+2-8: an execution manager started outside try/finally leaks real
+processes and sockets when a handshake fails; a bare ``except:``
+swallows KeyboardInterrupt in a loop that is supposed to be
+interruptible; a receive path that silently ``pass``es on
+``ChannelClosed`` erases the one signal derived liveness is built on;
+and a blocking call while holding a lock is how the old fan-in
+serialized on one worker.
+
+  S301  bare ``except:``
+  S302  execution-manager ``.start(...)``/``.start_workers(...)``
+        (receiver named ``mgr``/``manager``/…) with no enclosing
+        try/finally — or immediately-following try — whose finally
+        calls ``shutdown()``/``close()``
+  S303  ``except ChannelClosed: pass`` on a RECEIVE path (the try body
+        calls ``.get``/``.poll``/``.recv``) with no finally cleanup:
+        peer death must mark liveness, not vanish. Best-effort SENDS
+        may swallow it (the session layer retransmits; shutdown
+        broadcasts race worker exit by design)
+  S304  blocking call (``time.sleep``, ``.recv``/``.accept``/
+        ``.select``/``wait_readable``, or a channel's ``.get``/
+        ``.poll``) while holding a lock (``with …lock…:``) — every
+        other thread stalls behind the sleeper
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Optional
+
+from repro.analysis.astutil import (ancestors, dotted_name,
+                                    enclosing_statement, mentions,
+                                    qualified_call, statement_block)
+from repro.analysis.engine import Finding, ModuleContext, Rule
+
+_START_METHODS = {"start", "start_workers"}
+_TEARDOWN_METHODS = {"shutdown", "close", "stop"}
+_BLOCKING_METHODS = {"recv", "accept", "select"}
+_CHANNEL_BLOCKING = {"get", "poll"}
+
+
+class SafetyRule(Rule):
+    family = "safety"
+
+
+class BareExcept(SafetyRule):
+    rule_id = "S301"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ExceptHandler) and node.type is None:
+                yield self.finding(
+                    ctx, node,
+                    "bare `except:` catches SystemExit and "
+                    "KeyboardInterrupt — name the exceptions, or use "
+                    "`except Exception:` if truly everything")
+
+
+class ManagerLifecycle(SafetyRule):
+    rule_id = "S302"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        pattern = re.compile(ctx.config.manager_name_pattern)
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _START_METHODS):
+                continue
+            recv = node.func.value
+            recv_name = None
+            if isinstance(recv, ast.Name):
+                recv_name = recv.id
+            elif isinstance(recv, ast.Attribute):
+                recv_name = recv.attr
+            if recv_name is None or not pattern.search(recv_name):
+                continue
+            if self._torn_down(node, ctx):
+                continue
+            yield self.finding(
+                ctx, node,
+                f"{ast.unparse(recv)}.{node.func.attr}(...) outside "
+                f"try/finally — a failed handshake must still tear "
+                f"down already-started workers; start inside `try:` "
+                f"with `finally: shutdown()`")
+
+    def _torn_down(self, call: ast.Call, ctx: ModuleContext) -> bool:
+        parents = ctx.parents
+        # enclosing try whose finally tears down
+        for anc in ancestors(call, parents):
+            if isinstance(anc, ast.Try) and \
+                    self._finally_teardown(anc):
+                return True
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                break
+        # or: start() as setup immediately before `try: ... finally:
+        # teardown()` in the same block (the other sanctioned idiom)
+        stmt = enclosing_statement(call, parents)
+        block, idx = statement_block(stmt, parents)
+        if block is not None:
+            for later in block[idx + 1:]:
+                if isinstance(later, ast.Try) and \
+                        self._finally_teardown(later):
+                    return True
+        return False
+
+    @staticmethod
+    def _finally_teardown(node: ast.Try) -> bool:
+        for stmt in node.finalbody:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Call) \
+                        and isinstance(sub.func, ast.Attribute) \
+                        and sub.func.attr in _TEARDOWN_METHODS:
+                    return True
+        return False
+
+
+class SwallowedChannelClosed(SafetyRule):
+    rule_id = "S303"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Try):
+                continue
+            for handler in node.handlers:
+                if handler.type is None \
+                        or not mentions(handler.type, ["ChannelClosed"],
+                                        ["ChannelClosed"]):
+                    continue
+                if not all(isinstance(s, ast.Pass)
+                           for s in handler.body):
+                    continue             # it reacts somehow
+                if node.finalbody:
+                    continue             # cleanup still runs
+                if not self._receives(node.body):
+                    continue             # best-effort send: sanctioned
+                yield self.finding(
+                    ctx, handler,
+                    "`except ChannelClosed: pass` around a receive — "
+                    "peer death is the liveness signal; mark the "
+                    "worker dead (or re-raise) instead of swallowing "
+                    "the EOF")
+
+    @staticmethod
+    def _receives(body) -> bool:
+        for stmt in body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Call) \
+                        and isinstance(sub.func, ast.Attribute) \
+                        and sub.func.attr in ("get", "poll", "recv"):
+                    return True
+        return False
+
+
+class BlockingUnderLock(SafetyRule):
+    rule_id = "S304"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        aliases = ctx.aliases
+        channels = set(ctx.config.channel_names)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.With):
+                continue
+            if not any(self._is_lock(item.context_expr)
+                       for item in node.items):
+                continue
+            for sub in ast.walk(node):
+                if not isinstance(sub, ast.Call):
+                    continue
+                blocking = self._blocking(sub, aliases, channels)
+                if blocking:
+                    yield self.finding(
+                        ctx, sub,
+                        f"blocking {blocking} while holding a lock — "
+                        f"every other thread stalls behind it; "
+                        f"release the lock around the wait")
+
+    @staticmethod
+    def _is_lock(expr: ast.AST) -> bool:
+        name = dotted_name(expr)
+        if name is None and isinstance(expr, ast.Call):
+            name = dotted_name(expr.func)
+        return name is not None and "lock" in name.lower()
+
+    @staticmethod
+    def _blocking(call: ast.Call, aliases, channels) -> Optional[str]:
+        qual = qualified_call(call, aliases)
+        if qual == "time.sleep":
+            return "time.sleep(...)"
+        if qual is not None and qual.endswith("wait_readable"):
+            return "wait_readable(...)"
+        if isinstance(call.func, ast.Name) \
+                and call.func.id == "wait_readable":
+            return "wait_readable(...)"
+        if isinstance(call.func, ast.Attribute):
+            attr = call.func.attr
+            if attr in _BLOCKING_METHODS:
+                return f".{attr}(...)"
+            if attr in _CHANNEL_BLOCKING:
+                recv = call.func.value
+                recv_name = recv.id if isinstance(recv, ast.Name) \
+                    else recv.attr if isinstance(recv, ast.Attribute) \
+                    else None
+                if recv_name is not None and \
+                        recv_name.lstrip("_") in channels:
+                    return f"{recv_name}.{attr}(...)"
+        return None
+
+
+RULES = (BareExcept, ManagerLifecycle, SwallowedChannelClosed,
+         BlockingUnderLock)

@@ -1,0 +1,256 @@
+"""W-family: wire-contract rules over ``runtime/messages.py``.
+
+The wire protocol is the repo's most public contract: every field
+tuple's order is the binary codecs' positional schema (DESIGN.md §13),
+every ``wire_id`` is pinned forever, and ``wire_optional`` omission is
+what keeps old peers decoding new builds. These rules diff the SOURCE
+of the messages module against the committed ``wire_manifest.json``
+golden, so breaking the contract is a lint error in seconds — before
+the test matrix, and before a mixed-version mesh mis-decodes a frame.
+
+  W001  duplicate wire_id / duplicate kind (or missing registration)
+  W002  schema drift vs the manifest: reordered/renamed/removed fields,
+        renumbered wire_id, changed wire_optional, vanished messages.
+        An intentional change regenerates the golden explicitly
+        (``--write-manifest``) — the diff then shows contract churn in
+        wire_manifest.json, where a reviewer cannot miss it
+  W003  optional/defaulted fields not at the tail (positional codecs
+        can only drop trailing defaults), or wire_optional naming a
+        field that does not exist
+  W004  mutable default on a wire field ([]/{} shared across every
+        instance; dataclasses.field(default=[]) included)
+  W005  REPORT_PACK_FIELDS arity drift: the coalesced per-report value
+        list must stay the manifest's pinned pack schema
+
+W000 fires when the golden itself is missing/unreadable — every other
+wire rule depends on it.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterator, Optional
+
+from repro.analysis.engine import Finding, ModuleContext, Rule
+from repro.analysis.manifest import (PACK_EXCLUDED, MessageDecl,
+                                     extract_pack_fields, extract_schema,
+                                     load_manifest)
+
+
+class WireRuleBase(Rule):
+    family = "wire"
+
+    def applies(self, ctx: ModuleContext) -> bool:
+        return ctx.relpath == ctx.config.messages.replace("\\", "/")
+
+    def schema(self, ctx: ModuleContext):
+        cache = getattr(ctx, "_wire_schema", None)
+        if cache is None:
+            cache = extract_schema(ctx.tree)
+            ctx._wire_schema = cache
+        return cache
+
+    def manifest(self, ctx: ModuleContext) -> Optional[Dict]:
+        if not hasattr(ctx, "_wire_manifest"):
+            path = ctx.config.abspath(ctx.config.manifest)
+            try:
+                ctx._wire_manifest = load_manifest(path)
+            except (OSError, json.JSONDecodeError):
+                ctx._wire_manifest = None
+        return ctx._wire_manifest
+
+
+class WireManifestPresent(WireRuleBase):
+    rule_id = "W000"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if self.manifest(ctx) is None:
+            yield Finding(
+                self.rule_id, ctx.relpath, 1, 1,
+                f"wire manifest {ctx.config.manifest!r} is missing or "
+                f"unreadable — run `python -m repro.analysis.lint "
+                f"--write-manifest` and commit the result")
+
+
+class WireUniqueIds(WireRuleBase):
+    rule_id = "W001"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        by_id: Dict[int, MessageDecl] = {}
+        by_kind: Dict[str, MessageDecl] = {}
+        for decl in self.schema(ctx):
+            if not decl.registered:
+                yield self.finding(
+                    ctx, decl,
+                    f"message class {decl.name} declares kind/wire_id "
+                    f"but is not decorated with @register — it will "
+                    f"never decode")
+            if decl.wire_id is None:
+                yield self.finding(
+                    ctx, decl,
+                    f"message class {decl.name} has no literal wire_id "
+                    f"ClassVar")
+            elif decl.wire_id in by_id:
+                other = by_id[decl.wire_id]
+                yield Finding(
+                    self.rule_id, ctx.relpath, decl.wire_id_lineno, 1,
+                    f"wire_id {decl.wire_id} of {decl.name} already "
+                    f"taken by {other.name} — ids are pinned contract: "
+                    f"never renumber, only append")
+            else:
+                by_id[decl.wire_id] = decl
+            if decl.kind is None:
+                yield self.finding(
+                    ctx, decl,
+                    f"message class {decl.name} has no literal kind "
+                    f"ClassVar")
+            elif decl.kind in by_kind:
+                other = by_kind[decl.kind]
+                yield Finding(
+                    self.rule_id, ctx.relpath, decl.kind_lineno, 1,
+                    f"kind {decl.kind!r} of {decl.name} already taken "
+                    f"by {other.name}")
+            else:
+                by_kind[decl.kind] = decl
+
+
+class WireManifestDrift(WireRuleBase):
+    rule_id = "W002"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        manifest = self.manifest(ctx)
+        if manifest is None:
+            return                       # W000 already said so
+        pinned = dict(manifest.get("messages", {}))
+        seen = set()
+        regen = ("an intentional protocol change must regenerate the "
+                 "golden: `python -m repro.analysis.lint "
+                 "--write-manifest`")
+        for decl in self.schema(ctx):
+            if decl.kind is None:
+                continue                 # W001 already said so
+            entry = pinned.get(decl.kind)
+            seen.add(decl.kind)
+            if entry is None:
+                yield self.finding(
+                    ctx, decl,
+                    f"message kind {decl.kind!r} ({decl.name}) is not "
+                    f"in the wire manifest — {regen}")
+                continue
+            if decl.wire_id is not None \
+                    and decl.wire_id != entry["wire_id"]:
+                yield Finding(
+                    self.rule_id, ctx.relpath, decl.wire_id_lineno, 1,
+                    f"{decl.name}.wire_id is {decl.wire_id} but the "
+                    f"manifest pins {entry['wire_id']} — wire ids are "
+                    f"never renumbered")
+            declared = decl.field_names()
+            if declared != entry["fields"]:
+                yield self.finding(
+                    ctx, decl,
+                    f"{decl.name} declares fields "
+                    f"{declared} but the manifest pins "
+                    f"{entry['fields']} — field order IS the binary "
+                    f"codecs' positional schema; {regen}")
+            if decl.wire_optional is not None and \
+                    sorted(decl.wire_optional) != entry["wire_optional"]:
+                yield Finding(
+                    self.rule_id, ctx.relpath,
+                    decl.wire_optional_lineno or decl.lineno, 1,
+                    f"{decl.name}.wire_optional "
+                    f"{sorted(decl.wire_optional)} does not match the "
+                    f"manifest's {entry['wire_optional']} — "
+                    f"omit-at-default is how old peers keep decoding "
+                    f"new builds; {regen}")
+        for kind in sorted(set(pinned) - seen):
+            yield Finding(
+                self.rule_id, ctx.relpath, 1, 1,
+                f"message kind {kind!r} ({pinned[kind]['class']}) is in "
+                f"the wire manifest but no longer declared — removing "
+                f"a message breaks every peer still sending it; {regen}")
+
+
+class WireOptionalTail(WireRuleBase):
+    rule_id = "W003"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for decl in self.schema(ctx):
+            names = decl.field_names()
+            # defaulted fields must form a suffix (Python enforces this
+            # at import time for plain dataclasses, but lint beats a
+            # matrix-cell ImportError by minutes)
+            seen_default = None
+            for f in decl.fields:
+                if f.has_default:
+                    seen_default = f
+                elif seen_default is not None:
+                    yield Finding(
+                        self.rule_id, ctx.relpath, f.lineno, 1,
+                        f"{decl.name}.{f.name} has no default but "
+                        f"follows defaulted field "
+                        f"{seen_default.name!r} — optional fields only "
+                        f"at the tail")
+            if decl.wire_optional is None:
+                continue
+            for n in decl.wire_optional:
+                if n not in names:
+                    yield Finding(
+                        self.rule_id, ctx.relpath,
+                        decl.wire_optional_lineno or decl.lineno, 1,
+                        f"{decl.name}.wire_optional names {n!r} which "
+                        f"is not a declared field")
+            members = [n for n in names if n in set(decl.wire_optional)]
+            if members and names[-len(members):] != members:
+                yield Finding(
+                    self.rule_id, ctx.relpath,
+                    decl.wire_optional_lineno or decl.lineno, 1,
+                    f"{decl.name}.wire_optional fields {members} must "
+                    f"be the TAIL of the declared order — positional "
+                    f"codecs can only drop trailing defaults")
+
+
+class WireMutableDefaults(WireRuleBase):
+    rule_id = "W004"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for decl in self.schema(ctx):
+            for f in decl.fields:
+                if f.mutable_default:
+                    yield Finding(
+                        self.rule_id, ctx.relpath, f.lineno, 1,
+                        f"{decl.name}.{f.name} defaults to a mutable "
+                        f"{f.mutable_default} literal shared by every "
+                        f"instance — use "
+                        f"dataclasses.field(default_factory=...)")
+
+
+class WirePackArity(WireRuleBase):
+    rule_id = "W005"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        manifest = self.manifest(ctx)
+        if manifest is None:
+            return
+        pack = manifest.get("report_pack_fields")
+        if pack is None:
+            return
+        report = next((d for d in self.schema(ctx)
+                       if d.kind == "report"), None)
+        if report is None:
+            return                       # W002 reports the vanished kind
+        expected = [n for n in report.field_names()
+                    if n not in PACK_EXCLUDED]
+        if expected != pack:
+            anchor = extract_pack_fields(ctx.tree)
+            node = anchor[0] if anchor else report
+            yield self.finding(
+                ctx, node,
+                f"REPORT_PACK_FIELDS would be {expected} but the "
+                f"manifest pins {pack} — the coalesced per-report "
+                f"value-list arity is a pinned wire contract "
+                f"(ReportBatch peers index it positionally); changing "
+                f"StepReportMsg's non-obs/seq fields must regenerate "
+                f"the golden AND bump the batch protocol deliberately")
+
+
+RULES = (WireManifestPresent, WireUniqueIds, WireManifestDrift,
+         WireOptionalTail, WireMutableDefaults, WirePackArity)

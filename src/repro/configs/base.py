@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # Architecture config

@@ -25,7 +25,7 @@ from __future__ import annotations
 import abc
 import collections
 import dataclasses
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, Optional, Tuple
 
 import numpy as np
 

@@ -11,14 +11,12 @@ no recompilation, no epoch restart (beyond-paper improvement §9).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ArchConfig
 from repro.core.allocator import BatchPlan, row_mask
 from repro.models import layers as L
 from repro.models import shardings as sh

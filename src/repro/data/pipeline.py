@@ -17,7 +17,7 @@ Features mapped from the paper:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict
 
 import numpy as np
 

@@ -13,7 +13,6 @@ bq/bk default to 128/512 so a block set {q, k, v, acc} of
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

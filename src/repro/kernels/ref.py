@@ -10,7 +10,6 @@ Two tiers:
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -24,7 +24,6 @@ from jax.experimental.pallas import tpu as pltpu
 
 def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref,
                 y_ref, state_ref, *, chunk: int):
-    h = pl.program_id(1)
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)

@@ -14,7 +14,6 @@ a CPU-only container.
 """
 import argparse
 import collections
-import dataclasses
 import re
 from typing import Dict, List, Tuple
 

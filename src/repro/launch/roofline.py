@@ -11,9 +11,8 @@ reduce-scatter / all-to-all / collective-permute operand sizes).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Tuple
 
 from repro.launch import mesh as mesh_lib
 

@@ -16,7 +16,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

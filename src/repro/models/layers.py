@@ -10,7 +10,6 @@ Stacked layers prepend an L dim to every leaf.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -75,7 +75,6 @@ def mamba_block(p: Params, cfg: ArchConfig, x: jnp.ndarray,
 
     cache = {"conv": (B, W-1, di+2N), "ssm": (B, H, N, P)}; decode is S==1.
     """
-    E = cfg.d_model
     di, H, N, P, W = dims(cfg)
     b, s, _ = x.shape
     dt_ = x.dtype

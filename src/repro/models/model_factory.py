@@ -9,7 +9,7 @@ Model:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax.numpy as jnp
 

@@ -23,7 +23,6 @@ the baseline path.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
@@ -174,7 +173,6 @@ def _dispatch_local(xt, router, m, tp, x_local, dt):
     # position of slot (t, j) within its destination lane
     counts = jnp.zeros((tp,), jnp.int32)
     meta = []
-    tidx = jnp.arange(t)
     for j in range(k):
         onehot = jax.nn.one_hot(dest[:, j], tp, dtype=jnp.int32)  # (T, tp)
         pos_all = jnp.cumsum(onehot, axis=0) - 1 + counts[None, :]

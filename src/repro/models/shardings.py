@@ -198,7 +198,6 @@ def param_specs(params, cfg, mesh: Mesh, *, moe_expert_parallel: bool = False):
         name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
         ndim = jnp.ndim(leaf)
         if mode == "fsdp":
-            base_rank = {"embedding": 2, "lm_head": 2}.get(name, None)
             spec = _param_rule(name, cfg, kv_ok, moe_ep)
             stacked = max(ndim - len(tuple(spec)), 0)
             spec_t = tuple(_fsdp_rule(name, jnp.shape(leaf)[stacked:],

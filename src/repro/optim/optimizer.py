@@ -4,7 +4,7 @@ gradient compression (error-feedback) — self-contained pytree impl.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

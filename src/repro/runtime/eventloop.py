@@ -710,6 +710,8 @@ class EventLoop:
         injector's fault counters and the session layer's healing stats
         (retransmits, recovery-time histogram)."""
         mx = self.metrics
+        if mx is None:
+            return
         for handle in self.manager.workers.values():
             stats_fn = getattr(handle.channel, "wire_stats", None)
             ws = stats_fn() if stats_fn is not None else None

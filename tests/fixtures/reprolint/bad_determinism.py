@@ -1,0 +1,22 @@
+"""Seeded D-family violations (never imported — parsed only).
+
+A ``core/simulator.py``-style module that consults the wall clock and
+unseeded entropy; each call below is a line-pinned lint target."""
+import os
+import random
+import time
+import uuid
+from random import randint as pick
+
+SEEDED = random.Random(7)                # sanctioned: seeded generator
+
+
+def decide(step):
+    stamp = time.time()                  # D101 wall clock
+    mono = time.monotonic()              # legal: monotonic timeout base
+    roll = random.random()               # D102 unseeded module function
+    jitter = pick(0, 3)                  # D102 via from-import alias
+    token = os.urandom(8)                # D103 OS entropy
+    run_id = uuid.uuid4()                # D104 host/time-derived id
+    good = SEEDED.random()               # legal: drawn from the seed
+    return stamp, mono, roll, jitter, token, run_id, good

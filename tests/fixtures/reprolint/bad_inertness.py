@@ -1,0 +1,37 @@
+"""Seeded I-family violations (never imported — parsed only).
+
+An eventloop-style hot path where some tracer/metrics sites forget the
+falsy-NULL_TRACER guard; each unguarded call is a line-pinned target,
+and every guarded variant below it must stay silent."""
+
+
+class Loop:
+    def __init__(self, tracer, metrics):
+        self.tracer = tracer
+        self.metrics = metrics
+
+    def round(self, tr, mx, step):
+        tr.instant("round", "start", {"step": step})        # I201
+        t0 = tr.now() if tr else 0.0                        # guarded
+        if tr:
+            tr.complete("round", "round", t0, 1.0)          # guarded
+        with tr.span("round", "collect"):                   # exempt
+            reports = self.collect(step)
+        mx.counter("coord.reports").inc(len(reports))       # I202
+        if mx is not None:
+            mx.histogram("coord.round_latency_s").record(1.0)  # guarded
+        self.tracer.instant("round", "done", {})            # I201
+        return reports
+
+    def note(self, lag):
+        if self.metrics is None:
+            return
+        self.metrics.histogram("lag").record(lag)           # guarded
+
+    def ingest(self, events):
+        if not events or not self.tracer:
+            return
+        self.tracer.ingest("worker", events)                # guarded
+
+    def collect(self, step):
+        return []

@@ -1,0 +1,45 @@
+"""Seeded S-family violations (never imported — parsed only).
+
+Lifecycle and exception-hygiene anti-patterns; each is a line-pinned
+lint target, with the sanctioned idioms alongside to stay silent."""
+import time
+
+
+def leaky_run(mgr, loop, specs):
+    mgr.start(specs)                     # S302 no try/finally teardown
+    try:
+        return loop.run(10)
+    except:                              # S301 bare except
+        return None
+
+
+def swallowed_recv(chan):
+    try:
+        return chan.get()
+    except ChannelClosed:                # S303 recv path, no cleanup
+        pass
+
+
+def blocked_under_lock(lock, chan):
+    with lock:
+        time.sleep(0.1)                  # S304 sleep holding the lock
+        return chan.get()                # S304 channel recv under lock
+
+
+def sanctioned_run(mgr, loop, specs):
+    try:
+        mgr.start(specs)                 # guarded: finally tears down
+        return loop.run(10)
+    finally:
+        loop.shutdown()
+
+
+def sanctioned_send(chan, msg):
+    try:
+        chan.put(msg)                    # best-effort send may swallow
+    except ChannelClosed:
+        pass
+
+
+class ChannelClosed(Exception):
+    pass

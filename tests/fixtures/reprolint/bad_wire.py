@@ -1,0 +1,50 @@
+"""Seeded W-family violations (never imported — parsed only).
+
+The companion golden ``wire_manifest_bad.json`` pins what a correct
+version of this module would declare; every deviation below is a
+deliberate, line-pinned lint target for tests/test_analysis.py.
+"""
+import dataclasses
+from typing import ClassVar, List
+
+
+def register(cls):
+    return cls
+
+
+@dataclasses.dataclass
+class Message:
+    kind: ClassVar[str] = "base"
+    wire_id: ClassVar[int] = 0
+    wire_optional: ClassVar[frozenset] = frozenset()
+
+
+@register
+@dataclasses.dataclass
+class Hello(Message):
+    kind: ClassVar[str] = "hello"
+    wire_id: ClassVar[int] = 1
+    pid: int                             # W002: manifest pins group first
+    group: str
+    seq: int = -1
+
+
+@register
+@dataclasses.dataclass
+class Grant(Message):
+    kind: ClassVar[str] = "grant"
+    wire_id: ClassVar[int] = 1           # W001 dup of Hello; W002 pins 3
+    step: int
+
+
+@register
+@dataclasses.dataclass
+class Report(Message):
+    kind: ClassVar[str] = "report"
+    wire_id: ClassVar[int] = 2
+    # W003: "missing" is not a field, and "tags" is not at the tail
+    wire_optional: ClassVar[frozenset] = frozenset({"tags", "missing"})
+    step: int
+    tags: List = []                      # W004 mutable default
+    group: str                           # W003 non-default after default
+    speed: float = 0.0

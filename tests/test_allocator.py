@@ -10,7 +10,6 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
-from repro.core import allocator
 from repro.core.allocator import assign_private, retune, row_mask, solve
 from repro.core.speed_model import SpeedModel
 

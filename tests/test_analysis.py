@@ -1,0 +1,345 @@
+"""reprolint: the rule engine, the fixture corpus, the wire-manifest
+drift pin, and the clean-repo gate (DESIGN.md §16).
+
+Layout mirrors the acceptance criteria: every rule family demonstrably
+fires on its seeded-violation fixture (rule id + file + line pinned),
+the committed wire_manifest.json can never silently drift from live
+``runtime/messages.py`` introspection, and a repo-wide run yields zero
+non-baselined findings — with the determinism/wire families not merely
+baselined but absent.
+"""
+import json
+import os
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis import Baseline, Config, Runner, load_config
+from repro.analysis import lint
+from repro.analysis.config import _subset_parse
+from repro.analysis.manifest import build_manifest, load_manifest, \
+    write_manifest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+FIX = pathlib.Path(__file__).parent / "fixtures" / "reprolint"
+
+
+def run_fixture(filename, **cfg_overrides):
+    cfg = Config(root=str(FIX), paths=[filename], **cfg_overrides)
+    return Runner(cfg).run()
+
+
+def hits(findings):
+    return sorted((f.rule, f.line) for f in findings)
+
+
+# ---------------------------------------------------------------------------
+class TestWireRules:
+    def findings(self):
+        return run_fixture("bad_wire.py", messages="bad_wire.py",
+                           manifest="wire_manifest_bad.json")
+
+    def test_every_wire_rule_fires_at_its_line(self):
+        got = hits(self.findings())
+        assert ("W001", 36) in got       # Grant duplicates wire_id 1
+        assert ("W002", 24) in got       # Hello fields reordered
+        assert ("W002", 36) in got       # Grant renumbered vs manifest
+        assert ("W002", 1) in got        # manifest kind vanished
+        assert ("W002", 46) in got       # wire_optional drifted
+        assert ("W003", 46) in got       # optional not at tail/missing
+        assert ("W003", 49) in got       # non-default after default
+        assert ("W004", 48) in got       # mutable [] default
+        assert ("W005", 42) in got       # pack-arity drift
+
+    def test_all_findings_name_the_fixture_file(self):
+        assert {f.path for f in self.findings()} == {"bad_wire.py"}
+
+    def test_missing_manifest_is_its_own_finding(self):
+        findings = run_fixture("bad_wire.py", messages="bad_wire.py",
+                               manifest="no_such_manifest.json")
+        assert any(f.rule == "W000" for f in findings)
+        # and the drift rules stand down rather than crash
+        assert not any(f.rule in ("W002", "W005") for f in findings)
+
+    def test_clean_messages_module_is_quiet(self):
+        # the REAL messages module against the REAL golden
+        cfg = load_config(str(REPO))
+        findings = [f for f in Runner(cfg).run([cfg.messages])
+                    if f.rule.startswith("W")]
+        assert findings == []
+
+
+class TestDeterminismRules:
+    def findings(self):
+        return run_fixture("bad_determinism.py",
+                           determinism_paths=["bad_determinism.py"])
+
+    def test_each_entropy_source_fires_at_its_line(self):
+        got = hits(self.findings())
+        assert ("D101", 15) in got       # time.time()
+        assert ("D102", 17) in got       # random.random()
+        assert ("D102", 18) in got       # from-import alias randint
+        assert ("D103", 19) in got       # os.urandom
+        assert ("D104", 20) in got       # uuid.uuid4
+
+    def test_sanctioned_calls_stay_legal(self):
+        lines = [f.line for f in self.findings()]
+        assert 11 not in lines           # random.Random(seed)
+        assert 16 not in lines           # time.monotonic()
+        assert 21 not in lines           # SEEDED.random()
+
+    def test_out_of_scope_module_is_ignored(self):
+        cfg = Config(root=str(FIX), paths=["bad_determinism.py"],
+                     determinism_paths=["some/other/tree"])
+        assert [f for f in Runner(cfg).run()
+                if f.rule.startswith("D")] == []
+
+
+class TestInertnessRules:
+    def findings(self):
+        return run_fixture("bad_inertness.py",
+                           hotpath_modules=["bad_inertness.py"])
+
+    def test_unguarded_calls_fire_at_their_lines(self):
+        got = hits(self.findings())
+        assert ("I201", 14) in got       # bare tr.instant
+        assert ("I201", 23) in got       # bare self.tracer.instant
+        assert ("I202", 20) in got       # bare mx.counter
+
+    def test_guard_idioms_stay_silent(self):
+        lines = [f.line for f in self.findings()]
+        for guarded in (15,              # ternary `if tr else`
+                        17,              # `if tr:` block
+                        18,              # exempt `with tr.span(...)`
+                        22,              # `if mx is not None:`
+                        27,              # early-exit `is None` guard
+                        32):             # early-exit `not self.tracer`
+            assert guarded not in lines
+        assert len(self.findings()) == 3
+
+
+class TestSafetyRules:
+    def findings(self):
+        return run_fixture("bad_safety.py")
+
+    def test_each_antipattern_fires_at_its_line(self):
+        got = hits(self.findings())
+        assert ("S302", 9) in got        # mgr.start outside try/finally
+        assert ("S301", 12) in got       # bare except
+        assert ("S303", 19) in got       # swallowed recv ChannelClosed
+        assert ("S304", 25) in got       # sleep under lock
+        assert ("S304", 26) in got       # channel get under lock
+
+    def test_sanctioned_idioms_stay_silent(self):
+        lines = [f.line for f in self.findings()]
+        assert 31 not in lines           # start inside try/finally
+        assert 40 not in lines           # best-effort send swallow
+        assert len(self.findings()) == 5
+
+
+# ---------------------------------------------------------------------------
+class TestManifestDrift:
+    """Satellite: the committed golden can never silently go stale."""
+
+    def test_committed_manifest_matches_live_introspection(self):
+        committed = load_manifest(str(REPO / "wire_manifest.json"))
+        live = build_manifest()
+        assert committed == live, (
+            "wire_manifest.json has drifted from runtime/messages.py — "
+            "if the protocol change is intentional, regenerate with "
+            "`python -m repro.analysis.lint --write-manifest` and "
+            "review the JSON diff as contract churn")
+
+    def test_write_manifest_is_deterministic(self, tmp_path):
+        out = tmp_path / "m.json"
+        write_manifest(str(out))
+        assert out.read_bytes() == \
+            (REPO / "wire_manifest.json").read_bytes()
+
+    def test_manifest_pins_the_pack_schema(self):
+        from repro.runtime.messages import REPORT_PACK_FIELDS
+        committed = load_manifest(str(REPO / "wire_manifest.json"))
+        assert committed["report_pack_fields"] == \
+            list(REPORT_PACK_FIELDS)
+
+
+# ---------------------------------------------------------------------------
+class TestCleanRepo:
+    def test_repo_wide_run_has_zero_nonbaselined_findings(self):
+        cfg = load_config(str(REPO))
+        findings = Runner(cfg).run()
+        baseline = Baseline()
+        bl_path = REPO / (cfg.baseline or "")
+        if cfg.baseline and bl_path.exists():
+            baseline = Baseline.load(str(bl_path))
+        verdict = baseline.split(findings)
+        assert verdict.new == [], \
+            "fix it or baseline it WITH a justification:\n" + \
+            "\n".join(f.text() for f in verdict.new)
+
+    def test_determinism_and_wire_rules_are_clean_not_baselined(self):
+        # acceptance: the determinism/wire baseline is EMPTY — those
+        # findings were fixed, not accepted
+        cfg = load_config(str(REPO))
+        findings = Runner(cfg).run()
+        hard = [f for f in findings
+                if f.rule.startswith(("W", "D", "I"))]
+        assert hard == [], "\n".join(f.text() for f in hard)
+
+    def test_cli_exits_zero_on_the_repo(self, capsys):
+        assert lint.main(["--root", str(REPO)]) == 0
+        out = capsys.readouterr().out
+        assert "0 finding(s)" in out
+
+
+# ---------------------------------------------------------------------------
+BAD_MODULE = """\
+def risky(mgr, specs, loop):
+    mgr.start(specs)
+    try:
+        return loop.run(3)
+    except:
+        return None
+"""
+
+PYPROJECT = """\
+[tool.reprolint]
+paths = ["pkg"]
+baseline = "reprolint_baseline.json"
+"""
+
+
+@pytest.fixture()
+def tmp_repo(tmp_path):
+    (tmp_path / "pyproject.toml").write_text(PYPROJECT)
+    pkg = tmp_path / "pkg"
+    pkg.mkdir()
+    (pkg / "risky.py").write_text(BAD_MODULE)
+    return tmp_path
+
+
+class TestCLI:
+    def test_text_findings_and_exit_code(self, tmp_repo, capsys):
+        assert lint.main(["--root", str(tmp_repo)]) == 1
+        out = capsys.readouterr().out
+        assert "pkg/risky.py:2:5: S302" in out
+        assert "pkg/risky.py:5:5: S301" in out
+
+    def test_github_annotations(self, tmp_repo, capsys):
+        assert lint.main(["--root", str(tmp_repo),
+                          "--format", "github"]) == 1
+        out = capsys.readouterr().out
+        assert "::error file=pkg/risky.py,line=2,col=5," \
+               "title=reprolint S302::" in out
+
+    def test_output_file_mirrors_report(self, tmp_repo, capsys):
+        report = tmp_repo / "report.txt"
+        lint.main(["--root", str(tmp_repo), "--output", str(report)])
+        assert report.read_text() == capsys.readouterr().out
+
+    def test_baseline_workflow(self, tmp_repo, capsys):
+        # accept the debt…
+        assert lint.main(["--root", str(tmp_repo),
+                          "--write-baseline"]) == 0
+        data = json.loads(
+            (tmp_repo / "reprolint_baseline.json").read_text())
+        assert len(data["findings"]) == 2
+        assert all(e["justification"] for e in data["findings"])
+        # …and the same findings now pass, reported as baselined
+        assert lint.main(["--root", str(tmp_repo)]) == 0
+        out = capsys.readouterr().out
+        assert "2 baselined" in out
+
+    def test_stale_baseline_entries_surface(self, tmp_repo, capsys):
+        lint.main(["--root", str(tmp_repo), "--write-baseline"])
+        (tmp_repo / "pkg" / "risky.py").write_text("VALUE = 1\n")
+        assert lint.main(["--root", str(tmp_repo)]) == 0
+        assert "stale baseline entry" in capsys.readouterr().out
+        assert lint.main(["--root", str(tmp_repo),
+                          "--strict-baseline"]) == 1
+
+    def test_new_finding_is_not_masked_by_baseline(self, tmp_repo,
+                                                   capsys):
+        lint.main(["--root", str(tmp_repo), "--write-baseline"])
+        src = (tmp_repo / "pkg" / "risky.py").read_text()
+        (tmp_repo / "pkg" / "risky.py").write_text(
+            src + "\n\ndef worse(chan):\n"
+                  "    try:\n"
+                  "        return chan.get()\n"
+                  "    except ChannelClosed:\n"
+                  "        pass\n")
+        assert lint.main(["--root", str(tmp_repo)]) == 1
+        assert "S303" in capsys.readouterr().out
+
+    def test_syntax_error_is_a_finding_not_a_crash(self, tmp_repo,
+                                                   capsys):
+        (tmp_repo / "pkg" / "broken.py").write_text("def f(:\n")
+        assert lint.main(["--root", str(tmp_repo)]) == 1
+        assert "E001" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+class TestConfig:
+    def test_subset_parser_reads_the_real_pyproject(self):
+        raw = (REPO / "pyproject.toml").read_text()
+        got = _subset_parse(raw)
+        assert got["paths"] == ["src", "benchmarks", "examples"]
+        assert got["messages"] == "src/repro/runtime/messages.py"
+        assert "src/repro/runtime" in got["determinism-paths"]
+
+    def test_subset_parser_agrees_with_real_toml_parser(self):
+        tomllib = pytest.importorskip("tomli")
+        raw = (REPO / "pyproject.toml").read_text()
+        expected = tomllib.loads(raw)["tool"]["reprolint"]
+        assert _subset_parse(raw) == expected
+
+    def test_unknown_key_is_rejected(self, tmp_path):
+        (tmp_path / "pyproject.toml").write_text(textwrap.dedent("""\
+            [tool.reprolint]
+            pathz = ["src"]
+            """))
+        with pytest.raises(ValueError, match="unknown key"):
+            load_config(str(tmp_path))
+
+    def test_missing_pyproject_yields_defaults(self, tmp_path):
+        cfg = load_config(str(tmp_path))
+        assert cfg.paths == ["src"]
+        assert cfg.baseline is None
+
+    def test_multiline_arrays_parse(self, tmp_path):
+        (tmp_path / "pyproject.toml").write_text(textwrap.dedent("""\
+            [tool.reprolint]
+            paths = [
+                "a",   # with a comment
+                "b",
+            ]
+            """))
+        assert load_config(str(tmp_path)).paths == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+class TestDeterministicOutput:
+    def test_findings_are_stably_sorted(self):
+        cfg = Config(root=str(FIX), paths=["bad_safety.py",
+                                           "bad_determinism.py"],
+                     determinism_paths=["bad_determinism.py"])
+        first = Runner(cfg).run()
+        second = Runner(cfg).run()
+        assert first == second
+        assert first == sorted(first, key=lambda f: (f.path, f.line,
+                                                     f.rule, f.col,
+                                                     f.message))
+
+    def test_fingerprint_ignores_line_numbers(self):
+        from repro.analysis.engine import Finding
+        a = Finding("S301", "x.py", 10, 1, "bare except")
+        b = Finding("S301", "x.py", 99, 7, "bare except")
+        assert a.fingerprint == b.fingerprint
+
+    def test_excluded_trees_are_skipped(self):
+        cfg = load_config(str(REPO))
+        assert all(not p.startswith("tests/fixtures")
+                   for p in Runner(cfg).target_files())
+        assert os.path.exists(
+            str(FIX / "bad_wire.py"))    # the corpus itself exists

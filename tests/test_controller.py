@@ -2,7 +2,6 @@
 retune modes, elastic failure path (paper §III-B/C)."""
 from __future__ import annotations
 
-import numpy as np
 import pytest
 
 from repro.core.allocator import solve
@@ -174,7 +173,7 @@ class TestElasticPath:
         plan = xeon_plan()
         c = HyperTuneController(plan)
         c.mark_failed(7, "xeon1")
-        ev = c.mark_rejoined(20, "xeon1")
+        c.mark_rejoined(20, "xeon1")
         g = next(g for g in c.plan.groups if g.name == "xeon1")
         assert g.batch_size > 0
         assert g.batch_size <= g.capacity

@@ -3,7 +3,6 @@ layout, resumability."""
 from __future__ import annotations
 
 import numpy as np
-import pytest
 
 from repro.core.allocator import retune, solve
 from repro.core.speed_model import SpeedModel

@@ -14,7 +14,7 @@ except ImportError:                      # optional [test] extra
 
 from repro.configs.base import get_arch, reduced_config
 from repro.core import hetero_dp
-from repro.core.allocator import row_mask, solve
+from repro.core.allocator import solve
 from repro.core.hetero_dp import HeteroBatchLayout, cross_entropy, masked_loss
 from repro.core.speed_model import SpeedModel
 from repro.models.model_factory import build_model

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import SHAPES, get_arch, list_archs, reduced_config
+from repro.configs.base import get_arch, list_archs, reduced_config
 from repro.core import hetero_dp
 from repro.models.model_factory import aux_inputs, build_model
 from repro.optim.optimizer import AdamW, OptConfig

@@ -13,7 +13,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.allocator import retune, row_mask, solve
-from repro.core.controller import HyperTuneConfig, HyperTuneController
+from repro.core.controller import HyperTuneController
 from repro.core.simulator import ClusterSim, Interference
 from repro.core.speed_model import SpeedModel
 

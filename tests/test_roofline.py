@@ -102,7 +102,7 @@ class TestHloProfile:
 class TestZero1Specs:
     def test_moments_gain_data_axis(self):
         from repro.launch import specs as sp
-        from repro.optim.optimizer import AdamW, OptConfig, OptState
+        from repro.optim.optimizer import OptState
         try:                                   # jax>=0.5 (sizes, names)
             mesh = AbstractMesh((16, 16), ("data", "model"))
         except TypeError:                      # jax 0.4.x shape tuple
