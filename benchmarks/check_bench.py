@@ -113,6 +113,8 @@ HISTORY_METRICS = {
     "wire_bytes_per_frame": "wire_codec.default_bytes_per_frame",
     "round_p99_us": "runtime_rounds.round_latency_p99_us",
     "trace_overhead": "trace_overhead.derived",
+    "search_reports_per_s": "search_asha.reports_per_s",
+    "search_rounds_to_winner": "search_asha.rounds_to_winner",
 }
 
 
@@ -156,7 +158,8 @@ def append_and_print_history(path: str, bench: Dict, ok: bool,
     print(f"  {'run':>6} {'commit':<12} {'pipe rep/s':>11} "
           f"{'sock rep/s':>11} {'json k0':>9} {'async x':>8} "
           f"{'chaos r/s':>10} {'rec p99ms':>10} "
-          f"{'codec':>7} {'B/frm':>5} {'p99 us':>8} {'trace x':>8}  gate")
+          f"{'codec':>7} {'B/frm':>5} {'p99 us':>8} {'trace x':>8} "
+          f"{'srch r/s':>9} {'win@':>5}  gate")
     for r in shown:
         def col(key, width, fmt="{:.1f}"):
             v = r.get(key)
@@ -177,7 +180,9 @@ def append_and_print_history(path: str, bench: Dict, ok: bool,
               f"{col('codec', 7)} "
               f"{col('wire_bytes_per_frame', 5, '{:.0f}')} "
               f"{col('round_p99_us', 8)} "
-              f"{col('trace_overhead', 8, '{:.3f}')}  "
+              f"{col('trace_overhead', 8, '{:.3f}')} "
+              f"{col('search_reports_per_s', 9)} "
+              f"{col('search_rounds_to_winner', 5, '{:.0f}')}  "
               f"{'ok' if r.get('ok') else 'FAIL'}")
 
 

@@ -47,7 +47,14 @@
                             every k and propagation lag is exactly k+1
                             rounds. Derived is the best async
                             reports/s over the synchronous (k=0)
-                            baseline — the headline async speedup.
+                            baseline — the headline async speedup;
+  search_asha             — an 8-trial seeded ASHA hyperparameter race
+                            (DESIGN.md §17) through the thread-worker
+                            runtime at staleness 2: trials raced/
+                            pruned, rounds to the winner, aggregate
+                            reports/s vs a single-trial run, re-grant
+                            lags (k+1 each), and the exact
+                            ``search_match`` sim-parity gate.
 
 All entries ride ``benchmarks/run.py`` and land in BENCH_runtime.json;
 ``benchmarks/check_bench.py`` gates CI on the recorded floors.
@@ -335,6 +342,53 @@ def trace_overhead() -> Tuple[List[Dict], float]:
     return rows, round(ratio, 3)
 
 
+def search_asha() -> Tuple[List[Dict], float]:
+    """Trial-level hyperparameter search throughput (DESIGN.md §17).
+
+    An 8-trial seeded ASHA race through the thread-worker runtime at
+    staleness 2: rows record the trials raced/pruned, the round the
+    winner was crowned, the race's aggregate reports/s next to a
+    single-trial run of the same shape (racing N trials costs one
+    coordinator, not N), and the re-grant propagation lags (each must
+    be k+1). ``search_match`` is the EXACT gate: the same seeded race
+    through ClusterSim's multi-trial mode must produce the identical
+    prune/promote/winner trace and retune stream — the search layer's
+    extension of the Fig. 6 parity discipline. Derived is the race's
+    aggregate reports/s."""
+    from repro.core.control import ControlPlane
+    from repro.runtime import EventLoop, MANAGERS
+    from repro.runtime.eventloop import specs_from_plan
+    from repro.search import SearchSpace, search_parity, trial_plan
+
+    p = search_parity(n_trials=8, steps=30, manager="local",
+                      staleness=2, seed=0)
+    race = p["runtime"]
+    # single-trial baseline: one group, same loop shape, no scheduler
+    base_plan = trial_plan(p["configs"][:1])
+    cp = ControlPlane(base_plan, policies=[])
+    mgr = MANAGERS["local"]()
+    loop = EventLoop(cp, mgr, round_timeout=1.0, staleness=2)
+    try:
+        mgr.start(specs_from_plan(base_plan))
+        single = loop.run(30)
+    finally:
+        loop.shutdown()
+    rows = [
+        {"metric": "trials", "value": len(p["configs"])},
+        {"metric": "pruned", "value": race.n_pruned},
+        {"metric": "winner", "value": race.winner},
+        {"metric": "rounds_to_winner", "value": race.rounds_to_winner},
+        {"metric": "reports_per_s",
+         "value": round(race.runtime.reports_per_s, 1)},
+        {"metric": "reports_per_s_single_trial",
+         "value": round(single.reports_per_s, 1)},
+        {"metric": "regrant_lags_rounds",
+         "value": list(race.runtime.retune_lags)},
+        {"metric": "search_match", "value": 1.0 if p["match"] else 0.0},
+    ]
+    return rows, round(race.runtime.reports_per_s, 1)
+
+
 ALL = {"runtime_rounds": runtime_rounds,
        "runtime_retune_lag": runtime_retune_lag,
        "runtime_fig6_parity": runtime_fig6_parity,
@@ -342,4 +396,5 @@ ALL = {"runtime_rounds": runtime_rounds,
        "wire_codec": wire_codec,
        "runtime_async_staleness": runtime_async_staleness,
        "runtime_chaos": runtime_chaos,
-       "trace_overhead": trace_overhead}
+       "trace_overhead": trace_overhead,
+       "search_asha": search_asha}

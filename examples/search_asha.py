@@ -1,0 +1,118 @@
+"""Trial-level hyperparameter search on the Stannis runtime.
+
+  phase 1 — the seeded race: 8 trial configs (log-uniform lr, batch,
+            arch variant) sampled from the SearchSpace race as worker
+            groups on the runtime EventLoop under an ASHA pruner
+            (keep top 1/eta per rung). A pruned trial's workers are
+            retired with an orderly Shutdown and its batch capacity is
+            immediately re-granted to the survivors — riding the same
+            Retune broadcast as any elastic plan change, landing in
+            exactly k+1 rounds.
+
+  phase 2 — the parity oracle: the SAME seeded race through ClusterSim's
+            multi-trial mode must produce the IDENTICAL prune/promote/
+            winner trace and retune event stream, at staleness 0 and 2.
+            The search layer inherits the repo's sim-vs-runtime
+            discipline wholesale (DESIGN.md §17).
+
+  phase 3 — fault vs prune: a dropout silences one trial mid-rung. The
+            scheduler marks it "lost" (liveness reason "failure"), NOT
+            pruned — it sits the rung out, resumes when the worker
+            rejoins, and is only ever pruned on merit. Sim and runtime
+            still agree on every event.
+
+  PYTHONPATH=src python examples/search_asha.py [--trials 8]
+      [--runtime local|process|socket] [--staleness K] [--seed S]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.simulator import Dropout
+from repro.search import (SearchSpace, run_search_runtime, run_search_sim,
+                          search_parity)
+
+
+def phase1_race(args) -> None:
+    print(f"— phase 1: {args.trials}-trial ASHA race through "
+          f"{args.runtime} workers (seed {args.seed}, "
+          f"staleness k={args.staleness}) —")
+    configs = SearchSpace().sample(args.trials, seed=args.seed)
+    for c in configs:
+        print(f"  {c.trial}: lr={c.lr:<10} batch={c.batch_size:<4} "
+              f"{c.arch}")
+    res = run_search_runtime(configs, steps=args.steps,
+                             manager=args.runtime,
+                             staleness=args.staleness, seed=args.seed)
+    for step, kind, trial, rung, score in res.events:
+        s = f" score={score:.2f}" if score is not None else ""
+        print(f"  round {step:>3}  {kind:<8} {trial} (rung {rung}){s}")
+    assert res.winner is not None, "no winner within the step budget"
+    assert res.n_pruned == args.trials - 1, \
+        f"expected {args.trials - 1} prunes, saw {res.n_pruned}"
+    regrants = [e for e in res.retunes if e[4] == "regrant"]
+    assert regrants, "pruned capacity was never re-granted"
+    lags = res.runtime.retune_lags
+    assert lags and all(lag == args.staleness + 1 for lag in lags), \
+        f"re-grants landed with lags {lags}, want all {args.staleness + 1}"
+    print(f"  winner {res.winner} at round {res.rounds_to_winner}; "
+          f"{len(regrants)} re-grants landed in k+1={args.staleness + 1} "
+          f"round(s)")
+
+
+def phase2_parity(args) -> None:
+    print("\n— phase 2: search-trace parity, sim vs "
+          f"{args.runtime}, k in (0, 2) —")
+    for k in (0, 2):
+        p = search_parity(n_trials=args.trials, steps=args.steps,
+                          manager=args.runtime, staleness=k,
+                          seed=args.seed)
+        assert p["match"], \
+            f"search trace diverged between sim and runtime at k={k}"
+        print(f"  k={k}: {len(p['sim'].events)} events, winner "
+              f"{p['sim'].winner} — sim == runtime")
+
+
+def phase3_fault_vs_prune(args) -> None:
+    print("\n— phase 3: fault vs prune disambiguation —")
+    configs = SearchSpace().sample(args.trials, seed=args.seed)
+    victim = configs[1].trial
+    # silence the trial for steps [2, 9): liveness masks it out as a
+    # FAILURE, the scheduler marks it lost (not pruned), and it re-enters
+    # the race when the worker group comes back
+    drops = [Dropout(victim, 2, 9)]
+    sim = run_search_sim(configs, steps=args.steps, seed=args.seed,
+                         dropouts=drops)
+    rt = run_search_runtime(configs, steps=args.steps, seed=args.seed,
+                            manager=args.runtime, dropouts=drops)
+    lost = [(s, t) for s, k, t, *_ in sim.events if k == "lost"]
+    resumed = [(s, t) for s, k, t, *_ in sim.events if k == "resumed"]
+    assert any(t == victim for _, t in lost), \
+        f"{victim}'s silence was not flagged as lost"
+    assert any(t == victim for _, t in resumed), \
+        f"{victim} did not resume after rejoin"
+    assert sim.events == rt.events and sim.winner == rt.winner, \
+        "fault handling diverged between sim and runtime"
+    print(f"  {victim} silent in [2, 9): lost at round {lost[0][0]}, "
+          f"resumed at round {resumed[0][0]}, final status "
+          f"{sim.statuses[victim]!r} — never pruned on silence; "
+          f"sim == runtime")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--runtime", choices=("local", "process", "socket"),
+                    default="local")
+    ap.add_argument("--staleness", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    phase1_race(args)
+    phase2_parity(args)
+    phase3_fault_vs_prune(args)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,272 @@
+"""doccheck — keep the docs tree true: links resolve, examples run.
+
+``python -m repro.analysis.doccheck README.md docs/*.md`` (stdlib
+only, like the rest of ``repro.analysis``) enforces two properties the
+docs job in CI gates on:
+
+  links    every relative markdown link points at a file that exists,
+           and every ``#anchor`` (same-file or cross-file) matches a
+           real heading, using GitHub's heading-slug rules — so a
+           DESIGN.md section can be renumbered without silently
+           stranding references;
+  blocks   with ``--run``, every fenced ``bash``/``python`` code block
+           is executed from the repo root (``PYTHONPATH=src`` exported)
+           under a per-block timeout — a quickstart that drifts from
+           the code fails CI instead of failing the reader. Blocks
+           whose info string carries ``no-run`` (e.g. multi-host
+           recipes, illustrative fragments) are extracted and
+           syntax-checked where possible but never executed.
+
+Exit codes: 0 clean, 1 findings, 2 usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import os
+import re
+import subprocess
+import sys
+from typing import Dict, List, Optional, Tuple
+
+_FENCE = re.compile(r"^(```+|~~~+)\s*([^\n`]*)$")
+# [text](target) — excluding images (![...]) and (<...>) autolinks
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+RUNNABLE = ("bash", "sh", "python", "py")
+
+
+@dataclasses.dataclass
+class CodeBlock:
+    path: str
+    line: int            # 1-based line of the opening fence
+    lang: str
+    flags: Tuple[str, ...]
+    text: str
+
+    @property
+    def runnable(self) -> bool:
+        return self.lang in RUNNABLE and "no-run" not in self.flags
+
+
+@dataclasses.dataclass
+class Problem:
+    path: str
+    line: int
+    kind: str            # dead-link | dead-anchor | block-failed | ...
+    detail: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.kind}] {self.detail}"
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor algorithm (close enough for ASCII-ish docs):
+    strip markdown emphasis/code ticks, lowercase, drop everything but
+    word chars / spaces / hyphens, spaces -> hyphens."""
+    h = re.sub(r"[*_`]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def heading_slugs(text: str) -> List[str]:
+    """All anchor slugs a markdown file exposes, with GitHub's
+    duplicate suffixing (second ``#foo`` becomes ``#foo-1``)."""
+    seen: Dict[str, int] = {}
+    out: List[str] = []
+    in_fence = False
+    for line in text.splitlines():
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.append(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def extract_blocks(path: str, text: str) -> List[CodeBlock]:
+    """Fenced code blocks with their info strings, fence-balance
+    aware (a fence inside a longer fence does not close it)."""
+    blocks: List[CodeBlock] = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if not m:
+            i += 1
+            continue
+        fence, info = m.group(1), m.group(2).split()
+        lang = info[0].lower() if info else ""
+        flags = tuple(f.lower() for f in info[1:])
+        body: List[str] = []
+        j = i + 1
+        while j < len(lines):
+            mm = _FENCE.match(lines[j])
+            if mm and mm.group(1)[0] == fence[0] \
+                    and len(mm.group(1)) >= len(fence) and not mm.group(2):
+                break
+            body.append(lines[j])
+            j += 1
+        blocks.append(CodeBlock(path, i + 1, lang, flags, "\n".join(body)))
+        i = j + 1
+    return blocks
+
+
+def extract_links(text: str) -> List[Tuple[int, str]]:
+    """(line, target) for every inline markdown link, skipping fenced
+    code (a shell snippet mentioning [x](y) is not a link)."""
+    out: List[Tuple[int, str]] = []
+    in_fence = False
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            out.append((lineno, m.group(1)))
+    return out
+
+
+def check_links(path: str, text: str, root: str,
+                slug_cache: Dict[str, List[str]]) -> List[Problem]:
+    problems: List[Problem] = []
+    base = os.path.dirname(os.path.abspath(path))
+    for lineno, target in extract_links(text):
+        if target.startswith(_EXTERNAL) or target.startswith("#!"):
+            continue
+        file_part, _, anchor = target.partition("#")
+        if not file_part:                       # same-file #anchor
+            dest = os.path.abspath(path)
+        else:
+            dest = os.path.normpath(os.path.join(base, file_part))
+            if not os.path.exists(dest):
+                problems.append(Problem(path, lineno, "dead-link",
+                                        f"{target!r} -> no such file "
+                                        f"{os.path.relpath(dest, root)!r}"))
+                continue
+        if anchor and dest.endswith(".md") and os.path.isfile(dest):
+            if dest not in slug_cache:
+                with open(dest, encoding="utf-8") as fh:
+                    slug_cache[dest] = heading_slugs(fh.read())
+            if anchor.lower() not in slug_cache[dest]:
+                problems.append(Problem(
+                    path, lineno, "dead-anchor",
+                    f"{target!r} -> no heading slug {anchor!r} in "
+                    f"{os.path.relpath(dest, root)!r}"))
+    return problems
+
+
+def syntax_check(block: CodeBlock) -> Optional[Problem]:
+    """Cheap static validation for blocks we never execute."""
+    if block.lang in ("python", "py"):
+        try:
+            ast.parse(block.text)
+        except SyntaxError as exc:
+            return Problem(block.path, block.line, "bad-python",
+                           f"code block does not parse: {exc}")
+    return None
+
+
+def run_block(block: CodeBlock, root: str, timeout: float) -> \
+        Optional[Problem]:
+    """Execute one runnable block from the repo root with PYTHONPATH=src
+    exported, exactly the environment the docs tell the reader to use."""
+    env = dict(os.environ)
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    if block.lang in ("python", "py"):
+        cmd = [sys.executable, "-c", block.text]
+    else:
+        cmd = ["bash", "-e", "-c", block.text]
+    try:
+        proc = subprocess.run(cmd, cwd=root, env=env, timeout=timeout,
+                              capture_output=True, text=True)
+    except subprocess.TimeoutExpired:
+        return Problem(block.path, block.line, "block-timeout",
+                       f"{block.lang} block exceeded {timeout:.0f}s")
+    except OSError as exc:
+        return Problem(block.path, block.line, "block-failed",
+                       f"could not launch {cmd[0]}: {exc}")
+    if proc.returncode != 0:
+        tail = (proc.stderr or proc.stdout or "").strip().splitlines()
+        return Problem(block.path, block.line, "block-failed",
+                       f"{block.lang} block exited {proc.returncode}: "
+                       + ("; ".join(tail[-3:]) if tail else "no output"))
+    return None
+
+
+def check_paths(paths: List[str], root: str, run: bool = False,
+                timeout: float = 120.0,
+                verbose: bool = False) -> List[Problem]:
+    problems: List[Problem] = []
+    slug_cache: Dict[str, List[str]] = {}
+    for path in paths:
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        problems.extend(check_links(path, text, root, slug_cache))
+        for block in extract_blocks(path, text):
+            if not block.runnable or not run:
+                p = syntax_check(block)
+                if p:
+                    problems.append(p)
+                continue
+            if verbose:
+                print(f"  run {block.path}:{block.line} "
+                      f"({block.lang}, {len(block.text.splitlines())} "
+                      f"lines)", file=sys.stderr)
+            p = run_block(block, root, timeout)
+            if p:
+                problems.append(p)
+    return problems
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="check markdown docs: relative links + anchors "
+                    "resolve; with --run, fenced bash/python blocks "
+                    "execute cleanly from the repo root")
+    ap.add_argument("paths", nargs="+", help="markdown files to check")
+    ap.add_argument("--run", action="store_true",
+                    help="execute runnable fenced blocks (those without "
+                         "a no-run marker) under --timeout each")
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="per-block execution timeout in seconds")
+    ap.add_argument("--root", default=None,
+                    help="repo root blocks run from (default: nearest "
+                         "pyproject.toml above the first path)")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    missing = [p for p in args.paths if not os.path.isfile(p)]
+    if missing:
+        print(f"doccheck: no such file(s): {missing}", file=sys.stderr)
+        return 2
+    if args.root is None:
+        from repro.analysis.lint import find_root
+        args.root = find_root(os.path.dirname(os.path.abspath(
+            args.paths[0])) or ".")
+    problems = check_paths(args.paths, args.root, run=args.run,
+                           timeout=args.timeout, verbose=args.verbose)
+    for p in problems:
+        print(p)
+    n_blocks = sum(len([b for b in extract_blocks(p, open(p).read())
+                        if b.runnable]) for p in args.paths)
+    mode = "links+blocks" if args.run else "links"
+    print(f"doccheck: {len(args.paths)} file(s), {n_blocks} runnable "
+          f"block(s), {len(problems)} problem(s) [{mode}]")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

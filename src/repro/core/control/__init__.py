@@ -12,13 +12,15 @@ from repro.core.control.policies import (DEFAULT_POWER_W, CpuUtilPolicy,
                                          Eq2Trigger, Eq3TablePolicy,
                                          HyperTuneConfig, SpeedDeclinePolicy,
                                          TuningPolicy, attributable_power)
-from repro.core.control.telemetry import (StepBuckets, StepReport,
-                                          TelemetryBus, normalize_reports)
+from repro.core.control.telemetry import (SeriesView, StepBuckets,
+                                          StepReport, TelemetryBus,
+                                          normalize_reports)
 
 __all__ = [
     "ControlPlane", "RetuneEvent", "policy_from_config",
     "DEFAULT_POWER_W", "CpuUtilPolicy", "Decision", "EnergyAwarePolicy",
     "Eq2Trigger", "Eq3TablePolicy", "HyperTuneConfig", "SpeedDeclinePolicy",
     "TuningPolicy", "attributable_power",
-    "StepBuckets", "StepReport", "TelemetryBus", "normalize_reports",
+    "SeriesView", "StepBuckets", "StepReport", "TelemetryBus",
+    "normalize_reports",
 ]

@@ -78,8 +78,12 @@ class ControlPlane:
                  liveness_timeout: Optional[int] = None):
         self.cfg = cfg or HyperTuneConfig()
         self.plan = plan
+        # policies=None -> the config default; an explicit EMPTY list
+        # means "no tuning policies" (e.g. a search run where every plan
+        # change is externally decided via apply_decision)
         self.policies: List[TuningPolicy] = (
-            list(policies) if policies else [policy_from_config(self.cfg)])
+            list(policies) if policies is not None
+            else [policy_from_config(self.cfg)])
         self.bus = bus or TelemetryBus()
         self.liveness_timeout = liveness_timeout
         self.events: List[RetuneEvent] = []
@@ -192,6 +196,20 @@ class ControlPlane:
         rows; Eq. 1 re-splits the dataset so no samples are starved."""
         g = next(g for g in self.plan.groups if g.name == group)
         return self._apply(step, g.name, 0, "failure", rationale=rationale)
+
+    def apply_decision(self, step: int, group: str, new_batch: int,
+                       reason: str,
+                       rationale: Optional[Dict] = None) -> RetuneEvent:
+        """An externally-decided plan change through the same application
+        path as policy decisions (Eq. 1 re-split, row-mask flip, event
+        recorded, policies notified). The search layer's TrialScheduler
+        uses this with reason "pruned" (b_g -> 0, the trial is finished)
+        and "regrant" (a survivor absorbs freed capacity) — distinct
+        from liveness's "failure"/"recover" so a fault and a prune can
+        never be confused in the event stream (DESIGN.md §17)."""
+        g = next(g for g in self.plan.groups if g.name == group)
+        return self._apply(step, g.name, new_batch, reason,
+                           rationale=rationale)
 
     def mark_rejoined(self, step: int, group: str,
                       rationale: Optional[Dict] = None) -> RetuneEvent:

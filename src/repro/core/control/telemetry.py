@@ -140,6 +140,54 @@ class TelemetryBus:
         self._subscribers.append(fn)
 
 
+class SeriesView:
+    """Per-group (step, value) series accumulated from a bus
+    subscription — the per-trial telemetry view behind the search
+    layer's pruner (DESIGN.md §17).
+
+    The bus's own buffer is drained once per step by the control plane;
+    a pruner scoring a *rung* (a window of many steps) needs history,
+    so this view tails the publish stream and keeps a bounded series
+    per group. Purely observational: it never touches control flow,
+    and its queries are pure functions of what was published — which is
+    what lets the search trace stay identical between the simulator
+    and the live runtime.
+    """
+
+    def __init__(self, bus: Optional[TelemetryBus] = None,
+                 maxlen: int = 4096) -> None:
+        self._series: Dict[str, List] = {}
+        self.maxlen = int(maxlen)
+        if bus is not None:
+            bus.subscribe(self.on_report)
+
+    def on_report(self, report: StepReport) -> None:
+        series = self._series.setdefault(report.group, [])
+        series.append((report.step, report.speed))
+        if len(series) > self.maxlen:
+            del series[:len(series) - self.maxlen]
+
+    def series(self, group: str) -> List:
+        return list(self._series.get(group, ()))
+
+    def count(self, group: str) -> int:
+        return len(self._series.get(group, ()))
+
+    def last_step(self, group: str) -> Optional[int]:
+        series = self._series.get(group)
+        return series[-1][0] if series else None
+
+    def window_mean(self, group: str, lo: int, hi: int) -> Optional[float]:
+        """Mean value over steps in ``[lo, hi)``, or None when the group
+        published nothing in the window (a pruner must treat that as
+        "no evidence", never as a zero score)."""
+        vals = [v for s, v in self._series.get(group, ())
+                if lo <= s < hi]
+        if not vals:
+            return None
+        return sum(vals) / len(vals)
+
+
 class StepBuckets:
     """Out-of-order report assembly for bounded-staleness pacing.
 

@@ -150,7 +150,9 @@ class ClusterSim:
                  control_plane: Optional[ControlPlane] = None,
                  dropouts: Optional[List[Dropout]] = None,
                  speed_noise: float = 0.0, seed: int = 0,
-                 staleness: int = 0):
+                 staleness: int = 0,
+                 round_hook=None,
+                 retired: Optional[set] = None):
         if staleness < 0:
             raise ValueError(f"staleness must be >= 0, got {staleness}")
         self.plan = plan
@@ -160,6 +162,19 @@ class ClusterSim:
         self.control_plane = control_plane or _as_control_plane(controller)
         self.rng = np.random.default_rng(seed)
         self.speed_noise = speed_noise
+        # multi-trial mode (DESIGN.md §17): ``round_hook(step)`` runs
+        # after the control round, mirroring the EventLoop's hook — an
+        # external scheduler (the search layer) applies plan changes
+        # through the control plane and they propagate with the same
+        # staleness lag as policy retunes. ``retired`` is a live set of
+        # group names the hook has permanently retired (pruned trials):
+        # they stop working AND publishing from the next step, exactly
+        # like the runtime shutting the trial's worker down.
+        self.round_hook = round_hook
+        self.retired = retired if retired is not None else set()
+        if round_hook is not None and self.control_plane is None:
+            raise ValueError("round_hook needs a control plane to apply "
+                             "its decisions through")
         # bounded-staleness mirror of the async runtime (DESIGN.md §11):
         # a plan change decided at step s is queued behind the k grants
         # already in a worker's channel, so it takes effect on the
@@ -215,6 +230,7 @@ class ClusterSim:
             # attributable power — until liveness masks it out its data
             # rows simply go unprocessed
             live = [g for g in plan.groups if g.batch_size > 0
+                    and g.name not in self.retired
                     and not self._dropped(g.name, step)]
             if not live:
                 break
@@ -231,6 +247,8 @@ class ClusterSim:
             speeds.append(batch / step_time)
             if cp is not None:
                 for g in plan.groups:
+                    if g.name in self.retired:
+                        continue                 # pruned trial: worker gone
                     if self._dropped(g.name, step):
                         continue                 # silent: liveness path
                     if g.batch_size == 0:
@@ -245,7 +263,13 @@ class ClusterSim:
                             step, g.name, g_speed[g.name],
                             cpu_util=self._capacity(g.name, step)))
                 event = cp.poll(step)
-                if self.staleness and event is not None:
+                hook_changed = False
+                if self.round_hook is not None:
+                    # search-layer decisions ride the same propagation
+                    # model as policy retunes: snapshot the plan AFTER
+                    # all of the hook's changes, effective at s + 1 + k
+                    hook_changed = bool(self.round_hook(step))
+                if self.staleness and (event is not None or hook_changed):
                     pending_plans.append(
                         (step + 1 + self.staleness, cp.plan))
         events = cp.events if cp else []

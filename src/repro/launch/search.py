@@ -1,0 +1,115 @@
+"""Trial-level hyperparameter search CLI (DESIGN.md §17).
+
+Races N seeded trial configurations — lr / batch / arch variant — as
+worker groups under an ASHA or median-stopping pruner, over any
+execution substrate:
+
+  PYTHONPATH=src python -m repro.launch.search --trials 8 --steps 30
+  PYTHONPATH=src python -m repro.launch.search --trials 8 --runtime local
+  PYTHONPATH=src python -m repro.launch.search --trials 8 --parity \
+      --runtime local --staleness 2
+
+``--runtime sim`` (the default) runs the race through ClusterSim's
+multi-trial mode; local/process/socket run it through live workers on
+the EventLoop. ``--parity`` runs BOTH and asserts the search traces
+match — the search layer's extension of the repo's sim/runtime oracle.
+The whole run is a pure function of ``--seed``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional
+
+from repro.search import (SearchSpace, run_search_runtime, run_search_sim,
+                          search_parity)
+from repro.search.driver import SearchResult
+
+
+def _print_result(res: SearchResult, configs) -> None:
+    by_name = {c.trial: c for c in configs}
+    print(f"{'trial':<6} {'lr':>10} {'batch':>6} {'arch':<15} "
+          f"{'rung':>4} status")
+    for trial, status in res.statuses.items():
+        c = by_name[trial]
+        marker = " <- winner" if trial == res.winner else ""
+        print(f"{trial:<6} {c.lr:>10.6f} {c.batch_size:>6} {c.arch:<15} "
+              f"{res.rungs[trial]:>4} {status}{marker}")
+    print("\nsearch trace:")
+    for e in res.events:
+        step, kind, trial, rung, score = e
+        s = f" score={score:.3f}" if score is not None else ""
+        print(f"  round {step:>3}  {kind:<8} {trial} (rung {rung}){s}")
+    print("\nplan changes (prunes + capacity re-grants):")
+    for step, group, old, new, reason in res.retunes:
+        print(f"  round {step:>3}  {group}: {old} -> {new} ({reason})")
+    if res.winner is not None:
+        print(f"\nwinner: {res.winner} "
+              f"(crowned at round {res.rounds_to_winner})")
+    else:
+        print("\nno single winner within the step budget")
+    if res.runtime is not None:
+        rt = res.runtime
+        print(f"runtime: {rt.reports_total} reports, "
+              f"{rt.reports_per_s:.0f} reports/s, "
+              f"retune lags {rt.retune_lags} (regrants land in k+1)")
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="race N seeded trial configs with an ASHA/"
+                    "median-stopping pruner over sim or live runtime")
+    ap.add_argument("--trials", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="the search is a pure function of this seed")
+    ap.add_argument("--steps", type=int, default=30,
+                    help="coordinator rounds to race for")
+    ap.add_argument("--runtime",
+                    choices=("sim", "local", "process", "socket"),
+                    default="sim")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="bounded-staleness bound k (runtime + sim mirror)")
+    ap.add_argument("--pruner", choices=("asha", "median"), default="asha")
+    ap.add_argument("--eta", type=int, default=2,
+                    help="ASHA reduction factor: keep top 1/eta per rung")
+    ap.add_argument("--rung-rounds", type=int, default=6,
+                    help="rounds in rung 0")
+    ap.add_argument("--rung-growth", type=int, default=1,
+                    help="rung j spans rung_rounds * growth**j rounds")
+    ap.add_argument("--round-timeout", type=float, default=1.0)
+    ap.add_argument("--parity", action="store_true",
+                    help="run sim AND the selected live runtime; exit "
+                         "non-zero unless the search traces match")
+    args = ap.parse_args(argv)
+    if args.trials < 2:
+        ap.error("--trials must be >= 2 (a race needs a field)")
+    if args.staleness < 0:
+        ap.error("--staleness must be >= 0")
+    if args.parity and args.runtime == "sim":
+        ap.error("--parity compares sim against a LIVE runtime; pick "
+                 "--runtime local, process or socket")
+
+    configs = SearchSpace().sample(args.trials, seed=args.seed)
+    kw = dict(steps=args.steps, staleness=args.staleness,
+              pruner=args.pruner, eta=args.eta,
+              rung_rounds=args.rung_rounds, rung_growth=args.rung_growth,
+              seed=args.seed)
+    if args.parity:
+        p = search_parity(n_trials=args.trials, manager=args.runtime,
+                          round_timeout=args.round_timeout, **kw)
+        _print_result(p["runtime"], configs)
+        print(f"\nsearch-trace parity (sim vs {args.runtime}, "
+              f"k={args.staleness}): "
+              f"{'MATCH' if p['match'] else 'MISMATCH'}")
+        return 0 if p["match"] else 1
+    if args.runtime == "sim":
+        res = run_search_sim(configs, **kw)
+    else:
+        res = run_search_runtime(configs, manager=args.runtime,
+                                 round_timeout=args.round_timeout, **kw)
+    _print_result(res, configs)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -609,6 +609,16 @@ def main() -> None:
                          "so a killed coordinator can --resume-run DIR")
     ap.add_argument("--journal-every", type=int, default=1, metavar="N",
                     help="journal every N coordinator rounds (default 1)")
+    ap.add_argument("--search", type=int, default=0, metavar="N",
+                    help="race N sampled trial configs (lr/batch/arch) "
+                         "under an ASHA pruner instead of training one "
+                         "model: one worker group per trial on the "
+                         "selected runtime, pruned trials' capacity "
+                         "re-granted to survivors (full control: python "
+                         "-m repro.launch.search)")
+    ap.add_argument("--search-seed", type=int, default=0, metavar="S",
+                    help="with --search: the search is a pure function "
+                         "of this seed")
     ap.add_argument("--resume-run", default=None, metavar="DIR",
                     help="restart a killed coordinator from DIR's newest "
                          "intact journal entry: restore the tuned plan + "
@@ -644,6 +654,31 @@ def main() -> None:
             and args.resume_run != args.journal_dir:
         ap.error("--resume-run and --journal-dir must agree (resume "
                  "keeps journaling to the same run directory)")
+    if args.search:
+        if args.search < 2:
+            ap.error("--search needs >= 2 trials to race")
+        if args.runtime == "inproc":
+            ap.error("--search races one worker group per trial on the "
+                     "runtime coordinator; use --runtime local, process "
+                     "or socket")
+        if (args.interfere or args.ckpt_dir or args.resume or args.chaos
+                or args.journal_dir or args.resume_run
+                or args.external_workers):
+            ap.error("--search is a self-contained race; it does not "
+                     "combine with --interfere/--ckpt-dir/--resume/"
+                     "--chaos/--journal-dir/--resume-run/"
+                     "--external-workers")
+        # branch before the probe bootstrap: a search run needs no
+        # jitted warm-up, only the calibrated trial speed curves
+        from repro.launch.search import main as search_main
+        argv = ["--trials", str(args.search),
+                "--seed", str(args.search_seed),
+                "--steps", str(args.steps),
+                "--runtime", args.runtime,
+                "--staleness", str(args.staleness)]
+        if args.round_timeout is not None:
+            argv += ["--round-timeout", str(args.round_timeout)]
+        raise SystemExit(search_main(argv))
 
     arch = get_arch(args.arch)
     if not args.full_size:

@@ -63,7 +63,7 @@ from repro.runtime.ipc.shm import (BulkUnavailable, ShmBulkReader,
 from repro.runtime.managers.base import ExecutionManager
 from repro.runtime.messages import (CheckpointAck, CheckpointRequest, Goodbye,
                                     Hello, Message, ReportBatch, Retune,
-                                    StepGrant, StepReportMsg)
+                                    Shutdown, StepGrant, StepReportMsg)
 from repro.runtime.worker import InterferenceSpec, WorkerSpec
 
 
@@ -214,13 +214,22 @@ class EventLoop:
                  ack_timeout: Optional[float] = None,
                  tracer=None,
                  metrics=None,
-                 metrics_every: int = 0) -> None:
+                 metrics_every: int = 0,
+                 round_hook=None) -> None:
         if staleness < 0:
             raise ValueError(f"staleness must be >= 0, got {staleness}")
         self.control_plane = control_plane
         self.manager = manager
         self.round_timeout = round_timeout
         self.staleness = int(staleness)
+        # search-layer hook (DESIGN.md §17): called once per round after
+        # the control round with the step number; returns the
+        # RetuneEvents it applied through the control plane. An event
+        # with reason "pruned" retires the group (orderly Shutdown, no
+        # new message kinds); anything else broadcasts as a normal
+        # Retune and is lag-tracked like a policy decision.
+        self.round_hook = round_hook
+        self._retired: set = set()
         # observability plane (DESIGN.md §14). NULL_TRACER is falsy, so
         # every `if self.tracer:` below is a dead branch when disabled —
         # the untraced hot path allocates and times NOTHING extra, which
@@ -313,6 +322,17 @@ class EventLoop:
                 self._broadcast_retune(step, event)
                 if on_retune:
                     on_retune(event)
+            if self.round_hook is not None:
+                for hev in self.round_hook(step) or ():
+                    if hev.reason == "pruned":
+                        # the trial is finished, not failing: retire its
+                        # worker instead of broadcasting a plan it will
+                        # never act on
+                        self.retire(step, hev.group)
+                    else:
+                        self._broadcast_retune(step, hev)
+                    if on_retune:
+                        on_retune(hev)
             if checkpoint_every and (step + 1) % checkpoint_every == 0:
                 self._broadcast(CheckpointRequest(step))
                 live = self.manager.live()
@@ -423,6 +443,43 @@ class EventLoop:
             else:
                 raise ValueError(f"unknown fault action: {f.action}")
 
+    # -- group retirement (search layer, DESIGN.md §17) -----------------
+    def retire(self, step: int, group: str) -> int:
+        """Permanently retire one worker group mid-run (a pruned trial).
+
+        Rides existing message kinds only: the worker gets an orderly
+        ``Shutdown`` and its channel is closed. Retirement is step-exact
+        under run-ahead, mirroring the simulator's ``retired`` set: the
+        group's reports for steps > ``step`` — already bucketed by a
+        run-ahead worker — are discarded via ``StepBuckets.
+        discard_group``, its pending grant expectations are dropped (so
+        collection never waits on a worker that is gone), and a
+        self-healing reconnect of a retired group is refused. Returns
+        the number of buffered reports discarded."""
+        self._retired.add(group)
+        purged = self._buckets.discard_group(group, step + 1)
+        for s in list(self._expected):
+            if s > step:
+                self._expected[s].pop(group, None)
+        self._granted_hi.pop(group, None)
+        handle = self.manager.workers.get(group)
+        if handle is not None and handle.alive:
+            try:
+                handle.channel.put(Shutdown())
+            except ChannelClosed:
+                pass
+            self.manager.mark_dead(group)
+        if self.tracer:
+            self.tracer.instant("control", "retire",
+                                {"group": group, "step": step,
+                                 "purged": purged})
+        if self.metrics is not None:
+            self.metrics.counter("coord.search.retired").inc()
+            if purged:
+                self.metrics.counter(
+                    "coord.search.purged_reports").inc(purged)
+        return purged
+
     def _admit_rejoins(self) -> None:
         """Pump the manager's mid-run rejoin path (self-healing socket
         workers, DESIGN.md §15). A no-op — one virtual call returning
@@ -430,6 +487,11 @@ class EventLoop:
         rejoined = self.manager.admit_rejoins(
             self.control_plane.plan.batch_sizes())
         for g in rejoined:
+            if g in self._retired:
+                # a retired (pruned) trial's standalone worker trying to
+                # self-heal its way back in: refuse — the trial is over
+                self.manager.mark_dead(g)
+                continue
             # the new life's grant stream starts at the current round;
             # grants delivered to its predecessor died with the old TCP
             # session (their unacked replay died with the old wrapper)
@@ -619,6 +681,8 @@ class EventLoop:
         ``msg=None`` is a corrupt frame ``_get`` already accounted."""
         if msg is None:
             return
+        if name in self._retired and not isinstance(msg, Goodbye):
+            return                       # in-flight frames of a pruned trial
         if isinstance(msg, StepReportMsg):
             if floor is None:
                 return

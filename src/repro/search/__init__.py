@@ -1,0 +1,34 @@
+"""Trial-level hyperparameter search on the Stannis runtime (DESIGN.md §17).
+
+The paper's thesis is *intra-run* retuning of batch size; the namesake
+related repos (joelrorseth/HyperTune, optuna-distributed) are *inter-run*
+trial search. This package composes the two: the coordinator races N
+trial configurations — lr / batch / arch variant drawn from a seeded
+:class:`SearchSpace` — each trial mapped to one worker group on the
+existing EventLoop, with an ASHA / median-stopping :class:`Pruner`
+scoring the existing TelemetryBus StepReport stream and pruned trials'
+capacity immediately re-granted to survivors through the elastic path.
+
+No new wire message kinds: trials ride StepGrant / Retune / Shutdown
+as-is, and the whole search — sampling, rung boundaries, tie-breaks,
+prune/promote order — is a pure function of the seed, so the identical
+trace replays through :class:`~repro.core.simulator.ClusterSim` AND the
+live local/socket runtime at any staleness bound k (``search_parity``).
+"""
+from repro.search.driver import (SearchResult, build_scheduler,
+                                 run_search_runtime, run_search_sim,
+                                 search_parity)
+from repro.search.pruner import AshaPruner, MedianStoppingPruner, Pruner
+from repro.search.scheduler import SearchEvent, Trial, TrialScheduler
+from repro.search.space import (ARCH_SPEED_SCALE, SearchSpace, TrialConfig,
+                                convergence_factor, speed_model_for,
+                                trial_plan)
+
+__all__ = [
+    "SearchResult", "build_scheduler", "run_search_runtime",
+    "run_search_sim", "search_parity",
+    "AshaPruner", "MedianStoppingPruner", "Pruner",
+    "SearchEvent", "Trial", "TrialScheduler",
+    "ARCH_SPEED_SCALE", "SearchSpace", "TrialConfig",
+    "convergence_factor", "speed_model_for", "trial_plan",
+]

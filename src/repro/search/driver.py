@@ -1,0 +1,157 @@
+"""Search drivers: the same seeded race through sim and live runtime.
+
+Mirrors ``runtime/parity.py``: both paths build the SAME trial plan and
+control plane (no tuning policies — every plan change in a search run
+is a scheduler decision), attach the SAME TrialScheduler construction,
+and differ only in the execution substrate. ``search_parity`` runs both
+and compares the full search trace (prune / promote / winner events
+with scores) plus the control plane's retune event tuples — the search
+layer's extension of the repo's sim/runtime oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.control import ControlPlane
+from repro.core.simulator import ClusterSim
+from repro.runtime.eventloop import EventLoop, FaultAction, RuntimeResult, \
+    specs_from_plan
+from repro.runtime.managers import MANAGERS
+from repro.search.pruner import PRUNERS, Pruner
+from repro.search.scheduler import TrialScheduler
+from repro.search.space import SearchSpace, TrialConfig, trial_plan
+
+EventTuple = Tuple[int, str, int, int, str]
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """One search run's outcome, comparable across substrates."""
+
+    steps: int
+    winner: Optional[str]
+    events: List                     # SearchEvent tuples (the search trace)
+    retunes: List[EventTuple]        # control plane event tuples
+    statuses: Dict[str, str]         # trial -> running|pruned|lost
+    rungs: Dict[str, int]            # trial -> highest rung reached
+    rounds_to_winner: Optional[int]  # step the winner was crowned, or None
+    runtime: Optional[RuntimeResult] = None
+
+    @property
+    def n_pruned(self) -> int:
+        return sum(1 for s in self.statuses.values() if s == "pruned")
+
+
+def build_scheduler(configs: Sequence[TrialConfig],
+                    pruner: str = "asha", eta: int = 2,
+                    rung_rounds: int = 6, rung_growth: int = 1,
+                    seed: int = 0, regrant: bool = True) -> TrialScheduler:
+    """One scheduler, identically constructed for either substrate."""
+    if isinstance(pruner, Pruner):
+        p = pruner
+    elif pruner == "asha":
+        p = PRUNERS["asha"](eta=eta)
+    elif pruner in PRUNERS:
+        p = PRUNERS[pruner]()
+    else:
+        raise ValueError(f"unknown pruner {pruner!r}; known: "
+                         f"{sorted(PRUNERS)}")
+    return TrialScheduler(configs, p, rung_rounds=rung_rounds,
+                          rung_growth=rung_growth, seed=seed,
+                          regrant=regrant)
+
+
+def _result(steps: int, sched: TrialScheduler,
+            cp: ControlPlane) -> SearchResult:
+    crowned = next((e.step for e in sched.events if e.kind == "winner"),
+                   None)
+    return SearchResult(
+        steps=steps, winner=sched.winner,
+        events=sched.event_tuples(),
+        retunes=[(e.step, e.group, e.old_batch, e.new_batch, e.reason)
+                 for e in cp.events],
+        statuses=sched.statuses(),
+        rungs={t: sched.trials[t].rung for t in sched.order},
+        rounds_to_winner=crowned)
+
+
+def run_search_sim(configs: Sequence[TrialConfig], steps: int = 30,
+                   staleness: int = 0,
+                   pruner: str = "asha", eta: int = 2,
+                   rung_rounds: int = 6, rung_growth: int = 1,
+                   seed: int = 0, regrant: bool = True,
+                   liveness_timeout: Optional[int] = 3,
+                   dropouts: Sequence = ()) -> SearchResult:
+    """The race through the discrete-step simulator (multi-trial mode)."""
+    plan = trial_plan(configs)
+    cp = ControlPlane(plan, policies=[], liveness_timeout=liveness_timeout)
+    sched = build_scheduler(configs, pruner=pruner, eta=eta,
+                            rung_rounds=rung_rounds, rung_growth=rung_growth,
+                            seed=seed, regrant=regrant).attach(cp)
+    ClusterSim(plan, [], control_plane=cp, dropouts=list(dropouts),
+               staleness=staleness, round_hook=sched.poll,
+               retired=sched.retired).run(steps)
+    return _result(steps, sched, cp)
+
+
+def run_search_runtime(configs: Sequence[TrialConfig], steps: int = 30,
+                       manager: str = "local", staleness: int = 0,
+                       pruner: str = "asha", eta: int = 2,
+                       rung_rounds: int = 6, rung_growth: int = 1,
+                       seed: int = 0, regrant: bool = True,
+                       liveness_timeout: Optional[int] = 3,
+                       dropouts: Sequence = (),
+                       faults: Sequence[FaultAction] = (),
+                       round_timeout: float = 1.0,
+                       manager_kwargs: Optional[dict] = None,
+                       metrics=None, tracer=None) -> SearchResult:
+    """The race through live workers: one worker group per trial on the
+    EventLoop, prunes retiring workers via orderly Shutdown and
+    re-grants riding Retune broadcasts (within k+1 rounds, like any
+    plan change)."""
+    plan = trial_plan(configs)
+    cp = ControlPlane(plan, policies=[], liveness_timeout=liveness_timeout)
+    sched = build_scheduler(configs, pruner=pruner, eta=eta,
+                            rung_rounds=rung_rounds, rung_growth=rung_growth,
+                            seed=seed, regrant=regrant).attach(cp)
+    specs = specs_from_plan(plan, (), list(dropouts),
+                            obs=tracer is not None)
+    mgr = MANAGERS[manager](**dict(manager_kwargs or {}))
+    loop = EventLoop(cp, mgr, round_timeout=round_timeout,
+                     staleness=staleness, round_hook=sched.poll,
+                     metrics=metrics, tracer=tracer)
+    try:
+        mgr.start(specs)
+        rt = loop.run(steps, faults=faults)
+    finally:
+        loop.shutdown()
+    out = _result(steps, sched, cp)
+    out.runtime = rt
+    return out
+
+
+def search_parity(n_trials: int = 8, steps: int = 30,
+                  manager: str = "local", staleness: int = 0,
+                  seed: int = 0, pruner: str = "asha", eta: int = 2,
+                  rung_rounds: int = 6, rung_growth: int = 1,
+                  space: Optional[SearchSpace] = None,
+                  round_timeout: float = 1.0,
+                  manager_kwargs: Optional[dict] = None,
+                  metrics=None) -> dict:
+    """The seeded race through BOTH substrates; ``match`` requires the
+    full search trace AND the retune event stream to be identical."""
+    configs = (space or SearchSpace()).sample(n_trials, seed)
+    sim = run_search_sim(configs, steps=steps, staleness=staleness,
+                         pruner=pruner, eta=eta, rung_rounds=rung_rounds,
+                         rung_growth=rung_growth, seed=seed)
+    rt = run_search_runtime(configs, steps=steps, manager=manager,
+                            staleness=staleness, pruner=pruner, eta=eta,
+                            rung_rounds=rung_rounds, rung_growth=rung_growth,
+                            seed=seed, round_timeout=round_timeout,
+                            manager_kwargs=manager_kwargs, metrics=metrics)
+    return {"configs": configs,
+            "sim": sim, "runtime": rt,
+            "match": (sim.events == rt.events
+                      and sim.retunes == rt.retunes
+                      and sim.winner == rt.winner)}

@@ -1,0 +1,65 @@
+"""Pruners: who survives a rung.
+
+A pruner sees one rung's ranked scoreboard — ``[(trial, score), ...]``
+best-first, ties already broken by the scheduler's seeded tie-break —
+and returns the trials to KEEP. It never touches the plan or the bus;
+the :class:`~repro.search.scheduler.TrialScheduler` owns application
+(prune -> b_g=0 + worker retirement, survivors -> capacity re-grant).
+
+Both pruners are pure functions of their input, so the search trace
+stays a pure function of the seed.
+"""
+from __future__ import annotations
+
+import math
+import statistics
+from typing import List, Tuple
+
+Ranked = List[Tuple[str, float]]
+
+
+class Pruner:
+    """Base: keep everyone (a pruner-less race still crowns a winner
+    by final score)."""
+
+    name = "none"
+
+    def keep(self, rung: int, ranked: Ranked) -> List[str]:
+        return [t for t, _ in ranked]
+
+
+class AshaPruner(Pruner):
+    """Asynchronous successive halving: keep the top ``1/eta`` of each
+    rung (at least one). With eta=2 an 8-trial race runs 8 -> 4 -> 2 -> 1
+    over three rungs, each pruned trial's capacity flowing to the
+    survivors at the rung boundary."""
+
+    name = "asha"
+
+    def __init__(self, eta: int = 2) -> None:
+        if eta < 2:
+            raise ValueError(f"eta must be >= 2, got {eta}")
+        self.eta = int(eta)
+
+    def keep(self, rung: int, ranked: Ranked) -> List[str]:
+        n_keep = max(1, math.ceil(len(ranked) / self.eta))
+        return [t for t, _ in ranked[:n_keep]]
+
+
+class MedianStoppingPruner(Pruner):
+    """Median stopping: prune every trial scoring strictly below the
+    rung's median. Gentler than ASHA when the field is tight — an
+    all-tie rung prunes nobody — and converges when a clear tail
+    exists."""
+
+    name = "median"
+
+    def keep(self, rung: int, ranked: Ranked) -> List[str]:
+        if not ranked:
+            return []
+        med = statistics.median(s for _, s in ranked)
+        kept = [t for t, s in ranked if s >= med]
+        return kept or [ranked[0][0]]
+
+
+PRUNERS = {p.name: p for p in (AshaPruner, MedianStoppingPruner)}

@@ -1,0 +1,240 @@
+"""TrialScheduler: trial <-> group assignment, rungs, prunes, re-grants.
+
+One scheduler drives one search run. It owns
+
+  * the trial table (one plan group per trial) and each trial's status;
+  * per-trial telemetry views: a :class:`~repro.core.control.telemetry.
+    SeriesView` tailing the run's TelemetryBus publish stream;
+  * rung accounting: rung j spans ``rung_rounds * rung_growth**j``
+    coordinator rounds; at the boundary every running trial is scored
+    over the rung window, ranked with a deterministic seeded tie-break,
+    and the pruner picks the survivors;
+  * application through the existing elastic path: a pruned trial goes
+    to b_g = 0 (reason "pruned" — distinct from liveness's "failure",
+    so a fault and a prune can never be confused) and its freed batch
+    capacity is immediately re-granted to survivors best-first (reason
+    "regrant"), each re-grant landing on the worker within k+1 rounds
+    by the same propagation guarantee as any Retune.
+
+``poll(step)`` is the round hook both execution paths call after their
+control round — ``ClusterSim(round_hook=...)`` and
+``EventLoop(round_hook=...)`` — and it is a pure function of the seed
+and the report stream, which is why the prune/promote trace is
+bit-identical between them (DESIGN.md §17).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.control import ControlPlane, RetuneEvent, SeriesView
+from repro.search.pruner import AshaPruner, Pruner
+from repro.search.space import TrialConfig, convergence_factor
+
+
+@dataclasses.dataclass
+class Trial:
+    """One trial's live state. status: "running" | "pruned" | "lost".
+
+    "lost" is the fault-vs-prune disambiguation: liveness masked the
+    trial's group out (reason "failure") — the trial is NOT pruned, it
+    is simply missing; it sits out rung ranking and resumes if its
+    group rejoins (reason "recover")."""
+
+    config: TrialConfig
+    status: str = "running"
+    rung: int = 0
+    scores: List[float] = dataclasses.field(default_factory=list)
+    pruned_at: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchEvent:
+    """One search-trace entry. kind: "prune" | "promote" | "lost" |
+    "resumed" | "winner". The tuple form of these — identical between
+    sim and runtime — is the search-parity oracle."""
+
+    step: int
+    kind: str
+    trial: str
+    rung: int
+    score: Optional[float] = None
+
+    def as_tuple(self):
+        return (self.step, self.kind, self.trial, self.rung, self.score)
+
+
+class TrialScheduler:
+    def __init__(self, configs: Sequence[TrialConfig],
+                 pruner: Optional[Pruner] = None,
+                 rung_rounds: int = 6,
+                 rung_growth: int = 1,
+                 seed: int = 0,
+                 regrant: bool = True) -> None:
+        if rung_rounds < 1:
+            raise ValueError(f"rung_rounds must be >= 1, got {rung_rounds}")
+        if rung_growth < 1:
+            raise ValueError(f"rung_growth must be >= 1, got {rung_growth}")
+        self.pruner = pruner if pruner is not None else AshaPruner()
+        self.order = [c.trial for c in configs]
+        self.trials: Dict[str, Trial] = {c.trial: Trial(c) for c in configs}
+        self.rung_rounds = int(rung_rounds)
+        self.rung_growth = int(rung_growth)
+        self.seed = int(seed)
+        self.regrant = bool(regrant)
+        self.rung = 0
+        self.events: List[SearchEvent] = []
+        # the live retirement set ClusterSim consumes directly; the
+        # EventLoop instead retires workers off the "pruned" events
+        self.retired: set = set()
+        self.cp: Optional[ControlPlane] = None
+        self.view: Optional[SeriesView] = None
+        self._rung_start = 0
+        self._rung_end = self.rung_rounds
+        self._seen_cp_events = 0
+        self._winner: Optional[str] = None
+
+    # ------------------------------------------------------------------
+    def attach(self, control_plane: ControlPlane) -> "TrialScheduler":
+        """Bind to the run's control plane: decisions apply through it,
+        telemetry arrives via a bus subscription."""
+        self.cp = control_plane
+        self.view = SeriesView(bus=control_plane.bus)
+        return self
+
+    @property
+    def winner(self) -> Optional[str]:
+        return self._winner
+
+    def running(self) -> List[str]:
+        return [t for t in self.order if self.trials[t].status == "running"]
+
+    def statuses(self) -> Dict[str, str]:
+        return {t: self.trials[t].status for t in self.order}
+
+    def event_tuples(self) -> List:
+        return [e.as_tuple() for e in self.events]
+
+    def score(self, trial: str, lo: int, hi: int) -> Optional[float]:
+        """Rung score: mean observed speed over steps [lo, hi) weighted
+        by the trial's lr quality. None = no telemetry in the window."""
+        mean = self.view.window_mean(trial, lo, hi)
+        if mean is None:
+            return None
+        return mean * convergence_factor(self.trials[trial].config.lr)
+
+    # ------------------------------------------------------------------
+    def poll(self, step: int) -> List[RetuneEvent]:
+        """The round hook: fault bookkeeping every round, rung decision
+        at the boundary. Returns the plan-change events it applied (the
+        EventLoop broadcasts/retires off them)."""
+        if self.cp is None:
+            raise RuntimeError("attach(control_plane) before poll()")
+        self._note_faults(step)
+        if self._winner is not None or step + 1 < self._rung_end:
+            return []
+        running = self.running()
+        if len(running) <= 1:
+            self._crown(step, running)
+            self._advance(step)
+            return []
+        scored = []
+        for t in running:
+            s = self.score(t, self._rung_start, step + 1)
+            if s is None:
+                # no evidence this rung (e.g. resumed moments ago):
+                # sit the rung out rather than being pruned on silence
+                continue
+            scored.append((t, s))
+        scored.sort(key=lambda ts: (-ts[1], self._tiebreak(self.rung, ts[0]),
+                                    ts[0]))
+        applied: List[RetuneEvent] = []
+        if len(scored) > 1:
+            keep = set(self.pruner.keep(self.rung, scored))
+            pre_bs = self.cp.plan.batch_sizes()
+            scores = dict(scored)
+            pruned = [t for t, _ in scored if t not in keep]
+            survivors = [t for t, _ in scored if t in keep]
+            freed = 0
+            for t in pruned:
+                tr = self.trials[t]
+                tr.status = "pruned"
+                tr.pruned_at = step
+                self.retired.add(t)
+                freed += pre_bs[t]
+                self.events.append(SearchEvent(step, "prune", t, self.rung,
+                                               scores[t]))
+                applied.append(self.cp.apply_decision(step, t, 0, "pruned"))
+            for t in survivors:
+                tr = self.trials[t]
+                tr.rung += 1
+                tr.scores.append(scores[t])
+                self.events.append(SearchEvent(step, "promote", t,
+                                               self.rung + 1, scores[t]))
+            if pruned and self.regrant:
+                applied.extend(self._regrant(step, survivors, freed))
+        self._crown(step, self.running())
+        self._advance(step)
+        return applied
+
+    # ------------------------------------------------------------------
+    def _advance(self, step: int) -> None:
+        self.rung += 1
+        self._rung_start = step + 1
+        self._rung_end = step + 1 + \
+            self.rung_rounds * (self.rung_growth ** self.rung)
+
+    def _crown(self, step: int, running: List[str]) -> None:
+        if self._winner is None and len(running) == 1:
+            self._winner = running[0]
+            self.events.append(SearchEvent(step, "winner", self._winner,
+                                           self.rung))
+
+    def _tiebreak(self, rung: int, trial: str) -> float:
+        """Deterministic seeded tie-break: a pure function of
+        (seed, rung, trial), so tied scores rank identically on every
+        replay of the same seed and differently across seeds."""
+        return random.Random(
+            f"search-tiebreak:{self.seed}:{rung}:{trial}").random()
+
+    def _note_faults(self, step: int) -> None:
+        """Fault-vs-prune disambiguation: fold the control plane's OWN
+        events (liveness failures/recoveries) into trial status. A
+        "failure" on a running trial marks it lost — never pruned; a
+        "recover" puts a lost trial back in the race."""
+        events = self.cp.events
+        for ev in events[self._seen_cp_events:]:
+            tr = self.trials.get(ev.group)
+            if tr is None:
+                continue
+            if ev.reason == "failure" and tr.status == "running":
+                tr.status = "lost"
+                self.events.append(SearchEvent(ev.step, "lost", ev.group,
+                                               self.rung))
+            elif ev.reason == "recover" and tr.status == "lost":
+                tr.status = "running"
+                self.events.append(SearchEvent(ev.step, "resumed", ev.group,
+                                               self.rung))
+        self._seen_cp_events = len(events)
+
+    def _regrant(self, step: int, survivors: List[str],
+                 freed: int) -> List[RetuneEvent]:
+        """Re-grant the pruned trials' freed batch capacity to
+        survivors, best-ranked first, each clipped at its group's fixed
+        capacity (capacities — and compiled shapes — never change)."""
+        out: List[RetuneEvent] = []
+        plan = self.cp.plan
+        caps = {g.name: g.capacity for g in plan.groups}
+        bs = plan.batch_sizes()
+        remaining = int(freed)
+        for t in survivors:
+            if remaining <= 0:
+                break
+            take = min(caps[t] - bs[t], remaining)
+            if take <= 0:
+                continue
+            out.append(self.cp.apply_decision(step, t, bs[t] + take,
+                                              "regrant"))
+            remaining -= take
+        return out

@@ -1,0 +1,125 @@
+"""Seeded hyperparameter space + trial -> group plan mapping.
+
+A :class:`TrialConfig` is everything a trial is: a learning rate, a
+per-node batch size, and an architecture variant. The variant and the
+batch size determine the trial's *throughput* via the same calibrated
+saturating speed curves the simulator uses (``saturating_table``), so a
+trial raced as a worker group reports exactly the speeds the simulator
+models for it — the foundation of search-trace parity.
+
+``sample`` is deterministic in ``(n, seed)``: the whole search must be
+a pure function of the seed, so the space hashes the seed into its own
+``random.Random`` stream and never touches global entropy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import List, Sequence, Tuple
+
+from repro.core import allocator
+from repro.core.allocator import BatchPlan, GroupState
+from repro.core.simulator import XEON_MOBILENET, saturating_table
+from repro.core.speed_model import SpeedModel
+
+# Relative throughput of the arch variants on the paper's Xeon node
+# class: a wider MobileNet costs ~1.4x per image, ShuffleNet is lighter.
+# The variant scales the calibrated vmax; the knee stays at the same
+# batch size, so every trial group keeps the familiar curve shape.
+ARCH_SPEED_SCALE = {
+    "mobilenet": 1.0,
+    "mobilenet-wide": 0.72,
+    "shufflenet": 1.18,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialConfig:
+    """One trial: the hyperparameters a worker group races under."""
+
+    trial: str
+    lr: float
+    batch_size: int
+    arch: str
+
+
+class SearchSpace:
+    """The sampling domain: log-uniform lr, categorical batch / arch."""
+
+    def __init__(self, lr_lo: float = 1e-4, lr_hi: float = 1e-1,
+                 batch_choices: Sequence[int] = (60, 90, 120, 140, 160, 180),
+                 archs: Sequence[str] = tuple(ARCH_SPEED_SCALE)) -> None:
+        if lr_lo <= 0 or lr_hi <= lr_lo:
+            raise ValueError(f"need 0 < lr_lo < lr_hi, got "
+                             f"({lr_lo}, {lr_hi})")
+        self.lr_lo = float(lr_lo)
+        self.lr_hi = float(lr_hi)
+        self.batch_choices = tuple(int(b) for b in batch_choices)
+        self.archs = tuple(archs)
+        unknown = [a for a in self.archs if a not in ARCH_SPEED_SCALE]
+        if unknown:
+            raise ValueError(f"unknown arch variants {unknown}; known: "
+                             f"{sorted(ARCH_SPEED_SCALE)}")
+
+    def sample(self, n: int, seed: int = 0) -> List[TrialConfig]:
+        """n i.i.d. trial configs, deterministic in (n, seed). Trial
+        names are zero-padded so group ordering is stable everywhere."""
+        rng = random.Random(f"search-space:{seed}")
+        out = []
+        lo, hi = math.log10(self.lr_lo), math.log10(self.lr_hi)
+        for i in range(n):
+            out.append(TrialConfig(
+                trial=f"t{i:02d}",
+                lr=round(10.0 ** rng.uniform(lo, hi), 8),
+                batch_size=rng.choice(self.batch_choices),
+                arch=rng.choice(self.archs)))
+        return out
+
+
+def speed_model_for(config: TrialConfig) -> SpeedModel:
+    """The trial's benchmark curve: the paper's Xeon/MobileNetV2 table
+    with vmax scaled by the arch variant."""
+    scale = ARCH_SPEED_SCALE[config.arch]
+    return saturating_table(vmax=XEON_MOBILENET["vmax"] * scale,
+                            b_half=XEON_MOBILENET["b_half"],
+                            batch_sizes=XEON_MOBILENET["batch_sizes"])
+
+
+def convergence_factor(lr: float, lr_opt: float = 1e-2,
+                       width: float = 0.8) -> float:
+    """Deterministic lr-quality weight in (0, 1]: a log-parabola peaked
+    at ``lr_opt``. A trial's rung score is (mean observed img/s) x this
+    factor — throughput per unit wall time *discounted by how much each
+    sample is worth at that lr* — so the search optimizes the paper's
+    aggregate-throughput objective without pretending lr is free."""
+    d = math.log10(lr) - math.log10(lr_opt)
+    return math.exp(-(d * d) / (2.0 * width * width))
+
+
+def trial_plan(configs: Sequence[TrialConfig],
+               dataset_size: int = 200_000,
+               headroom: float = 2.0) -> BatchPlan:
+    """One plan group per trial, at the trial's OWN configured batch
+    size (not the allocator's step-time-matched split — trials are
+    independent races, not one synchronous model). ``headroom`` > 1
+    reserves capacity above the configured batch: capacities never
+    change after allocation, so this is exactly the room pruned-trial
+    re-grants can grow a survivor into."""
+    names = [c.trial for c in configs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate trial names in {names}")
+    gs = [GroupState(c.trial, 1, speed_model_for(c), batch_size=0,
+                     capacity=max(int(math.ceil(c.batch_size * headroom)),
+                                  c.batch_size))
+          for c in configs]
+    base = BatchPlan(gs, 0.0, 0, dataset_size, {})
+    # retune() clips to capacity, recomputes the step time over live
+    # groups and re-splits the dataset (Eq. 1) — the one plan-builder
+    # every other path already trusts
+    return allocator.retune(base, {c.trial: c.batch_size for c in configs})
+
+
+def trial_table(configs: Sequence[TrialConfig]) -> List[Tuple]:
+    """(trial, lr, batch, arch) rows for CLIs and benches."""
+    return [(c.trial, c.lr, c.batch_size, c.arch) for c in configs]

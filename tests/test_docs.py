@@ -1,0 +1,112 @@
+"""doccheck + the repo's actual docs tree (ISSUE 10 satellites).
+
+Two layers: unit tests of the markdown machinery (slugs, fences,
+links) against crafted files, and the live gate — every committed doc
+must pass the link/anchor check right here in tier-1, not only in the
+CI docs job (which additionally executes the runnable blocks).
+"""
+from __future__ import annotations
+
+import os
+
+import pytest
+
+from repro.analysis.doccheck import (check_links, check_paths,
+                                     extract_blocks, extract_links,
+                                     heading_slugs, run_block, slugify,
+                                     syntax_check)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = [os.path.join(REPO, p) for p in
+        ("README.md", "DESIGN.md", "EXPERIMENTS.md",
+         "docs/quickstart.md", "docs/architecture.md", "docs/search.md")]
+
+
+class TestSlugs:
+    @pytest.mark.parametrize("heading,slug", [
+        ("§1 System overview", "1-system-overview"),
+        ("§3 Allocation (paper §III-A, Eq. 1)",
+         "3-allocation-paper-iii-a-eq-1"),
+        ("Elastic scaling & fault tolerance",
+         "elastic-scaling--fault-tolerance"),
+        ("The `code` **bold** heading", "the-code-bold-heading"),
+    ])
+    def test_github_style(self, heading, slug):
+        assert slugify(heading) == slug
+
+    def test_duplicate_headings_suffix(self):
+        text = "# Setup\n\n## Setup\n\ntext\n## Setup\n"
+        assert heading_slugs(text) == ["setup", "setup-1", "setup-2"]
+
+    def test_headings_inside_fences_ignored(self):
+        text = "# Real\n```bash\n# not a heading\n```\n## Also real\n"
+        assert heading_slugs(text) == ["real", "also-real"]
+
+
+class TestBlocks:
+    def test_extract_lang_flags_and_body(self):
+        text = ("pre\n```bash\necho hi\n```\n"
+                "```python no-run\nx = 1\n```\n"
+                "```text\nplain\n```\n")
+        blocks = extract_blocks("f.md", text)
+        assert [(b.lang, b.flags) for b in blocks] == \
+            [("bash", ()), ("python", ("no-run",)), ("text", ())]
+        assert blocks[0].runnable and blocks[0].text == "echo hi"
+        assert not blocks[1].runnable      # no-run marker
+        assert not blocks[2].runnable      # not a runnable language
+
+    def test_syntax_check_catches_bad_python(self):
+        blocks = extract_blocks(
+            "f.md", "```python no-run\ndef broken(:\n```\n")
+        assert syntax_check(blocks[0]) is not None
+        ok = extract_blocks("f.md", "```python no-run\nx = 1\n```\n")
+        assert syntax_check(ok[0]) is None
+
+    def test_run_block_reports_failure(self, tmp_path):
+        bad = extract_blocks("f.md", "```bash\nexit 3\n```\n")[0]
+        p = run_block(bad, str(tmp_path), timeout=30.0)
+        assert p is not None and p.kind == "block-failed"
+        good = extract_blocks("f.md", "```bash\ntrue\n```\n")[0]
+        assert run_block(good, str(tmp_path), timeout=30.0) is None
+
+
+class TestLinks:
+    def test_links_in_fences_and_external_skipped(self):
+        text = ("see [a](other.md) and [b](https://x.test/y)\n"
+                "```bash\n# [c](never.md)\n```\n")
+        assert [t for _, t in extract_links(text)] == \
+            ["other.md", "https://x.test/y"]
+
+    def test_dead_file_and_anchor_detected(self, tmp_path):
+        target = tmp_path / "target.md"
+        target.write_text("# Real heading\n")
+        doc = tmp_path / "doc.md"
+        doc.write_text("[ok](target.md#real-heading)\n"
+                       "[gone](missing.md)\n"
+                       "[bad](target.md#no-such)\n"
+                       "[self](#also-missing)\n")
+        problems = check_links(str(doc), doc.read_text(),
+                               str(tmp_path), {})
+        kinds = sorted(p.kind for p in problems)
+        assert kinds == ["dead-anchor", "dead-anchor", "dead-link"]
+
+
+class TestRepoDocs:
+    def test_docs_exist(self):
+        for path in DOCS:
+            assert os.path.isfile(path), f"missing doc {path}"
+
+    def test_links_and_anchors_resolve(self):
+        # the live gate: CI's docs job additionally --run's the blocks
+        problems = check_paths(DOCS, REPO, run=False)
+        assert problems == [], [str(p) for p in problems]
+
+    def test_quickstart_has_runnable_blocks(self):
+        path = os.path.join(REPO, "docs", "quickstart.md")
+        with open(path, encoding="utf-8") as fh:
+            blocks = extract_blocks(path, fh.read())
+        runnable = [b for b in blocks if b.runnable]
+        norun = [b for b in blocks if b.lang in ("bash", "sh")
+                 and not b.runnable]
+        assert len(runnable) >= 3          # the CI docs job has teeth
+        assert norun                       # multi-host recipes excluded

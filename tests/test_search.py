@@ -1,0 +1,332 @@
+"""Trial-level hyperparameter search (DESIGN.md §17).
+
+Acceptance anchors (ISSUE 10):
+  * a seeded ASHA race over >= 8 trials produces the IDENTICAL
+    prune/promotion sequence through ClusterSim and the live runtime,
+    at staleness 0 and 2 — the search layer extends the repo's
+    sim-vs-runtime parity oracle rather than forking it;
+  * pruned trials' batch capacity is re-granted to survivors within
+    k+1 rounds (the same propagation guarantee as any Retune);
+  * the whole search is a pure function of the seed: same seed ->
+    same trace (including tie-breaks), different seed -> different;
+  * a trial that goes SILENT is lost (liveness "failure"), never
+    pruned — fault and prune are disambiguated by distinct reasons;
+  * pruning during staleness-k run-ahead discards the pruned group's
+    already-buffered future reports (StepBuckets.discard_group).
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.control import ControlPlane, SeriesView, StepReport
+from repro.core.simulator import Dropout
+from repro.search import (AshaPruner, MedianStoppingPruner, SearchSpace,
+                          TrialConfig, TrialScheduler, build_scheduler,
+                          convergence_factor, run_search_runtime,
+                          run_search_sim, search_parity, trial_plan)
+
+
+# ---------------------------------------------------------------------------
+# space + plan
+# ---------------------------------------------------------------------------
+
+
+class TestSearchSpace:
+    def test_sample_deterministic_in_seed(self):
+        space = SearchSpace()
+        assert space.sample(8, seed=3) == space.sample(8, seed=3)
+        assert space.sample(8, seed=3) != space.sample(8, seed=4)
+
+    def test_sample_within_bounds(self):
+        space = SearchSpace()
+        for c in space.sample(64, seed=0):
+            assert space.lr_lo <= c.lr <= space.lr_hi
+            assert c.batch_size in space.batch_choices
+            assert c.arch in space.archs
+
+    def test_prefix_stability(self):
+        # trial i's config does not depend on how many trials follow it
+        space = SearchSpace()
+        assert space.sample(12, seed=7)[:8] == space.sample(8, seed=7)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            SearchSpace(lr_lo=0.0)
+        with pytest.raises(ValueError):
+            SearchSpace(lr_lo=1e-2, lr_hi=1e-3)
+        with pytest.raises(ValueError):
+            SearchSpace(archs=("resnet-9000",))
+
+    def test_convergence_factor_peaks_at_opt(self):
+        assert convergence_factor(1e-2) == pytest.approx(1.0)
+        assert convergence_factor(1e-3) < 1.0
+        assert convergence_factor(1e-3) == convergence_factor(1e-1)
+
+    def test_trial_plan_batches_and_headroom(self):
+        configs = SearchSpace().sample(6, seed=0)
+        plan = trial_plan(configs, headroom=2.0)
+        bs = plan.batch_sizes()
+        for c in configs:
+            assert bs[c.trial] == c.batch_size
+            g = next(g for g in plan.groups if g.name == c.trial)
+            # capacity is the re-grant ceiling: headroom x configured
+            assert g.capacity == 2 * c.batch_size
+
+    def test_trial_plan_rejects_duplicates(self):
+        c = TrialConfig("t00", 1e-2, 120, "mobilenet")
+        with pytest.raises(ValueError):
+            trial_plan([c, c])
+
+
+# ---------------------------------------------------------------------------
+# pruners
+# ---------------------------------------------------------------------------
+
+
+class TestPruners:
+    def test_asha_keeps_top_1_over_eta(self):
+        ranked = [(f"t{i}", 10.0 - i) for i in range(8)]
+        assert AshaPruner(eta=2).keep(0, ranked) == ["t0", "t1", "t2", "t3"]
+        assert AshaPruner(eta=4).keep(0, ranked) == ["t0", "t1"]
+        # ceil: 5 trials at eta=2 keep 3
+        assert AshaPruner(eta=2).keep(0, ranked[:5]) == ["t0", "t1", "t2"]
+        # never empty
+        assert AshaPruner(eta=2).keep(0, ranked[:1]) == ["t0"]
+
+    def test_asha_rejects_eta_below_2(self):
+        with pytest.raises(ValueError):
+            AshaPruner(eta=1)
+
+    def test_median_prunes_strictly_below_median(self):
+        ranked = [("a", 30.0), ("b", 20.0), ("c", 10.0)]
+        assert MedianStoppingPruner().keep(0, ranked) == ["a", "b"]
+
+    def test_median_all_tie_keeps_everyone(self):
+        ranked = [("a", 5.0), ("b", 5.0), ("c", 5.0)]
+        assert MedianStoppingPruner().keep(0, ranked) == ["a", "b", "c"]
+
+
+# ---------------------------------------------------------------------------
+# scheduler mechanics (driven through the sim, no runtime)
+# ---------------------------------------------------------------------------
+
+
+def _identical_field(n=6, batch=120):
+    """n trials with IDENTICAL hyperparameters: every rung score ties,
+    so survival is decided purely by the seeded tie-break."""
+    return [TrialConfig(f"t{i:02d}", 1e-2, batch, "mobilenet")
+            for i in range(n)]
+
+
+class TestSchedulerDeterminism:
+    def test_all_tie_rung_same_seed_identical(self):
+        cfgs = _identical_field()
+        a = run_search_sim(cfgs, steps=8, seed=11)
+        b = run_search_sim(cfgs, steps=8, seed=11)
+        assert a.events == b.events and a.retunes == b.retunes
+
+    def test_all_tie_rung_seed_changes_survivors(self):
+        cfgs = _identical_field()
+        survivors = set()
+        for seed in range(6):
+            res = run_search_sim(cfgs, steps=8, seed=seed)
+            pruned = tuple(t for _, k, t, *_ in res.events if k == "prune")
+            survivors.add(pruned)
+        # with all scores tied the seeded tie-break is the only ranking
+        # input; across 6 seeds the pruned sets must not all coincide
+        assert len(survivors) > 1
+
+    def test_full_search_pure_function_of_seed(self):
+        cfgs = SearchSpace().sample(8, seed=5)
+        a = run_search_sim(cfgs, steps=30, seed=5)
+        b = run_search_sim(cfgs, steps=30, seed=5)
+        assert (a.events, a.retunes, a.winner) == \
+            (b.events, b.retunes, b.winner)
+
+    def test_scheduler_validation(self):
+        cfgs = _identical_field(2)
+        with pytest.raises(ValueError):
+            TrialScheduler(cfgs, rung_rounds=0)
+        with pytest.raises(ValueError):
+            build_scheduler(cfgs, pruner="no-such-pruner")
+        with pytest.raises(RuntimeError):
+            TrialScheduler(cfgs).poll(0)     # not attached
+
+    def test_rung_growth_stretches_later_rungs(self):
+        cfgs = SearchSpace().sample(8, seed=0)
+        res = run_search_sim(cfgs, steps=50, rung_rounds=4, rung_growth=2)
+        rung_steps = sorted({s for s, k, *_ in res.events
+                             if k in ("prune", "promote")})
+        # rung 0 ends after 4 rounds, rung 1 after 8 more, rung 2: 16
+        assert rung_steps == [3, 11, 27]
+
+
+class TestRegrant:
+    def test_freed_capacity_flows_to_survivors(self):
+        cfgs = SearchSpace().sample(8, seed=0)
+        plan = trial_plan(cfgs)
+        caps = {g.name: g.capacity for g in plan.groups}
+        res = run_search_sim(cfgs, steps=8, seed=0)
+        pre = {c.trial: c.batch_size for c in cfgs}
+        rung0 = [e for e in res.retunes if e[0] == min(r[0]
+                                                      for r in res.retunes)]
+        freed = sum(old for _, t, old, new, r in rung0 if r == "pruned")
+        granted = sum(new - old for _, t, old, new, r in rung0
+                      if r == "regrant")
+        assert freed > 0
+        # conservation: grants never exceed what pruning freed
+        assert 0 < granted <= freed
+        for _, t, old, new, r in rung0:
+            if r == "regrant":
+                assert new <= caps[t]          # capacity clamp
+                assert old == pre[t]           # grew from configured batch
+
+    def test_regrant_off_leaves_survivors_unchanged(self):
+        cfgs = SearchSpace().sample(8, seed=0)
+        res = run_search_sim(cfgs, steps=8, seed=0, regrant=False)
+        assert all(r in ("pruned",) for _, _, _, _, r in res.retunes)
+
+
+# ---------------------------------------------------------------------------
+# sim vs runtime parity — the tentpole acceptance gate
+# ---------------------------------------------------------------------------
+
+
+class TestSearchParity:
+    @pytest.mark.parametrize("staleness", [0, 2])
+    def test_eight_trials_local(self, staleness):
+        p = search_parity(n_trials=8, steps=30, manager="local",
+                          staleness=staleness, seed=0)
+        assert p["match"], (p["sim"].events, p["runtime"].events)
+        assert p["sim"].winner is not None
+        assert p["sim"].n_pruned == 7        # 8 -> 4 -> 2 -> 1
+
+    def test_regrants_land_within_k_plus_1(self):
+        for k in (0, 2):
+            res = run_search_runtime(SearchSpace().sample(8, seed=0),
+                                     steps=30, manager="local", staleness=k)
+            lags = res.runtime.retune_lags
+            assert lags and all(lag == k + 1 for lag in lags), (k, lags)
+            assert res.runtime.stale_reports == 0
+
+    def test_median_pruner_parity(self):
+        p = search_parity(n_trials=8, steps=30, manager="local",
+                          pruner="median", seed=2)
+        assert p["match"]
+        assert p["sim"].winner is not None
+
+    def test_retired_trial_publishes_nothing_after_grace(self):
+        # step-exactness of retirement: with run-ahead k the pruned
+        # group may deliver at most its k in-flight reports; nothing
+        # beyond prune-step + k may reach the bus from it
+        k = 2
+        cfgs = SearchSpace().sample(8, seed=0)
+        plan = trial_plan(cfgs)
+        cp = ControlPlane(plan, policies=[], liveness_timeout=3)
+        view = SeriesView(bus=cp.bus)
+        sched = build_scheduler(cfgs, seed=0).attach(cp)
+        from repro.runtime import EventLoop, MANAGERS
+        from repro.runtime.eventloop import specs_from_plan
+        mgr = MANAGERS["local"]()
+        loop = EventLoop(cp, mgr, round_timeout=1.0, staleness=k,
+                         round_hook=sched.poll)
+        try:
+            mgr.start(specs_from_plan(plan))
+            loop.run(30)
+        finally:
+            loop.shutdown()
+        for t, trial in sched.trials.items():
+            if trial.status == "pruned":
+                assert view.last_step(t) <= trial.pruned_at + k, \
+                    (t, view.last_step(t), trial.pruned_at)
+
+
+@pytest.mark.slow
+class TestSearchParitySocket:
+    def test_eight_trials_over_tcp(self):
+        p = search_parity(n_trials=8, steps=30, manager="socket",
+                          staleness=2, seed=0, round_timeout=5.0)
+        assert p["match"], (p["sim"].events, p["runtime"].events)
+        assert p["sim"].winner is not None
+
+
+# ---------------------------------------------------------------------------
+# fault vs prune disambiguation
+# ---------------------------------------------------------------------------
+
+
+class TestFaultVsPrune:
+    def test_silent_trial_is_lost_not_pruned(self):
+        cfgs = SearchSpace().sample(8, seed=0)
+        victim = cfgs[1].trial
+        res = run_search_sim(cfgs, steps=30, seed=0,
+                             dropouts=[Dropout(victim, 2, 9)])
+        kinds = [(k, t) for _, k, t, *_ in res.events]
+        assert ("lost", victim) in kinds
+        assert ("resumed", victim) in kinds
+        lost_at = next(s for s, k, t, *_ in res.events
+                       if k == "lost" and t == victim)
+        # not pruned while silent — any prune of the victim is on merit,
+        # after it resumed
+        for s, k, t, *_ in res.events:
+            if k == "prune" and t == victim:
+                resumed_at = next(s2 for s2, k2, t2, *_ in res.events
+                                  if k2 == "resumed" and t2 == victim)
+                assert s > resumed_at
+        assert lost_at < 9
+
+    def test_fault_path_parity_sim_vs_runtime(self):
+        cfgs = SearchSpace().sample(8, seed=0)
+        drops = [Dropout(cfgs[1].trial, 2, 9)]
+        sim = run_search_sim(cfgs, steps=30, seed=0, dropouts=drops)
+        rt = run_search_runtime(cfgs, steps=30, seed=0, manager="local",
+                                dropouts=drops)
+        assert sim.events == rt.events
+        assert sim.winner == rt.winner
+
+    def test_lost_trial_sits_out_rung_without_being_pruned(self):
+        # a trial silent across an entire rung boundary must still be in
+        # the race (status lost/running) at that boundary — pruned only
+        # later, on scores it actually produced
+        cfgs = SearchSpace().sample(8, seed=0)
+        victim = cfgs[0].trial
+        res = run_search_sim(cfgs, steps=30, seed=0,
+                             dropouts=[Dropout(victim, 1, 8)])
+        first_rung = min(s for s, k, *_ in res.events if k == "prune")
+        pruned_then = [t for s, k, t, *_ in res.events
+                       if k == "prune" and s == first_rung]
+        assert victim not in pruned_then
+
+
+# ---------------------------------------------------------------------------
+# retirement under run-ahead (the StepBuckets.discard_group contract)
+# ---------------------------------------------------------------------------
+
+
+class TestRetireUnderRunAhead:
+    def test_retire_discards_buffered_future_reports(self):
+        from repro.runtime import EventLoop, MANAGERS
+        from repro.runtime.eventloop import specs_from_plan
+        cfgs = SearchSpace().sample(3, seed=0)
+        plan = trial_plan(cfgs)
+        cp = ControlPlane(plan, policies=[])
+        mgr = MANAGERS["local"]()
+        loop = EventLoop(cp, mgr, round_timeout=1.0, staleness=2)
+        victim = cfgs[0].trial
+        try:
+            mgr.start(specs_from_plan(plan))
+            # a run-ahead worker's reports for steps 5..7 already
+            # bucketed when the prune decision lands at step 4
+            for s in (5, 6, 7):
+                loop._buckets.add(s, victim, StepReport(s, victim, 20.0))
+            purged = loop.retire(4, victim)
+            assert purged == 3
+            assert victim in loop._retired
+            for s in (5, 6, 7):
+                assert victim not in loop._buckets.peek(s)
+            # the worker is gone for good: channel closed, marked dead
+            assert not mgr.workers[victim].alive
+            # idempotent: nothing left to purge
+            assert loop.retire(4, victim) == 0
+        finally:
+            loop.shutdown()
